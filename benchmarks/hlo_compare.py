@@ -1,0 +1,77 @@
+"""Measured (compiled-HLO) per-step collective bytes: hecaton vs megatron on a
+fake 8-device mesh — the empirical companion to comm_model.py's theory.
+Runs in a subprocess (needs its own XLA device-count flag)."""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.models import lm
+from repro.optim import adamw
+from repro.parallel import specs as SP
+from repro.roofline.hlo import analyze
+from repro.train import step as TS
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+cfg = ModelConfig(name="cmp", family="dense", num_layers=4, d_model=512,
+                  num_heads=16, num_kv_heads=8, d_ff=2048, vocab_size=512,
+                  mlp_kind="swiglu")
+rc = RunConfig("t", "train", 256, 8, lr=1e-3)
+out = {}
+for strat, mesh in (("hecaton", Mesh(np.array(jax.devices()).reshape(2, 4, 4),
+                                     ("data", "mx", "my"))),
+                    ("megatron", Mesh(np.array(jax.devices()).reshape(2, 16),
+                                      ("data", "model")))):
+    pcfg = ParallelConfig(strategy=strat, data=2, model=16, mx=4, my=4,
+                          microbatches=1, zero1=False)
+    params = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    pspecs = SP.param_specs(params, mesh, pcfg)
+    pshard = SP.sharding_tree(pspecs, mesh)
+    opt = jax.eval_shape(adamw.init, params)
+    oshard = SP.sharding_tree(SP.opt_state_specs(pspecs, params, mesh, pcfg),
+                              mesh)
+    seq_ax = "mx" if strat == "hecaton" else None
+    bshard = {k: NamedSharding(mesh, P("data", seq_ax))
+              for k in ("tokens", "labels")}
+    bstruct = {k: jax.ShapeDtypeStruct((8, 256), jnp.int32)
+               for k in ("tokens", "labels")}
+    ts = TS.build_train_step(cfg, pcfg, rc, mesh)
+    c = jax.jit(ts, in_shardings=(pshard, oshard, bshard)).lower(
+        params, opt, bstruct).compile()
+    r = analyze(c.as_text())
+    out[strat] = {"coll_bytes": r.total_coll_bytes,
+                  "breakdown": dict(r.coll_bytes), "flops": r.flops}
+print("RESULT " + json.dumps(out))
+'''
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        return {"error": r.stderr[-500:]}
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][0]
+    return json.loads(line[len("RESULT "):])
+
+
+def main(emit):
+    out = run()
+    if "error" in out:
+        emit("hlo_compare", 0.0, "ERROR")
+        return out
+    h, m = out["hecaton"]["coll_bytes"], out["megatron"]["coll_bytes"]
+    emit("hlo_measured_bytes_hecaton", 0.0, f"{h/1e6:.1f}MB")
+    emit("hlo_measured_bytes_megatron", 0.0, f"{m/1e6:.1f}MB")
+    emit("hlo_measured_ratio_meg_over_hec", 0.0, f"{m/h:.2f}x")
+    return out

@@ -1,0 +1,61 @@
+"""Paper Fig. 11 — impact of die layout (16 dies as (length,width) grids).
+
+Generalizes the Table III hecaton coefficients to rectangular (mx, my) grids:
+  fwd FFN   : gamma/N * [2(mx-1) + 8(my-1)]
+  fwd Atten : gamma/N * [2(mx-1) + 4(my-1)]
+  bwd adds the re-gather terms analogously.
+plus an MXU/PE-utilization factor for thin local tiles (the paper's observed
+square-favoring effect: extreme aspect ratios starve the PE array).
+"""
+from repro.core import theory as T
+
+LAYOUTS = [(1, 16), (2, 8), (4, 4), (8, 2), (16, 1)]
+DIE_FLOPS = 5e12
+
+
+def rect_comm(mx, my, p):
+    """Per-layer (fwd+bwd attn+ffn) transmission seconds on an (mx,my) grid."""
+    N = mx * my
+    g = p.gamma
+    fwd = (2 * (mx - 1) + 8 * (my - 1)) + (2 * (mx - 1) + 4 * (my - 1))
+    bwd = (3 * (mx - 1) + 12 * (my - 1)) + (3 * (mx - 1) + 5 * (my - 1))
+    return (fwd + bwd) * g / N
+
+
+def util(mx, my, p):
+    """PE-array utilization of the local tile [bs/mx x h/my] @ [h/my x 4h/mx]:
+    dims below the 128-wide systolic array waste lanes."""
+    rows = p.b * p.s / mx
+    cols = p.h / my
+    eff = min(1.0, rows / 128) * min(1.0, cols / 128)
+    return max(eff, 1e-3)
+
+
+def run():
+    rows = []
+    p = T.CommParams(N=16, beta=16e9, b=8, s=512, h=2048)
+    flops = T.layer_flops(p)
+    for mx, my in LAYOUTS:
+        comm = rect_comm(mx, my, p)
+        compute = flops / (DIE_FLOPS * 16) / util(mx, my, p)
+        rows.append({"layout": f"{mx}x{my}", "comm_s": comm,
+                     "compute_s": compute, "total": comm + compute})
+    base = next(r for r in rows if r["layout"] == "4x4")["total"]
+    for r in rows:
+        r["normalized"] = r["total"] / base
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for r in rows:
+        emit(f"fig11_layout_{r['layout']}", r["total"] * 1e6,
+             f"norm={r['normalized']:.3f}")
+    best = min(rows, key=lambda r: r["total"])
+    emit("fig11_best_layout", 0.0, best["layout"])
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,32 @@
+"""Paper Table IV — proportion of link latency in system latency (alpha=10ns)."""
+from repro.core import theory as T
+
+WORKLOADS = [("llama-1.1B", 2048, 16, 22), ("llama-7B", 4096, 64, 32),
+             ("llama-70B", 8192, 256, 80), ("llama-405B", 16384, 1024, 126)]
+DIE_FLOPS = 5e12
+
+
+def run():
+    rows = []
+    for pkg, beta in (("standard", 12e9), ("advanced", 48e9)):
+        for name, h, N, layers in WORKLOADS:
+            p = T.CommParams(N=N, alpha=10e-9, beta=beta, b=8, s=2048, h=h)
+            sp = T.SystemParams(comm=p, flops_per_device=DIE_FLOPS,
+                                dram_channels=max(8, int(N ** 0.5) * 4))
+            t = T.layer_time("hecaton", sp)
+            frac = t["nop_link"] / t["total"]
+            rows.append({"package": pkg, "workload": name,
+                         "link_latency_pct": 100 * frac})
+    return rows
+
+
+def main(emit):
+    for r in run():
+        emit(f"tab4_{r['package']}_{r['workload']}", 0.0,
+             f"{r['link_latency_pct']:.3f}%")
+    return run()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks (wall time of the jnp reference path on this host;
+the Pallas path is TPU-targeted and validated in interpret mode by tests)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as R
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 8)
+    x = jax.random.normal(ks[0], (512, 512), jnp.float32)
+    w = jax.random.normal(ks[1], (512, 512), jnp.float32)
+    mm = jax.jit(lambda a, b: R.matmul_ref(a, b, act="gelu"))
+    rows.append(("micro_matmul_512_gelu", _time(mm, x, w),
+                 f"{2*512**3/1e9:.2f}GF"))
+    q = jax.random.normal(ks[2], (1, 8, 512, 64), jnp.float32)
+    k = jax.random.normal(ks[3], (1, 4, 512, 64), jnp.float32)
+    v = jax.random.normal(ks[4], (1, 4, 512, 64), jnp.float32)
+    att = jax.jit(lambda a, b, c: R.attention_ref(a, b, c, causal=True))
+    rows.append(("micro_attention_512", _time(att, q, k, v), "gqa2"))
+    xs = jax.random.normal(ks[5], (1, 512, 8, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[6], (1, 512, 8), jnp.float32))
+    A = -jnp.exp(jnp.zeros((8,)))
+    B = jax.random.normal(ks[7], (1, 512, 1, 64), jnp.float32)
+    from repro.models.ssm import ssd_chunked
+    ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    rows.append(("micro_ssd_512", _time(ssd, xs, dt, A, B, B), "chunk128"))
+    return rows
+
+
+def main(emit):
+    for name, us, d in run():
+        emit(name, us, d)
+    return run()

@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  comm_model    — Fig. 8 / Table III latency+energy comparison (4 methods)
+  scaling       — Fig. 9 weak scaling
+  dram          — Fig. 10 DRAM-bandwidth sweep
+  layout        — Fig. 11 die-layout study
+  link_latency  — Table IV link-latency proportion
+  micro         — kernel reference micro-benchmarks (host wall time)
+  hlo_compare   — measured collective bytes hecaton vs megatron (compiled HLO)
+"""
+import sys
+
+
+def main() -> None:
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append(f"{name},{us:.2f},{derived}")
+
+    from benchmarks import (comm_model, dram, hlo_compare, layout,
+                            link_latency, micro, scaling)
+    for mod in (comm_model, scaling, dram, layout, link_latency, micro,
+                hlo_compare):
+        try:
+            mod.main(emit)
+        except Exception as e:  # keep the harness robust; surface the failure
+            rows.append(f"{mod.__name__},0.00,ERROR:{type(e).__name__}:{e}")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 9 — weak scaling study.
+
+Scales (h, N) along the paper's ladder and reports normalized per-layer
+latency for each method, in both package regimes.  Verifies the §V-B theory:
+Hecaton stays ~flat; 1D-TP methods grow.
+"""
+from repro.core import theory as T
+
+DIE_FLOPS = 5e12
+
+
+def run():
+    rows = []
+    for pkg, beta in (("standard", 12e9), ("advanced", 48e9)):
+        base = T.CommParams(N=16, beta=beta, b=8, s=2048, h=2048)
+        for m in T.METHODS:
+            series = T.weak_scaling_series(m, base, ks=(1, 2, 4, 8),
+                                           flops_per_device=DIE_FLOPS)
+            for k, o in zip((1, 2, 4, 8), series):
+                rows.append({"package": pkg, "method": m, "k": k,
+                             "h": 2048 * k, "N": 16 * k * k,
+                             "normalized_latency": o["normalized"],
+                             "nop_fraction": o["nop"] / o["total"]})
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for pkg in ("standard", "advanced"):
+        hec = [r for r in rows if r["package"] == pkg
+               and r["method"] == "hecaton"][-1]
+        flat = [r for r in rows if r["package"] == pkg
+                and r["method"] == "flat_ring"][-1]
+        emit(f"fig9_weakscale_hecaton_{pkg}_k8", 0.0,
+             f"{hec['normalized_latency']:.2f}x")
+        emit(f"fig9_weakscale_flatring_{pkg}_k8", 0.0,
+             f"{flat['normalized_latency']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,15 @@
+"""Assigned-architecture registry: importing this package registers all configs."""
+
+from repro.configs import (  # noqa: F401
+    mamba2_130m,
+    qwen3_0_6b,
+    nemotron_4_340b,
+    granite_34b,
+    minicpm3_4b,
+    paligemma_3b,
+    whisper_small,
+    granite_moe_3b_a800m,
+    grok_1_314b,
+    zamba2_1_2b,
+    paper_llama,
+)

@@ -1,0 +1,17 @@
+"""granite-34b — code model, MQA (kv=1). [arXiv:2405.04324]
+
+Non-gated gelu MLP (d_ff = 4*d_model): yields ~34B params matching the name;
+a SwiGLU MLP would overcount at ~47B (the HF granite-34b-code is GPTBigCode-
+style MQA + gelu, "llama-arch" in the assignment note notwithstanding)."""
+from repro.config import ModelConfig, register
+
+FULL = ModelConfig(
+    name="granite-34b", family="dense", num_layers=88, d_model=6144,
+    num_heads=48, num_kv_heads=1, d_ff=24_576, vocab_size=49_152,
+    mlp_kind="gelu", norm_kind="rmsnorm", rope_theta=10_000.0,
+)
+
+SMOKE = FULL.scaled(num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+                    head_dim=16, d_ff=256, vocab_size=128)
+
+register(FULL, SMOKE)

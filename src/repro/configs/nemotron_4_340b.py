@@ -1,0 +1,13 @@
+"""nemotron-4-340b — dense, GQA kv=8, squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.config import ModelConfig, register
+
+FULL = ModelConfig(
+    name="nemotron-4-340b", family="dense", num_layers=96, d_model=18_432,
+    num_heads=96, num_kv_heads=8, d_ff=73_728, vocab_size=256_000,
+    mlp_kind="relu2", norm_kind="layernorm", rope_theta=10_000.0,
+)
+
+SMOKE = FULL.scaled(num_layers=2, d_model=96, num_heads=8, num_kv_heads=2,
+                    head_dim=12, d_ff=384, vocab_size=128)
+
+register(FULL, SMOKE)

@@ -1,0 +1,18 @@
+"""paligemma-3b — SigLIP (stubbed) + gemma decoder, MQA. [arXiv:2407.07726]
+
+The vision frontend is a STUB: input_specs() supplies precomputed patch
+embeddings [B, 256, d_model] which replace the first 256 sequence positions.
+"""
+from repro.config import ModelConfig, register
+
+FULL = ModelConfig(
+    name="paligemma-3b", family="vlm", num_layers=18, d_model=2048,
+    num_heads=8, num_kv_heads=1, d_ff=16_384, vocab_size=257_216,
+    head_dim=256, mlp_kind="geglu", norm_kind="rmsnorm",
+    rope_theta=10_000.0, frontend_stub_len=256,
+)
+
+SMOKE = FULL.scaled(num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+                    head_dim=16, d_ff=128, vocab_size=128, frontend_stub_len=8)
+
+register(FULL, SMOKE)

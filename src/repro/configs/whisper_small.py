@@ -1,0 +1,20 @@
+"""whisper-small — encoder-decoder, conv frontend stubbed. [arXiv:2212.04356]
+
+input_specs() supplies precomputed frame embeddings [B, 1500, d_model] (the
+conv1d+log-mel frontend is a stub).  Positional scheme simplified to RoPE
+(backbone-only reproduction, noted in DESIGN.md).
+"""
+from repro.config import ModelConfig, register
+
+FULL = ModelConfig(
+    name="whisper-small", family="audio", num_layers=12, d_model=768,
+    num_heads=12, num_kv_heads=12, d_ff=3072, vocab_size=51_865,
+    mlp_kind="gelu", norm_kind="layernorm", encoder_layers=12,
+    frontend_stub_len=1500,
+)
+
+SMOKE = FULL.scaled(num_layers=2, encoder_layers=2, d_model=64, num_heads=4,
+                    num_kv_heads=4, head_dim=16, d_ff=128, vocab_size=128,
+                    frontend_stub_len=12)
+
+register(FULL, SMOKE)

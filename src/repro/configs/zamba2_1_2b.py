@@ -1,0 +1,23 @@
+"""zamba2-1.2b — hybrid: Mamba2 backbone + shared attention blocks. [arXiv:2411.15242]
+
+38 mamba2 blocks; after every 6th block a full attention+MLP block runs whose
+parameters come from 2 alternating shared sets (parameter re-use across depth).
+"""
+from repro.config import ModelConfig, SSMConfig, register
+
+FULL = ModelConfig(
+    name="zamba2-1.2b", family="hybrid", num_layers=38, d_model=2048,
+    num_heads=32, num_kv_heads=32, d_ff=8192, vocab_size=32_000,
+    mlp_kind="swiglu", norm_kind="rmsnorm",
+    num_shared_attn_sets=2, shared_attn_every=6,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, n_groups=1,
+                  conv_kernel=4, chunk_size=128),
+)
+
+SMOKE = FULL.scaled(num_layers=5, d_model=64, num_heads=4, num_kv_heads=4,
+                    head_dim=16, d_ff=128, vocab_size=128,
+                    num_shared_attn_sets=2, shared_attn_every=2,
+                    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2,
+                                  n_groups=1, conv_kernel=4, chunk_size=8))
+
+register(FULL, SMOKE)

@@ -1,0 +1,360 @@
+"""Hecaton's distributed training method (paper §IV, Algorithm 1) as JAX ops.
+
+The paper tiles every weight matrix over a 2D die grid (mx × my) and replaces the
+global all-reduce of 1D tensor parallelism with two *local* collectives over √N-size
+groups — an all-gather of the input along one grid axis and a reduce-scatter of the
+output along the other.  Both collectives run at full ring bandwidth on a torus
+(TPU ICI is a torus; the paper builds one from bypass links).
+
+Two dataflow patterns from the paper:
+
+* ``linear_seq_scatter``  (§IV-B, FFN blocks / fused linear chains)
+    in : x  [B, T/t_ax, H/h_ax]   (tokens sharded over ``t_ax``, hidden over ``h_ax``)
+         w  [H/h_ax, O/t_ax]      (paper's transposed tile placement W[j,i] on die (i,j))
+    out: y  [B, T/h_ax, O/t_ax]   — tiling is the *transpose* of the input tiling, so
+                                    the next (fused) layer runs with swapped axis roles
+                                    and needs no extra communication (paper §IV-B).
+
+* ``mixer_in`` / ``mixer_out``  (§IV-C, attention & other token mixers)
+    ``mixer_in``  all-gathers the *sequence* (so every die sees all tokens) and
+    reduce-scatters the output along *hidden* — each die ends up with a head-slice of
+    Q/K/V over the full sequence, exploiting head parallelism with zero comm inside
+    the attention itself.  ``mixer_out`` is the inverse: gather hidden, project, and
+    reduce-scatter tokens back to the canonical tiling.
+
+Backward faithfulness: we differentiate *through* ``shard_map``.  JAX's transpose
+rules give exactly Algorithm 1's backward —
+    transpose(all_gather)   = reduce-scatter (paper Step 4 of bwd)
+    transpose(psum_scatter) = all-gather     (paper Step 3 of bwd: gather dY once,
+                                              reuse for both dX and dW)
+and the re-gather of X for dW (paper Steps 6-7, the SRAM-capacity trick) is obtained
+by wrapping blocks in a remat policy that saves only the *sharded* activations and
+recomputes gathers (core/schedule.py).
+
+All functions are no-ops (plain einsums) when ``mesh is None`` so the same model code
+runs single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+
+
+def _ag(x, axis_name: str, dim: int):
+    """Tiled all-gather along ``dim`` over mesh axis ``axis_name``."""
+    return lax.all_gather(x, axis_name, axis=dim, tiled=True)
+
+
+def _rs(x, axis_name: str, dim: int):
+    """Tiled reduce-scatter (psum_scatter) along ``dim`` over ``axis_name``."""
+    return lax.psum_scatter(x, axis_name, scatter_dimension=dim, tiled=True)
+
+
+def _mm(x, w, precision=None):
+    """Local matmul in bf16 with fp32 accumulation (MXU semantics)."""
+    return jnp.einsum("bth,ho->bto", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pattern 1: fused-linear / FFN dataflow (Algorithm 1, seq-scatter)
+# ---------------------------------------------------------------------------
+
+
+def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
+                       t_ax: str, h_ax: str,
+                       data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+    """One Hecaton linear layer (paper Alg. 1 forward, steps 2-5).
+
+    x: [B, T_local*t, H_local*h] logically; sharded P(data_axes, t_ax, h_ax).
+    w: [H, O] sharded P(h_ax, t_ax)  (the paper's W[j,i] -> die(i,j) placement).
+    returns y sharded P(data_axes, h_ax, t_ax)  (transposed tiling).
+    """
+    if mesh is None:
+        return _mm(x, w)
+
+    def f(xl, wl):
+        xg = _ag(xl, t_ax, 1)           # Step 3: all-gather tokens within column
+        yp = _mm(xg, wl)                # local tile matmul (partial over h_ax)
+        return _rs(yp, h_ax, 1)         # Step 4: reduce-scatter tokens within row
+
+    dspec = P(data_axes)
+    return _shard_map(
+        f, mesh,
+        in_specs=(P(dspec[0] if len(data_axes) == 1 else data_axes, t_ax, h_ax),
+                  P(h_ax, t_ax)),
+        out_specs=P(data_axes if len(data_axes) > 1 else data_axes[0], h_ax, t_ax),
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Pattern 2: token-mixer dataflow (paper §IV-C)
+# ---------------------------------------------------------------------------
+
+
+def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
+             t_ax: str, h_ax: str,
+             data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+    """Projection *into* a token mixer (QKV / mamba in_proj). Paper Fig. 7(b) steps 1-4+10.
+
+    x: [B, T/t_ax, H/h_ax]  ->  out: [B, T(full), O/(t_ax,h_ax)]
+    Sequence is gathered (every die sees all tokens of its data shard); output hidden
+    is fully sharded over the whole 2D grid: head-sliced, comm-free attention.
+    """
+    if mesh is None:
+        return _mm(x, w)
+
+    def f(xl, wl):
+        xg = _ag(xl, t_ax, 1)           # gather sequence within column
+        yp = _mm(xg, wl)                # [b, T, O/t_ax] partial over h_ax
+        return _rs(yp, h_ax, 2)         # Step 10: reduce-scatter along *hidden*
+    return _shard_map(
+        f, mesh,
+        in_specs=(P(data_axes if len(data_axes) > 1 else data_axes[0], t_ax, h_ax),
+                  P(h_ax, t_ax)),
+        out_specs=P(data_axes if len(data_axes) > 1 else data_axes[0], None,
+                    (t_ax, h_ax)),
+    )(x, w)
+
+
+def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
+              t_ax: str, h_ax: str,
+              data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+    """Projection *out of* a token mixer (attention O-proj / mamba out_proj).
+
+    Paper Fig. 7(b) steps 12-14: all-gather hidden within row, project, then
+    reduce-scatter the sequence back to the canonical tiling.
+
+    a: [B, T(full), Hm/(t_ax,h_ax)]  ->  out: [B, T/t_ax, O/h_ax]
+    """
+    if mesh is None:
+        return _mm(a, w)
+
+    def f(al, wl):
+        ag = _ag(al, h_ax, 2)           # Step 12: gather hidden within row
+        yp = _mm(ag, wl)                # [b, T, O/h_ax] partial over t_ax
+        return _rs(yp, t_ax, 1)         # Step 14: reduce-scatter sequence
+    return _shard_map(
+        f, mesh,
+        in_specs=(P(data_axes if len(data_axes) > 1 else data_axes[0], None,
+                    (t_ax, h_ax)),
+                  P(t_ax, h_ax)),
+        out_specs=P(data_axes if len(data_axes) > 1 else data_axes[0], t_ax, h_ax),
+    )(a, w)
+
+
+# ---------------------------------------------------------------------------
+# Fused FFN block (paper §IV-B "two rounds of transposition")
+# ---------------------------------------------------------------------------
+
+
+def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
+              data_axes: Tuple[str, ...] = ("data",),
+              w1b=None):
+    """Fused up/down FFN: two chained seq-scatter linears with swapped axis roles.
+
+    After L1 the activation tiling is transposed (tokens on h_ax); L2 runs with the
+    roles swapped and restores the canonical tiling — the paper's zero-communication
+    layer fusion.  ``w1b`` is an optional second up-projection for gated MLPs
+    (SwiGLU/GeGLU): both up-projections read the *same* gathered input, so gating
+    adds zero extra communication (the gather is shared — layer fusion again).
+    """
+    if mesh is None:
+        h = _mm(x, w1)
+        if w1b is not None:
+            h = act_fn(h) * _mm(x, w1b)
+        else:
+            h = act_fn(h)
+        return _mm(h, w2)
+
+    def f(xl, w1l, w2l, *rest):
+        xg = _ag(xl, t_ax, 1)                      # gather tokens once
+        hp = _mm(xg, w1l)
+        h = _rs(hp, h_ax, 1)                       # tokens now tiled over h_ax
+        if rest:
+            gp = _mm(xg, rest[0])
+            g = _rs(gp, h_ax, 1)
+            h = act_fn(h) * g
+        else:
+            h = act_fn(h)
+        hg = _ag(h, h_ax, 1)                       # L2 with swapped roles
+        yp = _mm(hg, w2l)
+        return _rs(yp, t_ax, 1)                    # canonical tiling restored
+
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    in_specs = [P(dspec, t_ax, h_ax), P(h_ax, t_ax), P(t_ax, h_ax)]
+    args = [x, w1, w2]
+    if w1b is not None:
+        in_specs.append(P(h_ax, t_ax))
+        args.append(w1b)
+    return _shard_map(f, mesh, in_specs=tuple(in_specs),
+                      out_specs=P(dspec, t_ax, h_ax))(*args)
+
+
+# ---------------------------------------------------------------------------
+# Vocab-parallel embedding (paper §IV-B Step 2-3: scatter from DRAM, collect
+# via NoP).  The table is 2D-tiled [V/t_ax, H/h_ax]; each die gathers its vocab
+# slice for ALL tokens (masked) and a reduce-scatter over the token axis both
+# sums the vocab partials and restores the canonical activation tiling.
+# (Also works around an XLA GSPMD bug partitioning gathers from 2D-sharded
+# tables: dynamic-slice verifier failure, observed jax 0.8.2 CPU backend.)
+# ---------------------------------------------------------------------------
+
+
+def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
+             t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
+             compute_dtype=jnp.bfloat16, seq_sharded: bool = True,
+             batch_sharded: bool = True) -> jax.Array:
+    """ids [B,S] -> embeddings.
+
+    seq_sharded=True (train/prefill): ids arrive tokens-over-t_ax, output is
+    canonical [B, S/t_ax, H/h_ax].  seq_sharded=False (decode): ids replicated,
+    output [B, S, H/h_ax] with a psum over t_ax instead of the scatter.
+    """
+    if mesh is None:
+        return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+    def f(ids_l, tab_l):
+        idg = _ag(ids_l, t_ax, 1) if seq_sharded else ids_l
+        v_loc = tab_l.shape[0]
+        off = lax.axis_index(t_ax) * v_loc
+        lid = idg - off
+        ok = (lid >= 0) & (lid < v_loc)
+        emb = jnp.take(tab_l, jnp.clip(lid, 0, v_loc - 1), axis=0)
+        emb = (emb * ok[..., None]).astype(compute_dtype)
+        if seq_sharded:
+            return _rs(emb, t_ax, 1)        # sums vocab partials + tiles tokens
+        return lax.psum(emb, t_ax)
+
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    bspec = d if batch_sharded else None
+    in_ids = P(bspec, t_ax if seq_sharded else None)
+    out = P(bspec, t_ax, h_ax) if seq_sharded else P(bspec, None, h_ax)
+    return _shard_map(f, mesh, in_specs=(in_ids, P(t_ax, h_ax)),
+                      out_specs=out)(ids, table)
+
+
+# ---------------------------------------------------------------------------
+# Fused chunked LM-head + cross-entropy (beyond-paper optimization, §Perf it.2)
+#
+# The baseline seq-scatter lm_head materializes [all-local-tokens, V/mx]
+# partial logits (gigabytes in fp32) and its backward all-gathers fp32
+# d-logits — by far the largest memory AND collective contributor for
+# small/medium models.  Here the loss is computed inside ONE shard_map,
+# scanning over sequence chunks:
+#   * tokens stay tiled over t_ax (never gathered);
+#   * the head weight is [H, V/h_ax] (vocab over h_ax, H unsharded — stored
+#     FSDP-sharded over data);
+#   * per chunk: AG x over h_ax (tiny), local [tc,H]@[H,V/h] matmul, stable
+#     LSE via pmax/psum of per-token scalars over h_ax;
+#   * nothing bigger than [tc, V/h_ax] ever exists, and the only collectives
+#     are the tiny x-chunk gather + scalar reductions.
+# ---------------------------------------------------------------------------
+
+
+def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
+                  loss_mask: Optional[jax.Array], *, mesh: Optional[Mesh],
+                  t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
+                  n_chunks: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Returns (sum of masked NLL, mask count) — caller divides.
+
+    x [B, S, H] canonical P(d, t_ax, h_ax); w [H, V] P(None, h_ax);
+    labels/loss_mask [B, S] P(d, t_ax).
+    """
+    if loss_mask is None:
+        loss_mask = jnp.ones(labels.shape, jnp.float32)
+
+    if mesh is None:
+        lf = jnp.einsum("bth,hv->btv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+        m = lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+        lse = jnp.squeeze(m, -1) + jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1))
+        gold = jnp.sum(lf * jax.nn.one_hot(labels, w.shape[1],
+                                           dtype=jnp.float32), axis=-1)
+        wmask = loss_mask.astype(jnp.float32)
+        return jnp.sum((lse - gold) * wmask), jnp.sum(wmask)
+
+    def f(xl, wl, ll, ml):
+        b, s_loc, _ = xl.shape
+        v_loc = wl.shape[1]
+        v_off = lax.axis_index(h_ax) * v_loc
+        nc = n_chunks
+        while s_loc % nc:
+            nc -= 1
+        tc = s_loc // nc
+        xs = (xl.reshape(b, nc, tc, -1).transpose(1, 0, 2, 3),
+              ll.reshape(b, nc, tc).transpose(1, 0, 2),
+              ml.reshape(b, nc, tc).transpose(1, 0, 2))
+
+        def chunk(carry, inp):
+            xc, lc, mc = inp
+            xg = _ag(xc, h_ax, 2)                     # [b, tc, H] (tiny AG)
+            lg = jnp.einsum("bth,hv->btv", xg, wl,
+                            preferred_element_type=jnp.float32)
+            mloc = jnp.max(lg, axis=-1)
+            # pmax has no AD rule: gather the per-shard maxima (tiny) instead
+            mall = lax.all_gather(lax.stop_gradient(mloc), h_ax, axis=0)
+            mglob = jnp.max(mall, axis=0)
+            e = jnp.exp(lg - mglob[..., None])
+            lse = mglob + jnp.log(lax.psum(jnp.sum(e, axis=-1), h_ax))
+            onehot = ((lc[..., None] - v_off)
+                      == jnp.arange(v_loc)[None, None, :])
+            gold = lax.psum(jnp.sum(lg * onehot, axis=-1), h_ax)
+            wm = mc.astype(jnp.float32)
+            return (carry[0] + jnp.sum((lse - gold) * wm),
+                    carry[1] + jnp.sum(wm)), None
+
+        chunk = jax.checkpoint(chunk)                 # recompute logits in bwd
+        (nll, cnt), _ = lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())), xs)
+        nll = lax.psum(nll, data_axes + (t_ax,))
+        cnt = lax.psum(cnt, data_axes + (t_ax,))
+        return nll, cnt
+
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    return _shard_map(
+        f, mesh,
+        in_specs=(P(d, t_ax, h_ax), P(None, h_ax), P(d, t_ax), P(d, t_ax)),
+        out_specs=(P(), P()),
+    )(x, w.astype(x.dtype), labels, loss_mask)
+
+
+# ---------------------------------------------------------------------------
+# Weight / activation PartitionSpecs implied by the method
+# ---------------------------------------------------------------------------
+
+
+def canonical_act_spec(t_ax="mx", h_ax="my", data_axes=("data",)) -> P:
+    """[B, T, H] tiling at block boundaries: tokens over t_ax, hidden over h_ax."""
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(d, t_ax, h_ax)
+
+
+def mixer_act_spec(t_ax="mx", h_ax="my", data_axes=("data",)) -> P:
+    """[B, T, Hm] inside a mixer: full sequence, hidden over the whole grid."""
+    d = data_axes if len(data_axes) > 1 else data_axes[0]
+    return P(d, None, (t_ax, h_ax))
+
+
+def w_in_spec(t_ax="mx", h_ax="my") -> P:
+    """Weight consumed by a canonical-layout input: W[H/h_ax, O/t_ax]."""
+    return P(h_ax, t_ax)
+
+
+def w_swapped_spec(t_ax="mx", h_ax="my") -> P:
+    """Weight of the second fused layer (roles swapped): W[H/t_ax, O/h_ax]."""
+    return P(t_ax, h_ax)

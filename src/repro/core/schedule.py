@@ -1,0 +1,98 @@
+"""Hecaton scheduling (paper §III-B) mapped to TPU/XLA idioms.
+
+The paper's three scheduling levers and their TPU equivalents:
+
+1. **Mini-batch decomposition** — a batch is split into mini-batches as minimal
+   execution units so fixed hardware trains arbitrary batch sizes.  Here: microbatch
+   gradient accumulation via ``lax.scan`` (train/step.py); the microbatch count is
+   chosen so the live activation set fits the per-chip memory target, exactly the
+   paper's "larger activation buffer => more samples per mini-batch".
+
+2. **Layer fusion** — consecutive layers consume activations where they are produced,
+   never round-tripping DRAM.  Here: (a) the hecaton seq-scatter chain already fuses
+   linear pairs with zero comm (core/hecaton.ffn_block); (b) the remat policy below
+   recomputes the *gathers* in backward instead of saving gathered activations —
+   the paper's Step-6/7 re-gather which keeps SRAM (HBM) footprint at the sharded
+   size; (c) fused Pallas kernels (kernels/matmul.py) keep bias+activation in VMEM.
+
+3. **On/off-package overlap** — DRAM streaming overlaps on-package execution.  Here:
+   the data pipeline prefetches host->device asynchronously (data/synthetic.py) and
+   collectives are issued back-to-back with the consuming matmul so XLA's latency
+   hiding scheduler overlaps them (flags in launch/train.py).
+
+``remat_policy`` returns a jax.checkpoint policy implementing (2b).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+from jax.ad_checkpoint import checkpoint_policies as cp
+
+
+def remat_policy(name: str):
+    """Named remat policies.
+
+    * ``none``   — save everything (fastest recompute, highest memory).
+    * ``fusion`` — paper-faithful: save only matmul outputs that are *sharded*
+                   (checkpoint_dots_with_no_batch_dims saves weight-stationary dots);
+                   gathers/elementwise are recomputed in backward — Alg. 1 Step 6-7.
+    * ``full``   — save only block boundaries (max recompute, min memory).
+    """
+    if name == "none":
+        return None
+    if name == "fusion":
+        return cp.dots_with_no_batch_dims_saveable
+    if name == "full":
+        return cp.nothing_saveable
+    raise KeyError(f"unknown remat policy {name!r}")
+
+
+def apply_remat(fn, policy_name: str):
+    pol = remat_policy(policy_name)
+    if policy_name == "none":
+        return fn
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# Mini-batch (microbatch) sizing — paper §III-B(a)
+# ---------------------------------------------------------------------------
+
+# live bytes per token per layer (f32-saved dot outputs) under each remat policy,
+# as a multiple of d_model elements
+_REMAT_FACTOR = {"none": 24.0, "fusion": 10.0, "full": 2.5}
+
+
+def choose_microbatches(global_batch: int, seq_len: int, d_model: int,
+                        n_data_shards: int, n_token_shards: int,
+                        *, num_layers: int = 32, vocab: int = 32_000,
+                        act_budget_bytes: float = 2e9,
+                        bytes_per_elt: int = 2):
+    """Pick (microbatch count, remat policy) so live activations fit the budget.
+
+    Live set per token ≈ L * d_model * remat_factor (saved residual stack across
+    the layer scan)  +  3 * vocab (logits + one-hot + exp in the loss), all
+    divided by the model shards.  Mirrors the paper's §III-B rule: the
+    mini-batch is whatever the activation buffer holds; deeper recompute
+    (= deeper layer fusion) trades compute for buffer space.
+    Returns (n_micro, remat_name).
+    """
+    per_shard_batch = max(1, global_batch // n_data_shards)
+
+    def per_token(remat):
+        layer_term = num_layers * d_model * _REMAT_FACTOR[remat]
+        loss_term = 3.0 * vocab
+        return (layer_term + loss_term) * bytes_per_elt * 2 / n_token_shards
+
+    for remat in ("fusion", "full"):
+        tokens_budget = act_budget_bytes / per_token(remat)
+        mb_samples = int(tokens_budget // seq_len)
+        if mb_samples >= 1:
+            n_micro = max(1, math.ceil(per_shard_batch / mb_samples))
+            while per_shard_batch % n_micro:
+                n_micro += 1
+            return min(n_micro, per_shard_batch), remat
+    return per_shard_batch, "full"      # 1-sample microbatches, max recompute

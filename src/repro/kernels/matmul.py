@@ -1,0 +1,145 @@
+"""Fused matmul (+bias +activation) Pallas TPU kernel.
+
+This is the per-die compute primitive of the paper's architecture: the PE array
+consumes operands from on-die SRAM (here: VMEM via BlockSpec tiling) and the
+"layer fusion" scheduling keeps bias/activation in the buffers instead of
+round-tripping DRAM/HBM (paper §III-B b).
+
+Grid: (M/bm, N/bn, K/bk) with the K axis innermost — TPU grids execute
+sequentially per core, so a VMEM f32 scratch accumulates partial products across
+K steps and the epilogue (bias + activation) fires on the last K step only.
+Block shapes default to MXU-aligned (128x128x512) tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _epilogue(acc, bias, act: str):
+    y = acc
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act == "relu2":
+        r = jnp.maximum(y, 0.0)
+        y = r * r
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act != "none":
+        raise ValueError(act)
+    return y
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, act: str, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = _epilogue(acc_ref[...], None, act).astype(o_ref.dtype)
+
+
+def _mm_bias_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, act: str, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = _epilogue(acc_ref[...], b_ref[...], act).astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None, *,
+           act: str = "none", block_m: int = 128, block_n: int = 128,
+           block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """y = act(x @ w + bias).  x [M,K], w [K,N]; dims multiples of the blocks."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    grid = (M // bm, N // bn, K // bk)
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+        pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+    ]
+    if bias is None:
+        kernel = functools.partial(_mm_kernel, act=act, n_k=grid[2])
+        args = (x, w)
+    else:
+        kernel = functools.partial(_mm_bias_kernel, act=act, n_k=grid[2])
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, k: (0, j)))
+        args = (x, w, bias.reshape(1, N))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+def gated_matmul(x: jax.Array, w1: jax.Array, w1b: jax.Array, *,
+                 act: str = "silu", block_m: int = 128, block_n: int = 128,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """y = act(x@w1) * (x@w1b) — the fused gated-MLP up-projection.
+
+    Both products read the same x tile from VMEM: the paper's shared-gather
+    argument (one load feeds two MACs) expressed at kernel level.
+    """
+    M, K = x.shape
+    _, N = w1.shape
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    grid = (M // bm, N // bn, K // bk)
+
+    def kernel(x_ref, w1_ref, w1b_ref, o_ref, acc_ref, accb_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            accb_ref[...] = jnp.zeros_like(accb_ref)
+
+        xt = x_ref[...]
+        acc_ref[...] += jnp.dot(xt, w1_ref[...],
+                                preferred_element_type=jnp.float32)
+        accb_ref[...] += jnp.dot(xt, w1b_ref[...],
+                                 preferred_element_type=jnp.float32)
+
+        @pl.when(pl.program_id(2) == grid[2] - 1)
+        def _done():
+            g = _epilogue(acc_ref[...], None, act)
+            o_ref[...] = (g * accb_ref[...]).astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w1b)

@@ -1,0 +1,57 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas`` flips between the TPU kernels and the pure-jnp reference path.
+On this CPU container the models default to the reference path (Pallas interpret
+mode inside a full model would be impractically slow); on a real TPU set
+``REPRO_USE_PALLAS=1`` (read by launch/train.py) to enable the kernels.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul as _mm
+from repro.kernels import ref as _ref
+from repro.kernels import ssd as _ssd
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def use_pallas_default() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_pallas"))
+def fused_matmul(x, w, bias=None, *, act: str = "none",
+                 use_pallas: bool = False):
+    if use_pallas:
+        return _mm.matmul(x, w, bias, act=act, interpret=_INTERPRET)
+    return _ref.matmul_ref(x, w, bias, act=act)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_pallas"))
+def fused_gated_matmul(x, w1, w1b, *, act: str = "silu",
+                       use_pallas: bool = False):
+    if use_pallas:
+        return _mm.gated_matmul(x, w1, w1b, act=act, interpret=_INTERPRET)
+    return _ref.gated_matmul_ref(x, w1, w1b, act=act)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def attention(q, k, v, *, causal: bool = True, use_pallas: bool = False):
+    if use_pallas:
+        return _fa.flash_attention(q, k, v, causal=causal,
+                                   interpret=_INTERPRET)
+    return _ref.attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd(x, dt, A, B, C, *, chunk: int = 128, use_pallas: bool = False):
+    if use_pallas:
+        return _ssd.ssd(x, dt, A, B, C, chunk=chunk, interpret=_INTERPRET)
+    return _ref.ssd_ref(x, dt, A, B, C, chunk=chunk)

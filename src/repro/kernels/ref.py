@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, bias=None, *, act: str = "none"):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if act == "relu2":
+        r = jnp.maximum(y, 0.0)
+        y = r * r
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "silu":
+        y = jax.nn.silu(y)
+    elif act != "none":
+        raise ValueError(act)
+    return y.astype(x.dtype)
+
+
+def gated_matmul_ref(x, w1, w1b, *, act: str = "silu"):
+    a = matmul_ref(x, w1, act=act).astype(jnp.float32)
+    b = jnp.dot(x.astype(jnp.float32), w1b.astype(jnp.float32))
+    return (a * b).astype(x.dtype)
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q [B,nh,Sq,dh]; k,v [B,nkv,Sk,dh].  Naive softmax attention."""
+    B, nh, Sq, dh = q.shape
+    nkv = k.shape[1]
+    if nh != nkv:
+        k = jnp.repeat(k, nh // nkv, axis=1)
+        v = jnp.repeat(v, nh // nkv, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (dh ** -0.5)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] + (Sk - Sq)
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 128):
+    """Sequential (non-chunked) SSD recurrence — the strongest oracle.
+
+    Shapes as kernels/ssd.ssd.  h_t = h_{t-1}*exp(dt_t*A) + dt_t * B_t x_t^T;
+    y_t = C_t . h_t.
+    """
+    b, S, nh, dh = x.shape
+    g, ds = B.shape[2], B.shape[3]
+    hpg = nh // g
+    Bh = jnp.repeat(B, hpg, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, hpg, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dtt, Bt, Ct = t
+        dA = jnp.exp(dtt * Af)[..., None, None]             # [b,nh,1,1]
+        h = h * dA + jnp.einsum("bhd,bhn->bhdn", xt * dtt[..., None], Bt)
+        y = jnp.einsum("bhdn,bhn->bhd", h, Ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, dh, ds), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+# the chunked-but-pure-jnp implementation used inside the models is itself
+# property-tested against ssd_ref (tests/test_kernels.py)
+from repro.models.ssm import ssd_chunked as ssd_chunked_jnp  # noqa: E402,F401

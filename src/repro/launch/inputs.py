@@ -1,0 +1,54 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input per
+(arch x shape) cell — weak-type-correct, shardable, no device allocation.
+
+Modality frontends are STUBS per the assignment: paligemma gets precomputed
+patch embeddings, whisper gets precomputed frame embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.models import lm
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, rc: RunConfig) -> Dict[str, Any]:
+    B, S = rc.global_batch, rc.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patches"] = sds((B, cfg.frontend_stub_len, cfg.d_model),
+                               jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = sds((B, cfg.frontend_stub_len, cfg.d_model),
+                              jnp.bfloat16)
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, rc: RunConfig) -> Dict[str, Any]:
+    spec = train_input_specs(cfg, rc)
+    spec.pop("labels")
+    return spec
+
+
+def decode_input_specs(cfg: ModelConfig, rc: RunConfig) -> Dict[str, Any]:
+    B = rc.global_batch
+    return {"tokens": sds((B, 1), jnp.int32),
+            "positions": sds((B, 1), jnp.int32)}
+
+
+def decode_cache_specs(cfg: ModelConfig, rc: RunConfig, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for a cache filled to rc.seq_len."""
+    return jax.eval_shape(
+        lambda: lm.init_caches(cfg, rc.global_batch, rc.seq_len, dtype))
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))

@@ -1,0 +1,63 @@
+"""Mesh construction.  ``make_production_mesh`` is the spec-mandated entry point;
+``make_hecaton_mesh`` refactors the same devices into the paper's 2D grid
+(model axis 16 -> 4x4), and ``make_mesh_for`` dispatches on strategy.
+
+Everything is a function — importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_hecaton_mesh(*, multi_pod: bool = False, data: int = 16, mx: int = 4,
+                      my: int = 4, pods: int = 2, devices=None):
+    """Same chips as the production mesh; model axis factored into (mx, my).
+
+    The (mx, my) grid is the paper's sqrt(N) x sqrt(N) die array; on a TPU v5e
+    pod the ICI torus gives every row/column the ring the paper builds from
+    bypass links.
+    """
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    if multi_pod:
+        shape = (pods, data, mx, my)
+        axes = ("pod", "data", "mx", "my")
+    else:
+        shape = (data, mx, my)
+        axes = ("data", "mx", "my")
+    need = int(np.prod(shape))
+    assert devices.size >= need, f"need {need} devices, have {devices.size}"
+    return Mesh(devices[:need].reshape(shape), axes)
+
+
+def make_mesh_for(strategy: str, *, multi_pod: bool = False, data: int = 16,
+                  model: int = 16, mx: int = 4, my: int = 4, devices=None):
+    if strategy == "hecaton":
+        return make_hecaton_mesh(multi_pod=multi_pod, data=data, mx=mx, my=my,
+                                 devices=devices)
+    if devices is None:
+        return make_production_mesh(multi_pod=multi_pod)
+    devices = np.asarray(devices)
+    if multi_pod:
+        return Mesh(devices[:2 * data * model].reshape(2, data, model),
+                    ("pod", "data", "model"))
+    return Mesh(devices[:data * model].reshape(data, model), ("data", "model"))
+
+
+def make_small_mesh(strategy: str, data: int, mx: int, my: int):
+    """Scaled-down mesh for tests / weak-scaling studies on host devices."""
+    n = data * mx * my
+    devs = np.asarray(jax.devices()[:n])
+    if strategy == "hecaton":
+        return Mesh(devs.reshape(data, mx, my), ("data", "mx", "my"))
+    return Mesh(devs.reshape(data, mx * my), ("data", "model"))

@@ -1,0 +1,70 @@
+"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import ParallelConfig, RunConfig, get_config, \
+        get_smoke_config
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import lm
+    from repro.serve import step as SS
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    s_max = args.prompt_len + args.gen
+    rc = RunConfig("serve", "decode", s_max, args.batch)
+    pcfg = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    prefill = jax.jit(SS.build_prefill(cfg, pcfg, rc, None,
+                                       compute_dtype=jnp.float32))
+    decode = jax.jit(SS.build_decode_step(cfg, pcfg, rc, None,
+                                          compute_dtype=jnp.float32))
+
+    ds = SyntheticLM(cfg.vocab_size, args.prompt_len, args.batch,
+                     extras={"patches": (cfg.frontend_stub_len, cfg.d_model)}
+                     if cfg.family == "vlm" else
+                     ({"frames": (cfg.frontend_stub_len, cfg.d_model)}
+                      if cfg.family == "audio" else None))
+    batch = {k: jnp.asarray(v) for k, v in ds.batch_at(0).items()
+             if k != "labels"}
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for i in range(args.gen - 1):
+        pos = jnp.full((args.batch, 1), args.prompt_len + i, jnp.int32)
+        logits, caches = decode(params, caches, tok, pos)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    gen = jnp.concatenate(out, axis=1)
+    jax.block_until_ready(gen)
+    dt = time.time() - t0
+    tps = args.batch * args.gen / dt
+    print(f"generated {gen.shape} tokens in {dt:.2f}s ({tps:.1f} tok/s)")
+    print("sample:", np.asarray(gen[0, :12]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+        --steps 200 --batch 8 --seq 256 [--mesh-devices 8 --strategy hecaton]
+
+On this CPU container it runs single-device (or a small fake-device mesh via
+--mesh-devices, spawned through XLA_FLAGS); on a real pod the same entry point
+picks up all devices.  Enables checkpointing + fault supervision.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _maybe_respawn(n: int):
+    if n > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={n}"
+        os.execv(sys.executable, [sys.executable] + sys.argv)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--strategy", default="hecaton")
+    ap.add_argument("--mesh-devices", type=int, default=1)
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--mx", type=int, default=2)
+    ap.add_argument("--my", type=int, default=2)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+    _maybe_respawn(args.mesh_devices)
+
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.config import (ParallelConfig, RunConfig, get_config,
+                              get_smoke_config)
+    from repro.data.synthetic import Prefetcher, SyntheticLM
+    from repro.launch.mesh import make_small_mesh
+    from repro.optim import adamw
+    from repro.parallel import specs as SP
+    from repro.runtime.fault import StepTimer
+    from repro.train import loop as train_loop
+    from repro.train import step as TS
+    from repro.models import lm
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rc = RunConfig("custom", "train", args.seq, args.batch, lr=args.lr)
+    mesh = None
+    pcfg = ParallelConfig(strategy=args.strategy, data=args.data,
+                          model=args.mx * args.my, mx=args.mx, my=args.my,
+                          microbatches=args.microbatches, zero1=True)
+    if args.mesh_devices > 1:
+        mesh = make_small_mesh(args.strategy, args.data, args.mx, args.my)
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = adamw.init(params)
+    if mesh is not None:
+        pspecs = SP.param_specs(params, mesh, pcfg)
+        pshard = SP.sharding_tree(pspecs, mesh)
+        params = jax.device_put(params, pshard)
+        ospecs = SP.opt_state_specs(pspecs, params, mesh, pcfg)
+        opt_state = jax.device_put(opt_state, SP.sharding_tree(ospecs, mesh))
+
+    ts = TS.build_train_step(cfg, pcfg, rc, mesh,
+                             compute_dtype=jnp.float32 if mesh is None
+                             else jnp.bfloat16)
+    ts = jax.jit(ts, donate_argnums=(0, 1))
+
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patches"] = (cfg.frontend_stub_len, cfg.d_model)
+    if cfg.family == "audio":
+        extras["frames"] = (cfg.frontend_stub_len, cfg.d_model)
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, extras=extras)
+    it = Prefetcher(iter(ds))
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        restored, start = ckpt.restore(
+            {"params": params, "opt_state": opt_state})
+        params, opt_state = restored["params"], restored["opt_state"]
+        print(f"restored checkpoint at step {start}")
+
+    state = {"params": params, "opt_state": opt_state}
+    state = train_loop.train(ts, state, it, start_step=start,
+                             num_steps=args.steps, ckpt=ckpt,
+                             ckpt_every=args.ckpt_every,
+                             timer=StepTimer())
+    it.close()
+    h = state["history"]
+    print(f"final loss {h[-1][1]:.4f} (first {h[0][1]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,321 @@
+"""Attention mixers: GQA/MQA (qwen/nemotron/granite/grok/...), MLA (minicpm3),
+cross-attention (whisper).  All projections route through PCtx so the Hecaton
+§IV-C dataflow (sequence gathered, heads sharded, AG/RS only) applies uniformly.
+
+Long sequences use a q-block-chunked softmax (``lax.scan``) so the [S,S] score
+matrix is never materialized — the jnp analogue of kernels/flash_attention.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: ModelConfig, key, cross: bool = False):
+    dh = cfg.resolved_head_dim
+    nh, nkv, H = cfg.num_heads, cfg.num_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": L.normal_init(ks[0], (H, nh * dh)),
+        "wk": L.normal_init(ks[1], (H, nkv * dh)),
+        "wv": L.normal_init(ks[2], (H, nkv * dh)),
+        "wo": L.normal_init(ks[3], (nh * dh, H), scale=1.0 / (nh * dh) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def init_mla(cfg: ModelConfig, key):
+    m = cfg.mla
+    H, nh = cfg.d_model, cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": L.normal_init(ks[0], (H, m.q_lora_rank)),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "wq_b": L.normal_init(ks[1], (m.q_lora_rank, nh * (dn + dr))),
+        "wkv_a": L.normal_init(ks[2], (H, m.kv_lora_rank + dr)),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "wkv_b": L.normal_init(ks[3], (m.kv_lora_rank, nh * (dn + dv))),
+        "wo": L.normal_init(ks[4], (nh * dv, H), scale=1.0 / (nh * dv) ** 0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # [B, S_max, nkv, dh]
+    v: jax.Array
+    length: jax.Array     # [] int32 — tokens filled
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array       # [B, S_max, kv_lora]
+    k_rope: jax.Array     # [B, S_max, dr]
+    length: jax.Array
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    dh = cfg.resolved_head_dim
+    return KVCache(jnp.zeros((batch, s_max, cfg.num_kv_heads, dh), dtype),
+                   jnp.zeros((batch, s_max, cfg.num_kv_heads, dh), dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    m = cfg.mla
+    return MLACache(jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+                    jnp.zeros((batch, s_max, m.qk_rope_head_dim), dtype),
+                    jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# core attention math (chunked over q blocks)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, *, causal: bool, q_offset, kv_len=None, q_block: int = 1024):
+    """q [B,Sq,nh,dh]; k,v [B,Sk,nh,dh] (kv already repeated to nh).
+
+    Chunked over Sq: scores per block are [B,nh,q_block,Sk] — never [Sq,Sk].
+    ``q_offset`` is the absolute position of q[0] (decode / prefill-continue).
+    ``kv_len`` masks the unfilled cache tail.
+    """
+    B, Sq, nh, dh = q.shape
+    Sk = k.shape[1]
+    scale = dh ** -0.5
+    kt = k.transpose(0, 2, 3, 1)         # [B,nh,dh,Sk]
+    vt = v.transpose(0, 2, 1, 3)         # [B,nh,Sk,dh]
+    kv_pos = jnp.arange(Sk)
+
+    def block(qb, qpos):
+        # qb [B,nh,bq,dh]
+        s = jnp.einsum("bhqd,bhdk->bhqk", qb.astype(jnp.float32),
+                       kt.astype(jnp.float32)) * scale
+        mask = jnp.ones((qpos.shape[0], Sk), bool)
+        if causal:
+            mask &= kv_pos[None, :] <= qpos[:, None]
+        if kv_len is not None:
+            mask &= kv_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bhkd->bhqd", p, vt.astype(jnp.float32))
+
+    qh = q.transpose(0, 2, 1, 3)         # [B,nh,Sq,dh]
+    if Sq % q_block:                     # non-divisible (e.g. 1500 frames): direct
+        q_block = Sq
+    if Sq <= q_block:
+        o = block(qh, q_offset + jnp.arange(Sq))
+    else:
+        nb = Sq // q_block
+        qb = qh.reshape(B, nh, nb, q_block, dh).transpose(2, 0, 1, 3, 4)
+        pos = (q_offset + jnp.arange(Sq)).reshape(nb, q_block)
+        o = lax.map(lambda args: block(*args), (qb, pos))
+        o = o.transpose(1, 2, 0, 3, 4).reshape(B, nh, Sq, -1)   # -1: v dh may differ
+    return o.transpose(0, 2, 1, 3).astype(q.dtype)     # [B,Sq,nh,dh]
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    B, S, nkv, dh = k.shape
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+def _sdpa_grouped_decode(q, k, v, *, kv_len):
+    """Decode-step attention WITHOUT repeating KV (GQA grouped einsum).
+
+    q [B,1,nkv,g,dh]; k,v [B,S,nkv,dh].  Keeps the KV cache sharded by kv-head
+    — repeating to q-heads at decode would force XLA to materialize/all-gather
+    the multi-GB cache across the grid.
+    """
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqcgd,bscd->bcgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(k.shape[1])[None, :] < kv_len
+    s = jnp.where(mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bcgqs,bscd->bqcgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def apply_attn(pctx, cfg: ModelConfig, p, x, *, positions, causal: bool = True,
+               cache: Optional[KVCache] = None, layout=None,
+               q_block: int = 1024) -> Tuple[jax.Array, Optional[KVCache]]:
+    """x [B,S,H] canonical -> (y [B,S,H] canonical, updated cache)."""
+    dh = cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    B, S, _ = x.shape
+
+    q = pctx.mixer_in(x, p["wq"]).reshape(B, S, nh, dh)
+    k = pctx.mixer_in(x, p["wk"]).reshape(B, S, nkv, dh)
+    v = pctx.mixer_in(x, p["wv"]).reshape(B, S, nkv, dh)
+
+    hspec = pctx.heads_spec(layout) if layout is not None else None
+    q = pctx.constraint(q, hspec)
+
+    if cfg.qk_norm:
+        q = L.rms_head_norm(p["q_norm"], q)
+        k = L.rms_head_norm(p["k_norm"], k)
+    cos, sin = L.rope_cos_sin(positions, dh, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
+    if cache is not None:
+        kc = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, cache.length, 0, 0))
+        vc = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, cache.length, 0, 0))
+        new_cache = KVCache(kc, vc, cache.length + S)
+        k, v = kc, vc
+        kv_len, q_off = new_cache.length, cache.length
+        positions_last = positions[:, -1:]
+
+    if cache is not None and S == 1:
+        # decode: grouped GQA, KV cache stays kv-head-sharded
+        kv_lay = pctx.attn_layout(nkv, B)
+        ba = None
+        if pctx.mesh is not None and B % pctx.ax.n_data == 0:
+            ba = kv_lay.batch_axes
+        kvh = kv_lay.head_axes or None
+        import jax.sharding as _js
+        qspec = (None if pctx.mesh is None else
+                 _js.PartitionSpec(ba if not ba or len(ba) > 1 else ba[0], None,
+                                   kvh if not kvh or len(kvh) > 1 else kvh[0],
+                                   None, None))
+        kspec = (None if pctx.mesh is None else
+                 _js.PartitionSpec(ba if not ba or len(ba) > 1 else ba[0], None,
+                                   kvh if not kvh or len(kvh) > 1 else kvh[0],
+                                   None))
+        g = nh // nkv
+        q5 = pctx.constraint(q.reshape(B, S, nkv, g, dh), qspec)
+        k = pctx.constraint(k.astype(q.dtype), kspec)
+        v = pctx.constraint(v.astype(q.dtype), kspec)
+        o = _sdpa_grouped_decode(q5, k, v, kv_len=kv_len)
+        o = o.reshape(B, S, nh, dh)
+    else:
+        k = pctx.constraint(_repeat_kv(k.astype(q.dtype), nh // nkv), hspec)
+        v = pctx.constraint(_repeat_kv(v.astype(q.dtype), nh // nkv), hspec)
+        o = _sdpa(q, k, v, causal=causal, q_offset=q_off, kv_len=kv_len,
+                  q_block=q_block)
+        o = pctx.constraint(o, hspec)
+    y = pctx.mixer_out(o.reshape(B, S, nh * dh), p["wo"])
+    return y, new_cache
+
+
+def apply_cross_attn(pctx, cfg: ModelConfig, p, x, memory_kv, *, layout=None):
+    """Whisper cross-attention: q from decoder x, k/v precomputed from encoder."""
+    dh = cfg.resolved_head_dim
+    nh, nkv = cfg.num_heads, cfg.num_kv_heads
+    B, S, _ = x.shape
+    q = pctx.mixer_in(x, p["wq"]).reshape(B, S, nh, dh)
+    hspec = pctx.heads_spec(layout) if layout is not None else None
+    q = pctx.constraint(q, hspec)
+    k, v = memory_kv
+    k = pctx.constraint(_repeat_kv(k.astype(q.dtype), nh // nkv), hspec)
+    v = pctx.constraint(_repeat_kv(v.astype(q.dtype), nh // nkv), hspec)
+    o = _sdpa(q, k, v, causal=False, q_offset=jnp.zeros((), jnp.int32))
+    return pctx.mixer_out(o.reshape(B, S, nh * dh), p["wo"])
+
+
+def cross_kv(pctx, cfg: ModelConfig, p, memory):
+    """Precompute cross-attention K/V from encoder output (cached for decode)."""
+    B, Sm, _ = memory.shape
+    dh, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
+    k = pctx.mixer_in(memory, p["wk"]).reshape(B, Sm, nkv, dh)
+    v = pctx.mixer_in(memory, p["wv"]).reshape(B, Sm, nkv, dh)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (minicpm3 / deepseek style)
+# ---------------------------------------------------------------------------
+
+def apply_mla(pctx, cfg: ModelConfig, p, x, *, positions,
+              cache: Optional[MLACache] = None, layout=None, q_block: int = 1024):
+    m = cfg.mla
+    nh, H = cfg.num_heads, cfg.d_model
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    B, S, _ = x.shape
+    hspec = pctx.heads_spec(layout) if layout is not None else None
+
+    ql = pctx.mixer_in(x, p["wq_a"])
+    ql = L.apply_norm("rmsnorm", {"scale": p["q_norm"]}, ql)
+    q = pctx.mixer_in(ql, p["wq_b"]).reshape(B, S, nh, dn + dr)
+    q = pctx.constraint(q, hspec)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv = pctx.mixer_in(x, p["wkv_a"])
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = L.apply_norm("rmsnorm", {"scale": p["kv_norm"]}, c_kv)
+
+    cos, sin = L.rope_cos_sin(positions, dr, cfg.rope_theta)
+    q_rope = L.apply_rope(q_rope, cos, sin)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
+    if cache is not None:
+        cc = lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cache.c_kv.dtype),
+                                      (0, cache.length, 0))
+        kr = lax.dynamic_update_slice(cache.k_rope, k_rope.astype(cache.k_rope.dtype),
+                                      (0, cache.length, 0))
+        new_cache = MLACache(cc, kr, cache.length + S)
+        c_kv, k_rope = cc.astype(x.dtype), kr.astype(x.dtype)
+        kv_len, q_off = new_cache.length, cache.length
+
+    if cache is not None and S == 1:
+        # ---- absorbed decode (DeepSeek trick): never materialize per-head K/V.
+        wkv = p["wkv_b"].reshape(m.kv_lora_rank, nh, dn + dv)
+        wk_b, wv_b = wkv[..., :dn], wkv[..., dn:]
+        q_abs = jnp.einsum("bshd,lhd->bshl", q_nope, wk_b)         # [B,1,nh,lora]
+        s = (jnp.einsum("bshl,btl->bhst", q_abs.astype(jnp.float32),
+                        c_kv.astype(jnp.float32))
+             + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                          k_rope.astype(jnp.float32))) * ((dn + dr) ** -0.5)
+        mask = jnp.arange(c_kv.shape[1])[None, :] < kv_len
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhst,btl->bshl", prob, c_kv.astype(jnp.float32))
+        o = jnp.einsum("bshl,lhd->bshd", o_lat, wv_b).astype(x.dtype)
+    else:
+        kv_up = jnp.einsum("btl,lo->bto", c_kv, p["wkv_b"].astype(c_kv.dtype),
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        kv_up = kv_up.reshape(B, -1, nh, dn + dv)
+        k_nope, vv = kv_up[..., :dn], kv_up[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (*k_nope.shape[:3], dr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qq = pctx.constraint(qq, hspec)
+        k = pctx.constraint(k, hspec)
+        # Perf iteration 3b tried passing v at its native 64-dim head (saves
+        # 2.5x SV flops) but GSPMD then relaid the whole SV chain with
+        # per-layer collective-permutes (+678GB/chip, 40x the compute win) —
+        # measured and REVERTED; see EXPERIMENTS.md. The padded-v form keeps
+        # the qkv chain in one layout.
+        vpad = jnp.pad(vv, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        o = _sdpa(qq, k, pctx.constraint(vpad, hspec), causal=True,
+                  q_offset=q_off, kv_len=kv_len, q_block=q_block)[..., :dv]
+    y = pctx.mixer_out(o.reshape(B, S, nh * dv), p["wo"])
+    return y, new_cache

@@ -1,0 +1,77 @@
+"""Block assembly: pre-norm residual wiring for attention / MLA / MoE / mamba
+blocks, plus stacked init helpers for scan-over-layers."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import attention as ATT
+from repro.models import layers as L
+from repro.models import mlp as MLP
+from repro.models import ssm as SSM
+
+
+def init_attn_block(cfg: ModelConfig, key, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "norm1": L.init_norm(cfg.norm_kind, cfg.d_model),
+        "norm2": L.init_norm(cfg.norm_kind, cfg.d_model),
+    }
+    p["attn"] = ATT.init_mla(cfg, ks[0]) if cfg.mla else ATT.init_attn(cfg, ks[0])
+    p["mlp"] = MLP.init_moe(cfg, ks[1]) if cfg.moe else MLP.init_mlp(cfg, ks[1])
+    if cross:
+        p["norm_x"] = L.init_norm(cfg.norm_kind, cfg.d_model)
+        p["xattn"] = ATT.init_attn(cfg, ks[2])
+    return p
+
+
+def init_mamba_block(cfg: ModelConfig, key):
+    return {"norm1": L.init_norm(cfg.norm_kind, cfg.d_model),
+            "mixer": SSM.init_mamba(cfg, key)}
+
+
+def init_stacked(init_fn, n: int, key):
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def apply_attn_block(pctx, cfg: ModelConfig, p, x, *, positions, layout,
+                     causal=True, cache=None, memory_kv=None,
+                     ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg.norm_kind, p["norm1"], x)
+    if cfg.mla:
+        a, new_cache = ATT.apply_mla(pctx, cfg, p["attn"], h, positions=positions,
+                                     cache=cache, layout=layout)
+    else:
+        a, new_cache = ATT.apply_attn(pctx, cfg, p["attn"], h, positions=positions,
+                                      causal=causal, cache=cache, layout=layout)
+    x = pctx.canon(x + a)
+    if memory_kv is not None:
+        h = L.apply_norm(cfg.norm_kind, p["norm_x"], x)
+        a = ATT.apply_cross_attn(pctx, cfg, p["xattn"], h, memory_kv, layout=layout)
+        x = pctx.canon(x + a)
+    h = L.apply_norm(cfg.norm_kind, p["norm2"], x)
+    if cfg.moe:
+        m, aux = MLP.apply_moe(pctx, cfg, p["mlp"], h)
+    else:
+        m = MLP.apply_mlp(pctx, cfg, p["mlp"], h)
+    x = pctx.canon(x + m.astype(x.dtype))
+    return x, new_cache, aux
+
+
+def apply_mamba_block(pctx, cfg: ModelConfig, p, x, *, layout, state=None,
+                      ) -> Tuple[jax.Array, Any]:
+    h = L.apply_norm(cfg.norm_kind, p["norm1"], x)
+    m, new_state = SSM.apply_mamba(pctx, cfg, p["mixer"], h, state=state,
+                                   layout=layout)
+    return pctx.canon(x + m.astype(x.dtype)), new_state

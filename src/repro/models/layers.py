@@ -1,0 +1,112 @@
+"""Shared model layers: initializers, norms, RoPE, embeddings, activations."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LLM standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg_kind: str, dim: int):
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg_kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(kind: str, params, x, eps: float = 1e-6):
+    """RMSNorm / LayerNorm over the last dim, fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"]).astype(x.dtype)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * params["scale"] + params["bias"]).astype(x.dtype)
+    raise KeyError(kind)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-6):
+    """qk-norm: RMSNorm over head_dim of [..., head_dim]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def relu2(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "swiglu": jax.nn.silu,   # gated (w1b present)
+    "geglu": jax.nn.gelu,    # gated
+    "relu2": relu2,          # non-gated (nemotron squared-ReLU)
+    "gelu": jax.nn.gelu,     # non-gated
+}
+
+GATED = {"swiglu": True, "geglu": True, "relu2": False, "gelu": False}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [B,S] -> cos,sin [B,S,head_dim//2] in fp32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [B,S,half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [B,S,H,D] (D even, split-half convention)."""
+    d = x.shape[-1] // 2
+    x1, x2 = x[..., :d], x[..., d:]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": embed_init(key, (vocab, dim), dtype)}
+
+
+def apply_embed(params, ids, compute_dtype):
+    return jnp.take(params["table"], ids, axis=0).astype(compute_dtype)

@@ -1,0 +1,254 @@
+"""Mamba2 (SSD — state-space duality) mixer.  [arXiv:2405.21060]
+
+The SSD forward is the chunked dual form: intra-chunk attention-like matmuls +
+an inter-chunk state recurrence (``lax.scan`` over chunks).  This file is the
+pure-jnp semantics; kernels/ssd.py is the Pallas TPU version of the same math and
+kernels/ref.py re-exports ``ssd_chunked`` as its oracle.
+
+Projections route through PCtx: the Hecaton mixer pattern gathers the sequence and
+shards d_inner/heads over the grid — the SSD scan itself is then comm-free, exactly
+like multi-head attention in the paper's §IV-C ("intrinsic parallelism provided by
+multiple heads").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array     # [B, K-1, conv_channels]
+    ssm: jax.Array      # [B, nheads, head_dim, state]
+
+
+def d_inner(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def n_heads(cfg: ModelConfig) -> int:
+    return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    s = cfg.ssm
+    return d_inner(cfg) + 2 * s.n_groups * s.state_dim
+
+
+def init_mamba(cfg: ModelConfig, key):
+    s = cfg.ssm
+    H, Di, nh = cfg.d_model, d_inner(cfg), n_heads(cfg)
+    gs = s.n_groups * s.state_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.exp(jax.random.uniform(ks[5], (nh,)) * (jnp.log(0.1) - jnp.log(0.001))
+                 + jnp.log(0.001))
+    return {
+        "wz": L.normal_init(ks[0], (H, Di)),
+        "wx": L.normal_init(ks[1], (H, Di)),
+        "wB": L.normal_init(ks[2], (H, gs)),
+        "wC": L.normal_init(ks[3], (H, gs)),
+        "wdt": L.normal_init(ks[4], (H, nh)),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),     # softplus^-1(dt)
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": L.normal_init(ks[6], (s.conv_kernel, conv_channels(cfg)),
+                                scale=0.5),
+        "norm": jnp.ones((Di,), jnp.float32),
+        "wo": L.normal_init(ks[7], (Di, H), scale=1.0 / Di ** 0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan (reference semantics; Pallas version in kernels/ssd.py)
+# ---------------------------------------------------------------------------
+
+def _segsum(x):
+    """x [..., Q] -> lower-triangular pairwise cumulative sums [..., Q, Q]."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, init_state=None):
+    """SSD dual-form forward.
+
+    x  [b, S, nh, dh]      inputs
+    dt [b, S, nh]          post-softplus step sizes
+    A  [nh]                negative decay rates
+    B  [b, S, g, dstate]   input projections  (g groups broadcast over heads)
+    C  [b, S, g, dstate]   output projections
+    Returns (y [b,S,nh,dh], final_state [b,nh,dh,dstate]).
+    """
+    b, S, nh, dh = x.shape
+    g = B.shape[2]
+    if S % chunk:
+        # pad with dt=0 steps: decay exp(0)=1 and zero input — exact no-ops
+        # for both outputs (sliced off) and the carried state.
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, fin = ssd_chunked(x, dt, A, B, C, chunk=chunk,
+                             init_state=init_state)
+        return y[:, :S], fin
+    nc = S // chunk
+    hpg = nh // g
+    f32 = jnp.float32
+
+    xc = x.reshape(b, nc, chunk, nh, dh).astype(f32)
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, g, -1).astype(f32)
+    Cc = C.reshape(b, nc, chunk, g, -1).astype(f32)
+    Bh = jnp.repeat(Bc, hpg, axis=3)            # [b,nc,Q,nh,ds]
+    Ch = jnp.repeat(Cc, hpg, axis=3)
+
+    dA = dtc * A.astype(f32)                    # [b,nc,Q,nh] (negative)
+    dAcum = jnp.cumsum(dA, axis=2)              # within-chunk cumulative
+
+    # --- intra-chunk (diagonal blocks): attention-like masked matmul
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # [b,nc,nh,Q,Q]
+    scores = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh) * Lmat.transpose(0, 1, 2, 3, 4)
+    xdt = xc * dtc[..., None]
+    y_diag = jnp.einsum("bchqk,bckhd->bcqhd", scores, xdt)
+
+    # --- chunk summaries: state contributed by each chunk
+    decay_to_end = jnp.exp(dAcum[:, :, -1:, :] - dAcum)        # [b,nc,Q,nh]
+    states = jnp.einsum("bcqhn,bcqh,bcqhd->bchdn", Bh, decay_to_end * dtc, xc)
+
+    # --- inter-chunk recurrence
+    chunk_decay = jnp.exp(dAcum[:, :, -1, :])                  # [b,nc,nh]
+    s0 = (jnp.zeros((b, nh, dh, Bh.shape[-1]), f32) if init_state is None
+          else init_state.astype(f32))
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                       # [b,nh,dh,ds],[b,nh]
+        prev = carry
+        new = prev * dec_c[..., None, None] + st_c
+        return new, prev
+
+    final, prevs = lax.scan(step,
+                            s0,
+                            (states.transpose(1, 0, 2, 3, 4),
+                             chunk_decay.transpose(1, 0, 2)))
+    prevs = prevs.transpose(1, 0, 2, 3, 4)                      # [b,nc,nh,dh,ds]
+
+    # --- off-diagonal contribution from carried state
+    in_decay = jnp.exp(dAcum)                                   # [b,nc,Q,nh]
+    y_off = jnp.einsum("bcqhn,bchdn,bcqh->bcqhd", Ch, prevs, in_decay)
+
+    y = (y_diag + y_off).reshape(b, S, nh, dh)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token recurrence.  x [b,nh,dh], dt [b,nh], B/C [b,g,ds]."""
+    g = B.shape[1]
+    hpg = x.shape[1] // g
+    Bh = jnp.repeat(B, hpg, axis=1).astype(jnp.float32)     # [b,nh,ds]
+    Ch = jnp.repeat(C, hpg, axis=1).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))               # [b,nh]
+    xdt = x.astype(jnp.float32) * dtf[..., None]            # [b,nh,dh]
+    new = state * dA[..., None, None] + jnp.einsum("bhd,bhn->bhdn", xdt, Bh)
+    y = jnp.einsum("bhdn,bhn->bhd", new, Ch)
+    return y.astype(x.dtype), new
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def causal_conv(x, w):
+    """x [B,S,C], w [K,C] depthwise causal conv."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    return out.astype(x.dtype)
+
+
+def conv_step(conv_state, xt, w):
+    """conv_state [B,K-1,C], xt [B,C] -> (y [B,C], new_state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([conv_state, xt[:, None, :]], axis=1)  # [B,K,C]
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w).astype(xt.dtype)
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# full mamba block
+# ---------------------------------------------------------------------------
+
+def apply_mamba(pctx, cfg: ModelConfig, p, x, *, state: Optional[SSMState] = None,
+                layout=None) -> Tuple[jax.Array, Optional[SSMState]]:
+    """x [B,S,H] canonical -> (y canonical, updated recurrent state)."""
+    s = cfg.ssm
+    B_, S, H = x.shape
+    Di, nh = d_inner(cfg), n_heads(cfg)
+    hspec = pctx.heads_spec(layout) if layout is not None else None
+
+    z = pctx.mixer_in(x, p["wz"])                       # [B,S,Di] full seq
+    xs = pctx.mixer_in(x, p["wx"])
+    Bp = pctx.small_proj(x, p["wB"])                    # [B,S,g*ds] (tiny)
+    Cp = pctx.small_proj(x, p["wC"])
+    dt = pctx.small_proj(x, p["wdt"])                   # [B,S,nh]
+
+    conv_in = jnp.concatenate([xs, Bp, Cp], axis=-1)
+    new_conv = None
+    if state is not None and S == 1:
+        cy, new_conv = conv_step(state.conv, conv_in[:, 0, :], p["conv_w"])
+        conv_out = cy[:, None, :]
+    else:
+        conv_out = causal_conv(conv_in, p["conv_w"])
+        if state is not None:
+            K = s.conv_kernel
+            new_conv = conv_in[:, -(K - 1):, :]
+    conv_out = jax.nn.silu(conv_out)
+
+    xs = conv_out[..., :Di]
+    Bp = conv_out[..., Di:Di + s.n_groups * s.state_dim]
+    Cp = conv_out[..., Di + s.n_groups * s.state_dim:]
+
+    xh = pctx.constraint(xs.reshape(B_, S, nh, s.head_dim), hspec)
+    Bh = Bp.reshape(B_, S, s.n_groups, s.state_dim)
+    Ch = Cp.reshape(B_, S, s.n_groups, s.state_dim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_ssm = None
+    if state is not None and S == 1:
+        y, new_ssm = ssd_decode_step(state.ssm, xh[:, 0], dtv[:, 0], A,
+                                     Bh[:, 0], Ch[:, 0])
+        y = y[:, None]
+    else:
+        init = state.ssm if state is not None else None
+        y, fin = ssd_chunked(xh, dtv, A, Bh, Ch, chunk=min(s.chunk_size, S),
+                             init_state=init)
+        if state is not None:
+            new_ssm = fin
+
+    y = y + xh * p["D"][None, None, :, None]            # skip connection
+    y = pctx.constraint(y, hspec)
+    y = y.reshape(B_, S, Di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = L.apply_norm("rmsnorm", {"scale": p["norm"]}, y * jax.nn.silu(z))
+    out = pctx.mixer_out(y, p["wo"])
+    new_state = SSMState(new_conv, new_ssm) if state is not None else None
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    return SSMState(
+        jnp.zeros((batch, s.conv_kernel - 1, conv_channels(cfg)), dtype),
+        jnp.zeros((batch, n_heads(cfg), s.head_dim, s.state_dim), jnp.float32))

@@ -1,0 +1,73 @@
+"""AdamW with warmup-cosine schedule, global-norm clipping, and ZeRO-1-ready
+state layout (parallel/zero.py shards these states over the data axis).
+
+Implemented from scratch (no optax in this environment): functional
+(init, update) pair operating on pytrees.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import RunConfig
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def init(params) -> AdamState:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), p)
+    return AdamState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+
+def lr_schedule(rc: RunConfig, step, total_steps: int = 10_000):
+    warm = jnp.minimum(1.0, (step + 1) / max(1, rc.warmup_steps))
+    prog = jnp.clip((step - rc.warmup_steps) /
+                    max(1, total_steps - rc.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return rc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-6))
+    return jax.tree.map(lambda a: (a * scale).astype(a.dtype), grads), g
+
+
+def update(params, grads, state: AdamState, rc: RunConfig,
+           total_steps: int = 10_000) -> Tuple[Any, AdamState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(rc, state.step, total_steps)
+    b1, b2, eps = rc.beta1, rc.beta2, 1e-8
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / (1 - b1 ** step)
+        vh = v2 / (1 - b2 ** step)
+        delta = mh / (jnp.sqrt(vh) + eps) + rc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,239 @@
+"""Parallel execution context — the dispatch hub between model code and strategies.
+
+Model code never touches axis names or collectives directly; it calls the methods
+here.  ``PCtx`` binds (mesh, ParallelConfig, mode) and routes every projection to:
+
+  * ``hecaton``  — paper Alg. 1 shard_map ops (core/hecaton.py) for train/prefill;
+  * ``megatron`` — 1D-TP column/row-parallel with GSPMD-inserted all-reduce
+                   (the paper's baseline, parallel/megatron.py);
+  * plain einsum when ``mesh is None`` (smoke tests) .
+
+Decode mode always uses the 1D layout over the *combined* model axes: Alg. 1's
+token-scatter needs >= sqrt(N) tokens per step, and the paper targets training /
+finetuning (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.config import ParallelConfig
+from repro.core import hecaton as hec
+from repro.parallel import megatron as meg
+from repro.parallel import sharding as shd
+
+
+def _einsum(x, w):
+    return jnp.einsum("...h,ho->...o", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+@dataclass(frozen=True)
+class PCtx:
+    mesh: Optional[Mesh]
+    pcfg: ParallelConfig
+    mode: str = "train"                    # train | prefill | decode
+
+    # ------------------------------------------------------------------
+    @property
+    def ax(self) -> Optional[shd.AxisInfo]:
+        return shd.axis_info(self.mesh, self.pcfg.strategy)
+
+    @property
+    def use_hecaton(self) -> bool:
+        return (self.mesh is not None and self.pcfg.strategy == "hecaton"
+                and self.mode in ("train", "prefill"))
+
+    @property
+    def data_axes(self) -> Tuple[str, ...]:
+        a = self.ax
+        return a.data_axes if a else ()
+
+    def constraint(self, x, spec: Optional[P]):
+        if self.mesh is None or spec is None:
+            return x
+        return lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    # ------------------------------------------------------------------
+    # canonical layouts
+    # ------------------------------------------------------------------
+    def canon(self, x):
+        """Constrain [B,S,H] to the canonical block-boundary layout.
+
+        Decode (S=1) cannot token-scatter: canonical is batch-over-data only,
+        hidden replicated (1D-TP residual layout)."""
+        a = self.ax
+        if a is None:
+            return x
+        if self.mode == "decode":
+            d = a.data_axes[0] if len(a.data_axes) == 1 else a.data_axes
+            return self.constraint(x, P(d, None, None))
+        return self.constraint(x, shd.act_canonical(a))
+
+    def mixer_spec(self) -> Optional[P]:
+        return shd.act_mixer(self.ax)
+
+    # ------------------------------------------------------------------
+    # projections
+    # ------------------------------------------------------------------
+    def _cast(self, x, *ws):
+        """Cast weights to the activation dtype BEFORE any gather/shard_map —
+        fp32 weights entering collectives double the FSDP/ZeRO gather bytes and
+        silently promote the matmuls to fp32 (Perf iteration 1, EXPERIMENTS.md)."""
+        return tuple(w if w is None else w.astype(x.dtype) for w in ws)
+
+    def ffn(self, x, w1, w2, act_fn: Callable, w1b=None):
+        """Fused FFN (paper §IV-B)."""
+        w1, w2, w1b = self._cast(x, w1, w2, w1b)
+        if self.use_hecaton:
+            a = self.ax
+            return hec.ffn_block(x, w1, w2, mesh=self.mesh, act_fn=act_fn,
+                                 t_ax=a.t_ax, h_ax=a.h_ax, data_axes=a.data_axes,
+                                 w1b=w1b)
+        if self.mesh is not None:
+            return meg.ffn(self, x, w1, w2, act_fn, w1b)
+        h = _einsum(x, w1)
+        h = act_fn(h) * _einsum(x, w1b) if w1b is not None else act_fn(h)
+        return _einsum(h, w2)
+
+    def mixer_in(self, x, w):
+        """Projection into a token mixer: out has full sequence, hidden over grid."""
+        (w,) = self._cast(x, w)
+        if self.use_hecaton:
+            a = self.ax
+            return hec.mixer_in(x, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
+                                data_axes=a.data_axes)
+        if self.mesh is not None:
+            return meg.col_parallel(self, x, w)
+        return _einsum(x, w)
+
+    def mixer_out(self, y, w):
+        """Projection out of a token mixer back to canonical layout."""
+        (w,) = self._cast(y, w)
+        if self.use_hecaton:
+            a = self.ax
+            return hec.mixer_out(y, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
+                                 data_axes=a.data_axes)
+        if self.mesh is not None:
+            return meg.row_parallel(self, y, w)
+        return _einsum(y, w)
+
+    def embed(self, table, ids, compute_dtype):
+        """Vocab-parallel embedding lookup (core/hecaton.embed_2d)."""
+        if self.mesh is None:
+            return jnp.take(table, ids, axis=0).astype(compute_dtype)
+        a = self.ax
+        B, S = ids.shape
+        batch_ok = B % a.n_data == 0
+        if self.pcfg.strategy == "hecaton":
+            seq_ok = (self.mode != "decode" and S % a.size(a.t_ax) == 0
+                      and S > 1)
+            return hec.embed_2d(ids, table, mesh=self.mesh, t_ax=a.t_ax,
+                                h_ax=a.h_ax, data_axes=a.data_axes,
+                                compute_dtype=compute_dtype,
+                                seq_sharded=seq_ok, batch_sharded=batch_ok)
+        return hec.embed_2d(ids, table, mesh=self.mesh, t_ax="model",
+                            h_ax=None, data_axes=a.data_axes,
+                            compute_dtype=compute_dtype, seq_sharded=False,
+                            batch_sharded=batch_ok)
+
+    def small_proj(self, x, w):
+        """Tiny projection (mamba dt/B/C, routers) whose output dim is too small
+        to 2D-tile: plain einsum from canonical layout; GSPMD sums the h_ax
+        partials; output replicated over model axes (it is broadcast anyway)."""
+        (w,) = self._cast(x, w)
+        y = _einsum(x, w)
+        return self.constraint(y, self.replicated_bsh())
+
+    def lm_head(self, x, w):
+        """Final projection to (sharded) vocab logits.
+
+        hecaton: one seq-scatter linear — logits come out tokens-over-h_ax,
+        vocab-over-t_ax; the fused loss consumes that layout directly.
+        """
+        (w,) = self._cast(x, w)
+        if self.use_hecaton:
+            a = self.ax
+            return hec.linear_seq_scatter(x, w, mesh=self.mesh, t_ax=a.t_ax,
+                                          h_ax=a.h_ax, data_axes=a.data_axes)
+        if self.mesh is not None:
+            return meg.col_parallel(self, x, w)   # vocab over model axis
+        return _einsum(x, w)
+
+    def logits_spec(self) -> Optional[P]:
+        a = self.ax
+        if a is None:
+            return None
+        d = shd._one(a.data_axes)
+        if self.use_hecaton:
+            return P(d, a.h_ax, a.t_ax)
+        return P(d, None, shd._one(a.model_axes))
+
+    def canon_spec_for(self, shape_seq_divisible: bool) -> Optional[P]:
+        a = self.ax
+        if a is None:
+            return None
+        d = shd._one(a.data_axes)
+        if self.mode == "decode" or not shape_seq_divisible:
+            return P(d, None, None)
+        return shd.act_canonical(a)
+
+    # ------------------------------------------------------------------
+    # attention layout
+    # ------------------------------------------------------------------
+    def attn_layout(self, n_heads: int, global_batch: int) -> shd.AttnLayout:
+        a = self.ax
+        if a is None:
+            return shd.AttnLayout((), (), "single device")
+        return shd.solve_attn_layout(a, n_heads,
+                                     max(1, global_batch // a.n_data),
+                                     prefer=self.pcfg.attn_layout)
+
+    def heads_spec(self, layout: shd.AttnLayout) -> Optional[P]:
+        """Spec for [B, S, n_heads, head_dim]."""
+        if self.mesh is None:
+            return None
+        return layout.q_spec()
+
+    # ------------------------------------------------------------------
+    # param specs
+    # ------------------------------------------------------------------
+    def w_in_spec(self) -> Optional[P]:
+        """Weight [H, O] consumed from canonical layout (QKV, up-proj, lm head)."""
+        a = self.ax
+        if a is None:
+            return None
+        if self.pcfg.strategy == "hecaton":
+            return P(a.h_ax, a.t_ax)
+        return P(None, "model")
+
+    def w_out_spec(self) -> Optional[P]:
+        """Weight of a mixer-out / second fused linear (swapped roles)."""
+        a = self.ax
+        if a is None:
+            return None
+        if self.pcfg.strategy == "hecaton":
+            return P(a.t_ax, a.h_ax)
+        return P("model", None)
+
+    def vocab_spec(self) -> Optional[P]:
+        return shd.vocab_spec(self.ax)
+
+    def replicated(self) -> Optional[P]:
+        return None if self.mesh is None else P()
+
+    def replicated_bsh(self) -> Optional[P]:
+        """[B,S,*] with only batch sharded (small broadcast tensors: B/C/dt)."""
+        a = self.ax
+        if a is None:
+            return None
+        d = a.data_axes[0] if len(a.data_axes) == 1 else a.data_axes
+        return P(d, None, None)

@@ -1,0 +1,63 @@
+"""Megatron-style 1D tensor parallelism — the paper's baseline ("F" in Fig. 8).
+
+Column-parallel then row-parallel linears over a single ``model`` axis; the row
+output is all-reduced (GSPMD inserts the flat-ring all-reduce when we constrain the
+output back to the model-replicated layout).  Activations are replicated over the
+model axis — exactly the property the paper criticizes in §V-A(b): per-device
+activation memory does NOT shrink with N, which our memory_analysis dry-runs surface.
+
+An optional *sequence-parallel* variant (Korthikanti et al.) is provided as a
+beyond-paper optimization knob for the baseline: activations outside matmuls are
+sharded over the sequence dim, turning each all-reduce into AG+RS (same volume as
+flat-ring all-reduce, lower memory).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+def _einsum(x, w):
+    return jnp.einsum("...h,ho->...o", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def _model_axes(pctx):
+    a = pctx.ax
+    return a.model_axes if len(a.model_axes) > 1 else a.model_axes[0]
+
+
+def _dax(pctx):
+    a = pctx.ax
+    return a.data_axes[0] if len(a.data_axes) == 1 else a.data_axes
+
+
+def col_parallel(pctx, x, w):
+    """y = x @ W with W's output dim sharded over the model axes."""
+    m, d = _model_axes(pctx), _dax(pctx)
+    x = pctx.constraint(x, P(d, None, None))
+    w = pctx.constraint(w, P(None, m))
+    y = _einsum(x, w)
+    return pctx.constraint(y, P(d, None, m))
+
+
+def row_parallel(pctx, y, w):
+    """out = y @ W with W's input dim sharded; output all-reduced to replicated."""
+    m, d = _model_axes(pctx), _dax(pctx)
+    y = pctx.constraint(y, P(d, None, m))
+    w = pctx.constraint(w, P(m, None))
+    out = _einsum(y, w)
+    # constraining to model-replicated forces GSPMD's all-reduce (flat ring on ICI)
+    return pctx.constraint(out, P(d, None, None))
+
+
+def ffn(pctx, x, w1, w2, act_fn, w1b=None):
+    h = col_parallel(pctx, x, w1)
+    if w1b is not None:
+        h = act_fn(h) * col_parallel(pctx, x, w1b)
+    else:
+        h = act_fn(h)
+    return row_parallel(pctx, h, w2)

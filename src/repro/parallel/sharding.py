@@ -1,0 +1,154 @@
+"""Sharding layout rules + a small layout solver.
+
+Centralizes every PartitionSpec decision so models never hardcode axis names.
+The solver picks attention-head/batch layouts subject to divisibility — e.g.
+minicpm3's 40 heads cannot shard over a 16-way grid, so heads go on ``my`` (4) and
+the batch dimension absorbs ``mx`` when divisible (paper §VI-F's layout-flexibility
+point: Hecaton accommodates non-square/non-dividing layouts by re-mapping work).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+@dataclass(frozen=True)
+class AxisInfo:
+    """Mesh axis bookkeeping for one strategy/mode."""
+    data_axes: Tuple[str, ...]      # batch-sharding axes, e.g. ("pod", "data")
+    t_ax: Optional[str]             # hecaton token axis ("mx"), None for megatron
+    h_ax: Optional[str]             # hecaton hidden axis ("my")
+    model_axes: Tuple[str, ...]     # combined model axes, e.g. ("mx","my") or ("model",)
+    sizes: dict                     # axis -> size
+
+    @property
+    def n_data(self) -> int:
+        return int(_prod(self.sizes[a] for a in self.data_axes))
+
+    @property
+    def n_model(self) -> int:
+        return int(_prod(self.sizes[a] for a in self.model_axes))
+
+    def size(self, ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            return int(_prod(self.sizes[a] for a in ax))
+        return self.sizes[ax]
+
+
+def _prod(it):
+    r = 1
+    for v in it:
+        r *= v
+    return r
+
+
+def axis_info(mesh: Optional[Mesh], strategy: str) -> Optional[AxisInfo]:
+    if mesh is None:
+        return None
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    if strategy == "hecaton":
+        return AxisInfo(data_axes, "mx", "my", ("mx", "my"), sizes)
+    return AxisInfo(data_axes, None, None, ("model",), sizes)
+
+
+# ---------------------------------------------------------------------------
+# Attention layout solver
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttnLayout:
+    """How to shard [B, S, n_heads, head_dim] inside the mixer."""
+    batch_axes: Tuple[str, ...]     # axes sharding B
+    head_axes: Tuple[str, ...]      # axes sharding n_heads
+    note: str = ""
+
+    def q_spec(self) -> P:
+        b = self.batch_axes if len(self.batch_axes) != 1 else self.batch_axes[0]
+        h = self.head_axes if len(self.head_axes) != 1 else (
+            self.head_axes[0] if self.head_axes else None)
+        return P(b if self.batch_axes else None, None, h if self.head_axes else None,
+                 None)
+
+
+def solve_attn_layout(ax: AxisInfo, n_heads: int, batch_per_data: int,
+                      prefer: str = "auto") -> AttnLayout:
+    """Choose head/batch sharding over the model axes.
+
+    Preference order (most parallel first):
+      1. heads over all model axes;
+      2. heads over h_ax, batch over t_ax;
+      3. heads over h_ax only (t_ax replicated — flagged in note);
+      4. batch over all model axes (head-replicated);
+      5. fully replicated over model axes (flagged).
+    ``prefer='heads'`` skips the batch-absorbing options (2): batch-over-mx
+    layouts force per-layer collective-permute reshards between the mixer
+    projections (hidden over the full grid) and the attention view.
+    """
+    m_axes, sz = ax.model_axes, ax.size
+    if divides(n_heads, ax.n_model):
+        return AttnLayout(ax.data_axes, m_axes, "heads fully sharded")
+    if ax.t_ax is not None:
+        if (prefer != "heads" and divides(n_heads, sz(ax.h_ax))
+                and divides(batch_per_data, sz(ax.t_ax))):
+            return AttnLayout(ax.data_axes + (ax.t_ax,), (ax.h_ax,),
+                              "heads on my, batch on mx")
+        if (prefer != "heads" and divides(n_heads, sz(ax.t_ax))
+                and divides(batch_per_data, sz(ax.h_ax))):
+            return AttnLayout(ax.data_axes + (ax.h_ax,), (ax.t_ax,),
+                              "heads on mx, batch on my")
+        if divides(n_heads, sz(ax.h_ax)):
+            return AttnLayout(ax.data_axes, (ax.h_ax,),
+                              f"heads on my only; {ax.t_ax} replicated (compute x{sz(ax.t_ax)})")
+    if divides(batch_per_data, ax.n_model):
+        return AttnLayout(ax.data_axes + m_axes, (),
+                          "batch over model axes, heads replicated-per-shard")
+    return AttnLayout(ax.data_axes, (), "WARNING: attention replicated over model axes")
+
+
+# ---------------------------------------------------------------------------
+# Canonical activation / param spec helpers
+# ---------------------------------------------------------------------------
+
+def act_canonical(ax: Optional[AxisInfo]) -> Optional[P]:
+    """[B, S, H] spec at block boundaries."""
+    if ax is None:
+        return None
+    d = _one(ax.data_axes)
+    if ax.t_ax is not None:
+        return P(d, ax.t_ax, ax.h_ax)
+    return P(d, None, None)            # megatron: activations model-replicated
+
+
+def act_mixer(ax: Optional[AxisInfo]) -> Optional[P]:
+    """[B, S, Hm] spec inside a mixer: full seq, hidden over all model axes."""
+    if ax is None:
+        return None
+    d = _one(ax.data_axes)
+    return P(d, None, _one(ax.model_axes))
+
+
+def vocab_spec(ax: Optional[AxisInfo]) -> Optional[P]:
+    """Embedding table [V, H]."""
+    if ax is None:
+        return None
+    if ax.t_ax is not None:
+        return P(ax.t_ax, ax.h_ax)
+    return P("model", None)
+
+
+def _one(axes: Sequence[str]):
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes

@@ -1,0 +1,140 @@
+"""PartitionSpec trees for params / optimizer states / batches / caches.
+
+Specs are derived by walking the parameter tree (from ``jax.eval_shape``) and
+pattern-matching leaf names — the single place where the paper's weight-tiling
+rules (W[j,i] on die (i,j), transposed second fused layer, EPxTP expert tiling)
+are spelled out.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.parallel import sharding as shd
+from repro.parallel import zero
+
+# leaf-name -> role
+W_IN = {"wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "wz", "wx",
+        "w1", "w1b", "w"}
+W_MOE = {"we1", "we1b", "we2"}
+W_OUT = {"wo", "w2"}
+REPL = {"scale", "bias", "norm", "q_norm", "k_norm", "kv_norm", "A_log", "D",
+        "dt_bias", "conv_w", "wB", "wC", "wdt", "router"}
+
+
+def _leaf_spec(path: Tuple[str, ...], shape, ax: shd.AxisInfo,
+               strategy: str, fused_loss: bool = False) -> P:
+    name = path[-1]
+    rank = len(shape)
+    under_moe = name in W_MOE
+    lead = rank - 2                                   # stacked layer dims
+    if strategy == "hecaton":
+        t, h = ax.t_ax, ax.h_ax
+        if name == "table":
+            return P(t, h)
+        if fused_loss and len(path) >= 2 and path[-2] == "lm_head":
+            return P(None, h)      # fused loss: vocab over h_ax, H unsharded
+        if under_moe:
+            # [*, E, H, F] or [*, E, F, H]: experts over t(mx), ffn width over h(my)
+            if name in ("we1", "we1b"):
+                return P(*([None] * (rank - 3)), t, None, h)
+            return P(*([None] * (rank - 3)), t, h, None)
+        if name in REPL:
+            return P()
+        if name in W_IN:
+            return P(*([None] * lead), h, t)
+        if name in W_OUT:
+            return P(*([None] * lead), t, h)
+        return P()
+    # megatron 1D
+    m = "model"
+    if name == "table":
+        return P(m, None)
+    if under_moe:
+        if name in ("we1", "we1b"):
+            return P(*([None] * (rank - 3)), None, None, m)
+        return P(*([None] * (rank - 3)), None, m, None)
+    if name in REPL:
+        return P()
+    if name in W_IN:
+        return P(*([None] * lead), None, m)
+    if name in W_OUT:
+        return P(*([None] * lead), m, None)
+    return P()
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(params_shape, mesh: Optional[Mesh], pcfg: ParallelConfig):
+    """Spec tree matching a params (or eval_shape) tree."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, params_shape)
+    ax = shd.axis_info(mesh, pcfg.strategy)
+
+    def f(kp, leaf):
+        spec = _leaf_spec(_path_names(kp), leaf.shape, ax, pcfg.strategy,
+                          fused_loss=getattr(pcfg, "fused_loss", False))
+        if pcfg.fsdp:
+            spec = zero.state_spec(spec, leaf.shape, ax.data_axes, mesh, True)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def opt_state_specs(pspecs, params_shape, mesh: Optional[Mesh],
+                    pcfg: ParallelConfig):
+    """AdamState specs: step replicated; mu/nu = param spec + data axis (ZeRO-1)."""
+    if mesh is None:
+        return None
+    ax = shd.axis_info(mesh, pcfg.strategy)
+
+    def f(spec, leaf):
+        return zero.state_spec(spec, leaf.shape, ax.data_axes, mesh, pcfg.zero1)
+
+    moment = jax.tree.map(f, pspecs, params_shape)
+    from repro.optim.adamw import AdamState
+    return AdamState(P(), moment, moment)
+
+
+def batch_specs(mesh: Optional[Mesh], pcfg: ParallelConfig, *, microbatched: bool,
+                keys=("tokens", "labels")):
+    """Input batch specs: batch over data axes; sequence over t_ax (hecaton)."""
+    if mesh is None:
+        return {k: None for k in keys}
+    ax = shd.axis_info(mesh, pcfg.strategy)
+    d = shd._one(ax.data_axes)
+    seq_ax = ax.t_ax if pcfg.strategy == "hecaton" else None
+    lead = (None,) if microbatched else ()
+    out = {}
+    for k in keys:
+        if k in ("tokens", "labels", "loss_mask", "positions"):
+            out[k] = P(*lead, d, seq_ax)
+        elif k in ("patches", "frames"):
+            out[k] = P(*lead, d, seq_ax, ax.h_ax if ax.h_ax else None)
+        else:
+            out[k] = P(*lead)
+    return out
+
+
+def sharding_tree(spec_tree, mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), spec_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None)

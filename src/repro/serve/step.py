@@ -1,0 +1,128 @@
+"""Serving step builders: prefill (build KV/SSM caches from a prompt batch) and
+decode (one token against a filled cache).
+
+Decode runs the 1D-TP layout over the combined model axes (DESIGN.md §4 — the
+paper's Alg. 1 token-scatter needs >= sqrt(N) tokens/step and targets training);
+prefill reuses the full Hecaton dataflow since it is forward-pass-shaped.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.models import attention as ATT
+from repro.models import lm
+from repro.parallel import sharding as shd
+from repro.parallel.context import PCtx
+
+
+def build_prefill(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig, mesh,
+                  *, compute_dtype=jnp.bfloat16):
+    pctx = PCtx(mesh, pcfg, "prefill")
+
+    def prefill(params, batch):
+        B = batch["tokens"].shape[0]
+        caches = lm.init_caches(cfg, B, rc.seq_len, compute_dtype)
+        if cfg.is_encdec:
+            # encode once; cache per-layer cross K/V for decode
+            enc_pctx = pctx
+            frames = batch["frames"].astype(compute_dtype)
+            Fl = frames.shape[1]
+            fpos = jnp.broadcast_to(jnp.arange(Fl, dtype=jnp.int32)[None],
+                                    (B, Fl))
+            from repro.models import blocks as BLK, layers as LY
+            mem = enc_pctx.canon(frames)
+            layout = enc_pctx.attn_layout(cfg.num_heads, B)
+            mem, _, _ = lm._scan_attn_stack(
+                enc_pctx, cfg, params["encoder"], mem, positions=fpos,
+                layout=layout, causal=cfg.encoder_is_causal, caches=None,
+                memory=None, remat="none")
+            mem = LY.apply_norm(cfg.norm_kind, params["enc_norm"], mem)
+
+            def per_layer_kv(p_l):
+                return ATT.cross_kv(enc_pctx, cfg, p_l["xattn"], mem)
+
+            caches["cross"] = jax.lax.map(
+                lambda p_l: per_layer_kv(p_l), params["blocks"])
+        mb = dict(batch)
+        mb["_dtype"] = compute_dtype
+        out = lm.forward(pctx, cfg, params, mb, caches=caches)
+        return out.logits[:, -1:], out.caches
+
+    return prefill
+
+
+def build_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
+                      mesh, *, compute_dtype=jnp.bfloat16):
+    pctx = PCtx(mesh, pcfg, "decode")
+
+    def decode_step(params, caches, tokens, positions):
+        """tokens [B,1]; positions [B,1] absolute positions of the new token."""
+        mb = {"tokens": tokens, "positions": positions, "_dtype": compute_dtype}
+        out = lm.forward(pctx, cfg, params, mb, caches=caches)
+        return out.logits, out.caches
+
+    return decode_step
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# cache sharding specs
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig, mesh, batch: int):
+    """Spec tree for stacked decode caches.
+
+    KV: [L, B, S, nkv, dh] — batch over data axes, kv-heads over a model axis
+    where divisible (solver), else batch absorbs the model axes.
+    SSM states: [L, B, nh, dh, state] similarly.
+    """
+    if mesh is None:
+        return None
+    ax = shd.axis_info(mesh, pcfg.strategy)
+    caches = jax.eval_shape(lambda: lm.init_caches(cfg, batch, 8, jnp.bfloat16))
+
+    def kv_layout(n_heads):
+        return shd.solve_attn_layout(ax, n_heads, max(1, batch // ax.n_data))
+
+    def bspec(lay):
+        # batch=1 cells (long_500k): the data axis is idle; don't shard B.
+        if batch % ax.n_data:
+            return None
+        return shd._one(lay.batch_axes)
+
+    def f(kp, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in kp]
+        rank = len(leaf.shape)
+        if "attn" in names or "cross" in names:
+            lay = kv_layout(cfg.num_kv_heads if cfg.num_kv_heads else 1)
+            b = bspec(lay)
+            h = shd._one(lay.head_axes)
+            if rank == 5:     # [L,B,S,nkv,dh]
+                return P(None, b, None, h, None)
+            if rank == 4:     # MLA [L,B,S,lora]
+                return P(None, b, None, None)
+            if rank == 3:     # MLA k_rope [L,B,S,dr] collapsed or lengths
+                return P(None, b, None)
+            return P()
+        if "mamba" in names:
+            from repro.models import ssm as SSM
+            lay = kv_layout(SSM.n_heads(cfg))
+            b = bspec(lay)
+            h = shd._one(lay.head_axes)
+            if rank == 5:     # ssm state [L,B,nh,dh,state]
+                return P(None, b, h, None, None)
+            if rank == 4:     # conv state [L,B,K-1,C]
+                return P(None, b, None, None)
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(f, caches)

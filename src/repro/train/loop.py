@@ -1,0 +1,48 @@
+"""Training loop: data prefetch, jit'd step, checkpointing, fault hooks.
+
+Pure-state design: the loop is a fold of ``train_step`` over a seekable data
+stream, so (checkpoint, step) fully determines the future — the property the
+supervisor (runtime/fault.py) relies on for restart-exactness.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import FailureInjector, StepTimer
+
+
+def train(train_step: Callable, state: Dict, data_iter, *,
+          start_step: int = 0, num_steps: int = 100,
+          ckpt: Optional[CheckpointManager] = None, ckpt_every: int = 50,
+          log_every: int = 10, injector: Optional[FailureInjector] = None,
+          timer: Optional[StepTimer] = None,
+          on_straggler: Optional[Callable] = None,
+          log_fn: Callable = print) -> Dict:
+    params, opt_state = state["params"], state["opt_state"]
+    history = state.setdefault("history", [])
+    for step in range(start_step, num_steps):
+        batch = next(data_iter)
+        if injector is not None:
+            injector.check(step)
+        t0 = time.time()
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.time() - t0
+        if timer is not None and timer.record(dt) and on_straggler:
+            on_straggler(step, timer)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(metrics["loss"])
+            history.append((step, loss))
+            log_fn(f"step {step:5d} loss {loss:.4f} "
+                   f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
+                   f"{dt*1e3:.0f}ms")
+        if ckpt is not None and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, {"params": params, "opt_state": opt_state})
+    state.update(params=params, opt_state=opt_state)
+    return state

@@ -1,0 +1,32 @@
+"""Multi-device numerics: run the tests/_mp/ scripts in subprocesses with a
+fake 8-device CPU topology (jax locks the device count at first init, so these
+cannot share the main pytest process)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, os.path.join(ROOT, "tests", "_mp",
+                                                     script)],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+def test_hecaton_ops_numerics():
+    out = _run("check_hecaton.py")
+    assert "ALL HECATON NUMERICS CHECKS PASSED" in out
+
+
+def test_model_parallel_numerics():
+    out = _run("check_model_parallel.py")
+    assert "ALL MODEL-PARALLEL CHECKS PASSED" in out

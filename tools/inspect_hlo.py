@@ -1,0 +1,37 @@
+"""Dump largest tensors + collectives (with op_name metadata) from a dry-run cell."""
+import os, sys, re
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+sys.argv, argv = sys.argv[:1], sys.argv
+import jax
+from repro.launch.dryrun import lower_cell
+from repro.roofline.hlo import _shapes_in, DTYPE_BYTES, group_size
+import math
+
+arch, shape, strategy, mp = argv[1], argv[2], argv[3], argv[4] == "multi"
+lowered, meta = lower_cell(arch, shape, strategy, mp)
+compiled = lowered.compile()
+txt = compiled.as_text()
+rows, colls = [], []
+for ln in txt.splitlines():
+    ls = ln.strip()
+    m = re.match(r"(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)", ls)
+    if not m: continue
+    rhs = m.group(2)
+    shapes = _shapes_in(rhs.split(" ")[0] if not rhs.startswith("(") else rhs.split(")")[0])
+    b = sum(DTYPE_BYTES[dt]*math.prod(d or [1]) for dt, d in shapes)
+    op = re.search(r"\]\{?[0-9,]*\}?\s+([a-z\-]+)\(", rhs)
+    opname = op.group(1) if op else "?"
+    meta_m = re.search(r'op_name="([^"]+)"', ls)
+    mn = meta_m.group(1)[-110:] if meta_m else ""
+    if opname in ("all-gather","all-reduce","reduce-scatter","all-to-all","collective-permute"):
+        colls.append((b, opname, group_size(ls), mn))
+    if b > 100e6 and opname not in ("parameter","tuple","get-tuple-element"):
+        rows.append((b, opname, mn))
+rows.sort(reverse=True)
+colls.sort(reverse=True)
+print("=== largest tensors ===")
+for b, op, mn in rows[:25]:
+    print(f"{b/2**30:8.2f}GiB {op:18s} {mn}")
+print("=== largest collectives ===")
+for b, op, g, mn in colls[:25]:
+    print(f"{b/2**20:8.1f}MiB {op:18s} g={g:3d} {mn}")
