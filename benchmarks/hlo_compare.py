@@ -1,6 +1,10 @@
 """Measured (compiled-HLO) per-step collective bytes: hecaton vs megatron on a
-fake 8-device mesh — the empirical companion to comm_model.py's theory.
-Runs in a subprocess (needs its own XLA device-count flag)."""
+fake 8-device mesh — the empirical companion to comm_model.py's theory — plus
+the overlap counter: per-mode (none/ring/bidir) collective-permute vs bulk
+all-gather/reduce-scatter bytes of one Hecaton FFN block, forward and backward,
+proving the ring decomposition replaces every bulk collective in the layer hot
+path with a ppermute chain.  Runs in subprocesses (each needs its own XLA
+device-count flag)."""
 import json
 import os
 import subprocess
@@ -53,11 +57,46 @@ print("RESULT " + json.dumps(out))
 '''
 
 
-def run():
+# Overlap counter: one Hecaton FFN block (fwd + grad) compiled per overlap
+# mode on an 8-device 2x2x2 mesh; reports per-collective bytes and op counts.
+SCRIPT_OVERLAP = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import hecaton as H
+from repro.roofline.hlo import analyze
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("data", "mx", "my"))
+B, T, Hd, F = 4, 64, 128, 512
+sh = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+shards = (NamedSharding(mesh, P("data", "mx", "my")),
+          NamedSharding(mesh, P("my", "mx")), NamedSharding(mesh, P("mx", "my")))
+out = {}
+for ov in ("none", "ring", "bidir"):
+    def ffn(x, w1, w2, _ov=ov):
+        return H.ffn_block(x, w1, w2, mesh=mesh, act_fn=jax.nn.silu,
+                           t_ax="mx", h_ax="my", overlap=_ov)
+    def step(x, w1, w2, _f=ffn):
+        return jax.grad(lambda *a: _f(*a).sum(), argnums=(0, 1, 2))(x, w1, w2)
+    res = {}
+    for tag, fn in (("fwd", ffn), ("fwd_bwd", step)):
+        c = jax.jit(fn, in_shardings=shards).lower(
+            sh((B, T, Hd)), sh((Hd, F)), sh((F, Hd))).compile()
+        r = analyze(c.as_text())
+        res[tag] = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
+    out[ov] = res
+print("RESULT " + json.dumps(out))
+'''
+
+
+def _run_script(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
-    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
                        text=True, env=env, timeout=900)
     if r.returncode != 0:
         return {"error": r.stderr[-500:]}
@@ -65,13 +104,38 @@ def run():
     return json.loads(line[len("RESULT "):])
 
 
+def run():
+    return _run_script(SCRIPT)
+
+
+def run_overlap():
+    """Per-overlap-mode collective bytes/counts of one FFN block (fwd, fwd+bwd).
+
+    Returns {mode: {"fwd"|"fwd_bwd": {"bytes": {coll: B}, "count": {coll: n}}}}.
+    The ring/bidir modes must show zero bulk all-gather/reduce-scatter and a
+    collective-permute chain instead (asserted by tests/test_overlap.py)."""
+    return _run_script(SCRIPT_OVERLAP)
+
+
 def main(emit):
     out = run()
     if "error" in out:
         emit("hlo_compare", 0.0, "ERROR")
-        return out
-    h, m = out["hecaton"]["coll_bytes"], out["megatron"]["coll_bytes"]
-    emit("hlo_measured_bytes_hecaton", 0.0, f"{h/1e6:.1f}MB")
-    emit("hlo_measured_bytes_megatron", 0.0, f"{m/1e6:.1f}MB")
-    emit("hlo_measured_ratio_meg_over_hec", 0.0, f"{m/h:.2f}x")
-    return out
+    else:
+        h, m = out["hecaton"]["coll_bytes"], out["megatron"]["coll_bytes"]
+        emit("hlo_measured_bytes_hecaton", 0.0, f"{h/1e6:.1f}MB")
+        emit("hlo_measured_bytes_megatron", 0.0, f"{m/1e6:.1f}MB")
+        emit("hlo_measured_ratio_meg_over_hec", 0.0, f"{m/h:.2f}x")
+    ov = run_overlap()
+    if "error" in ov:
+        emit("hlo_overlap", 0.0, "ERROR")
+        return {"compare": out, "overlap": ov}
+    for mode, res in ov.items():
+        b = res["fwd_bwd"]["bytes"]
+        cp = b.get("collective-permute", 0.0)
+        bulk = b.get("all-gather", 0.0) + b.get("reduce-scatter", 0.0)
+        n_cp = res["fwd_bwd"]["count"].get("collective-permute", 0)
+        emit(f"hlo_overlap_{mode}_cp_bytes", 0.0,
+             f"{cp/1e3:.1f}KB/{int(n_cp)}ops")
+        emit(f"hlo_overlap_{mode}_bulk_bytes", 0.0, f"{bulk/1e3:.1f}KB")
+    return {"compare": out, "overlap": ov}

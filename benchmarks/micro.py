@@ -9,8 +9,7 @@ from repro.kernels import ref as R
 
 
 def _time(fn, *args, iters=5):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))     # warm up exactly once (compile + run)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

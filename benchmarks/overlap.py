@@ -1,0 +1,83 @@
+"""Wall-time comparison of bulk vs ring vs bidir collective matmuls.
+
+Times one Hecaton FFN block and one seq-scatter linear (forward + backward)
+per ``ParallelConfig.overlap`` mode on a multi-device CPU mesh and emits
+``overlap_*`` rows with per-step time and speedup vs the bulk path.
+
+Caveat printed into the derived column: a host-CPU mesh emulates the topology
+but has no async collective engine, so the ring decomposition pays its loop
+overhead without the latency hiding a TPU/GPU scheduler provides — the numbers
+here track HLO structure (collective-permute chains, step counts), while the
+byte accounting in hlo_compare.py is the hardware-independent signal.
+
+Runs in a subprocess (needs its own XLA device-count flag).
+"""
+
+SCRIPT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core import hecaton as H
+
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("data", "mx", "my"))
+B, T, Hd, F = 8, 256, 256, 1024
+key = jax.random.PRNGKey(0)
+k1, k2, k3 = jax.random.split(key, 3)
+x = jax.device_put(jax.random.normal(k1, (B, T, Hd), jnp.float32),
+                   NamedSharding(mesh, P("data", "mx", "my")))
+w1 = jax.device_put(jax.random.normal(k2, (Hd, F), jnp.float32) / Hd ** 0.5,
+                    NamedSharding(mesh, P("my", "mx")))
+w2 = jax.device_put(jax.random.normal(k3, (F, Hd), jnp.float32) / F ** 0.5,
+                    NamedSharding(mesh, P("mx", "my")))
+
+
+def timeit(fn, *args, iters=10):
+    jax.block_until_ready(fn(*args))          # warm up once (compile + run)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+out = {}
+for ov in ("none", "ring", "bidir"):
+    def ffn_step(x, w1, w2, _ov=ov):
+        def f(*a):
+            return H.ffn_block(*a, mesh=mesh, act_fn=jax.nn.silu,
+                               t_ax="mx", h_ax="my", overlap=_ov).sum()
+        return jax.grad(f, argnums=(0, 1, 2))(x, w1, w2)
+
+    def lin_step(x, w1, _ov=ov):
+        def f(*a):
+            return H.linear_seq_scatter(*a, mesh=mesh, t_ax="mx", h_ax="my",
+                                        overlap=_ov).sum()
+        return jax.grad(f, argnums=(0, 1))(x, w1)
+
+    out[ov] = {"ffn_us": timeit(jax.jit(ffn_step), x, w1, w2),
+               "linear_us": timeit(jax.jit(lin_step), x, w1)}
+print("RESULT " + json.dumps(out))
+'''
+
+
+def run():
+    from benchmarks.hlo_compare import _run_script
+    return _run_script(SCRIPT)
+
+
+def main(emit):
+    out = run()
+    if "error" in out:
+        emit("overlap_bench", 0.0, "ERROR")
+        return out
+    for kind in ("ffn", "linear"):
+        bulk = out["none"][f"{kind}_us"]
+        for mode in ("none", "ring", "bidir"):
+            us = out[mode][f"{kind}_us"]
+            derived = "bulk-baseline" if mode == "none" else \
+                f"{bulk/us:.2f}x_vs_bulk(cpu-emulated)"
+            emit(f"overlap_{kind}_{mode}", us, derived)
+    return out

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   link_latency  — Table IV link-latency proportion
   micro         — kernel reference micro-benchmarks (host wall time)
   hlo_compare   — measured collective bytes hecaton vs megatron (compiled HLO)
+                  + per-overlap-mode collective-permute vs bulk AG/RS bytes
+  overlap       — wall time bulk vs ring vs bidir collective matmuls (CPU mesh)
 """
 import sys
 
@@ -20,9 +22,9 @@ def main() -> None:
         rows.append(f"{name},{us:.2f},{derived}")
 
     from benchmarks import (comm_model, dram, hlo_compare, layout,
-                            link_latency, micro, scaling)
+                            link_latency, micro, overlap, scaling)
     for mod in (comm_model, scaling, dram, layout, link_latency, micro,
-                hlo_compare):
+                hlo_compare, overlap):
         try:
             mod.main(emit)
         except Exception as e:  # keep the harness robust; surface the failure

@@ -1,0 +1,39 @@
+"""Small jax version-compatibility shims.
+
+The repo targets the ``jax.shard_map`` API (jax >= 0.6, ``check_vma=``) but must
+also run on the 0.4.x series the container ships, where shard_map lives in
+``jax.experimental.shard_map`` and the flag is spelled ``check_rep=``.  Same
+story for ``Compiled.cost_analysis()``, which returns a list of per-program
+dicts on old jaxlibs and a plain dict on new ones.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:                                    # jax >= 0.6: public API, check_vma flag
+    _new_shard_map = jax.shard_map
+except AttributeError:
+    _new_shard_map = None
+
+if _new_shard_map is None:
+    from jax.experimental.shard_map import shard_map as _old_shard_map
+
+
+def shard_map(f, mesh, in_specs, out_specs, check=False):
+    """Uniform shard_map with replication checking disabled by default."""
+    if _new_shard_map is not None:
+        return _new_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=check)
+    return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to a single flat dict."""
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)

@@ -161,6 +161,11 @@ class ParallelConfig:
     # fused chunked lm-head+loss (Perf iteration 2): never materializes
     # [tokens, V] logits; vocab sharded over h_ax only.
     fused_loss: bool = True
+    # NoP communication/compute overlap for the hecaton collectives
+    # (core/overlap.py): "none" = bulk-synchronous AG/RS (paper Alg. 1 as
+    # written), "ring" = ppermute-decomposed collective matmuls (AG-matmul /
+    # matmul-RS), "bidir" = half-sized shards circulating both ring directions.
+    overlap: str = "none"
     # microbatches for grad accumulation (paper's mini-batches)
     microbatches: int = 8
     # attention layout preference (see parallel/sharding.py solver)
@@ -170,6 +175,8 @@ class ParallelConfig:
         if self.strategy == "hecaton":
             assert self.mx * self.my == self.model, (
                 f"hecaton grid {self.mx}x{self.my} != model={self.model}")
+        assert self.overlap in ("none", "ring", "bidir"), (
+            f"overlap={self.overlap!r} not in ('none', 'ring', 'bidir')")
 
     @property
     def total_devices(self) -> int:

@@ -33,6 +33,27 @@ recomputes gathers (core/schedule.py).
 
 All functions are no-ops (plain einsums) when ``mesh is None`` so the same model code
 runs single-device smoke tests.
+
+Communication/compute overlap (``overlap=`` on every op, plumbed from
+``ParallelConfig.overlap`` via ``parallel/context.py``):
+
+  * ``"none"``  — bulk-synchronous collectives (lax.all_gather / psum_scatter),
+                  the paper's Algorithm 1 verbatim.
+  * ``"ring"``  — ring-decomposed collective matmuls (core/overlap.py): the
+                  all-gather circulates shards with ``lax.ppermute`` while each
+                  arriving shard is matmul'd (AG-matmul), and the
+                  reduce-scatter folds per-destination matmul tiles into a
+                  circulating accumulator (matmul-RS), so every NoP transfer is
+                  a collective-permute hidden behind a partial matmul — the
+                  paper's §III-B(3) overlap claim made explicit in the HLO.
+  * ``"bidir"`` — same, with half-sized shards circulating in both ring
+                  directions (full-duplex torus links).
+
+The backward pass stays overlapped for free: the ring loops are unrolled linear
+primitives, and JAX transposes ring-AG-matmul into ring-matmul-RS (and vice
+versa) — see core/overlap.py.  Shards that cannot be halved degrade bidir →
+ring per collective with identical numerics, and degenerate (size-1) ring axes
+short-circuit to the bulk op.
 """
 
 from __future__ import annotations
@@ -45,14 +66,16 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+from repro.core import overlap as OV
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                         check_vma=False)
+    return compat.shard_map(f, mesh, in_specs, out_specs)
 
 
 def _ag(x, axis_name: str, dim: int):
@@ -78,17 +101,24 @@ def _mm(x, w, precision=None):
 
 def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
                        t_ax: str, h_ax: str,
-                       data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+                       data_axes: Tuple[str, ...] = ("data",),
+                       overlap: str = "none") -> jax.Array:
     """One Hecaton linear layer (paper Alg. 1 forward, steps 2-5).
 
     x: [B, T_local*t, H_local*h] logically; sharded P(data_axes, t_ax, h_ax).
     w: [H, O] sharded P(h_ax, t_ax)  (the paper's W[j,i] -> die(i,j) placement).
     returns y sharded P(data_axes, h_ax, t_ax)  (transposed tiling).
     """
+    OV.check_mode(overlap)
     if mesh is None:
         return _mm(x, w)
+    n_t, n_h = mesh.shape[t_ax], mesh.shape[h_ax]
 
     def f(xl, wl):
+        if overlap != "none":
+            return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
+                                  n_s=n_h, gather_dim=1, scatter_dim=1,
+                                  overlap=overlap)
         xg = _ag(xl, t_ax, 1)           # Step 3: all-gather tokens within column
         yp = _mm(xg, wl)                # local tile matmul (partial over h_ax)
         return _rs(yp, h_ax, 1)         # Step 4: reduce-scatter tokens within row
@@ -109,17 +139,24 @@ def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 
 def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
              t_ax: str, h_ax: str,
-             data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+             data_axes: Tuple[str, ...] = ("data",),
+             overlap: str = "none") -> jax.Array:
     """Projection *into* a token mixer (QKV / mamba in_proj). Paper Fig. 7(b) steps 1-4+10.
 
     x: [B, T/t_ax, H/h_ax]  ->  out: [B, T(full), O/(t_ax,h_ax)]
     Sequence is gathered (every die sees all tokens of its data shard); output hidden
     is fully sharded over the whole 2D grid: head-sliced, comm-free attention.
     """
+    OV.check_mode(overlap)
     if mesh is None:
         return _mm(x, w)
+    n_t, n_h = mesh.shape[t_ax], mesh.shape[h_ax]
 
     def f(xl, wl):
+        if overlap != "none":
+            return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
+                                  n_s=n_h, gather_dim=1, scatter_dim=2,
+                                  overlap=overlap)
         xg = _ag(xl, t_ax, 1)           # gather sequence within column
         yp = _mm(xg, wl)                # [b, T, O/t_ax] partial over h_ax
         return _rs(yp, h_ax, 2)         # Step 10: reduce-scatter along *hidden*
@@ -134,18 +171,36 @@ def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 
 def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
               t_ax: str, h_ax: str,
-              data_axes: Tuple[str, ...] = ("data",)) -> jax.Array:
+              data_axes: Tuple[str, ...] = ("data",),
+              overlap: str = "none") -> jax.Array:
     """Projection *out of* a token mixer (attention O-proj / mamba out_proj).
 
     Paper Fig. 7(b) steps 12-14: all-gather hidden within row, project, then
     reduce-scatter the sequence back to the canonical tiling.
 
     a: [B, T(full), Hm/(t_ax,h_ax)]  ->  out: [B, T/t_ax, O/h_ax]
+
+    Here the gathered dim is the matmul's *contraction* dim, so the overlapped
+    gather accumulates per-step partial products (ring_ag_matmul_contract)
+    instead of placing tiles.
     """
+    OV.check_mode(overlap)
     if mesh is None:
         return _mm(a, w)
+    n_t, n_h = mesh.shape[t_ax], mesh.shape[h_ax]
 
     def f(al, wl):
+        if overlap != "none":
+            bidir = overlap == "bidir"
+            rs_ok = OV.rs_ok(al.shape[1], n_t)
+            if OV.fuse_side(al.shape[-1], wl.shape[-1]) == "rs" and rs_ok:
+                ag = OV.ring_all_gather(al, h_ax, dim=2, n=n_h, bidir=bidir)
+                return OV.ring_matmul_rs(ag, wl, t_ax, scatter_dim=1, n=n_t,
+                                         bidir=bidir)
+            yp = OV.ring_ag_matmul_contract(al, wl, h_ax, n=n_h, bidir=bidir)
+            if not rs_ok:
+                return _rs(yp, t_ax, 1)
+            return OV.ring_reduce_scatter(yp, t_ax, dim=1, n=n_t, bidir=bidir)
         ag = _ag(al, h_ax, 2)           # Step 12: gather hidden within row
         yp = _mm(ag, wl)                # [b, T, O/h_ax] partial over t_ax
         return _rs(yp, t_ax, 1)         # Step 14: reduce-scatter sequence
@@ -165,7 +220,7 @@ def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 
 def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
               data_axes: Tuple[str, ...] = ("data",),
-              w1b=None):
+              w1b=None, overlap: str = "none"):
     """Fused up/down FFN: two chained seq-scatter linears with swapped axis roles.
 
     After L1 the activation tiling is transposed (tokens on h_ax); L2 runs with the
@@ -173,7 +228,12 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
     layer fusion.  ``w1b`` is an optional second up-projection for gated MLPs
     (SwiGLU/GeGLU): both up-projections read the *same* gathered input, so gating
     adds zero extra communication (the gather is shared — layer fusion again).
+
+    With ``overlap`` enabled the gated path ring-gathers the input once (both
+    up-projections read it) and fuses each projection's reduce-scatter into its
+    matmul loop; the ungated path uses the composed ``ring_linear`` twice.
     """
+    OV.check_mode(overlap)
     if mesh is None:
         h = _mm(x, w1)
         if w1b is not None:
@@ -181,8 +241,30 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
         else:
             h = act_fn(h)
         return _mm(h, w2)
+    n_t, n_h = mesh.shape[t_ax], mesh.shape[h_ax]
+
+    def f_ring(xl, w1l, w2l, *rest):
+        bidir = overlap == "bidir"
+        if rest:                                   # gated: share the gathered x
+            xg = OV.ring_all_gather(xl, t_ax, dim=1, n=n_t, bidir=bidir)
+            if OV.rs_ok(xg.shape[1], n_h):
+                h = OV.ring_matmul_rs(xg, w1l, h_ax, scatter_dim=1, n=n_h,
+                                      bidir=bidir)
+                g = OV.ring_matmul_rs(xg, rest[0], h_ax, scatter_dim=1,
+                                      n=n_h, bidir=bidir)
+            else:
+                h = _rs(_mm(xg, w1l), h_ax, 1)
+                g = _rs(_mm(xg, rest[0]), h_ax, 1)
+            h = act_fn(h) * g
+        else:
+            h = act_fn(OV.ring_linear(xl, w1l, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
+                                      n_s=n_h, overlap=overlap))
+        return OV.ring_linear(h, w2l, g_ax=h_ax, n_g=n_h, s_ax=t_ax, n_s=n_t,
+                              overlap=overlap)
 
     def f(xl, w1l, w2l, *rest):
+        if overlap != "none":
+            return f_ring(xl, w1l, w2l, *rest)
         xg = _ag(xl, t_ax, 1)                      # gather tokens once
         hp = _mm(xg, w1l)
         h = _rs(hp, h_ax, 1)                       # tokens now tiled over h_ax
@@ -270,12 +352,14 @@ def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
 def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
                   loss_mask: Optional[jax.Array], *, mesh: Optional[Mesh],
                   t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
-                  n_chunks: int = 8) -> Tuple[jax.Array, jax.Array]:
+                  n_chunks: int = 8,
+                  overlap: str = "none") -> Tuple[jax.Array, jax.Array]:
     """Returns (sum of masked NLL, mask count) — caller divides.
 
     x [B, S, H] canonical P(d, t_ax, h_ax); w [H, V] P(None, h_ax);
     labels/loss_mask [B, S] P(d, t_ax).
     """
+    OV.check_mode(overlap)
     if loss_mask is None:
         loss_mask = jnp.ones(labels.shape, jnp.float32)
 
@@ -301,11 +385,21 @@ def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
               ll.reshape(b, nc, tc).transpose(1, 0, 2),
               ml.reshape(b, nc, tc).transpose(1, 0, 2))
 
+        n_h = mesh.shape[h_ax]
+
         def chunk(carry, inp):
             xc, lc, mc = inp
-            xg = _ag(xc, h_ax, 2)                     # [b, tc, H] (tiny AG)
-            lg = jnp.einsum("bth,hv->btv", xg, wl,
-                            preferred_element_type=jnp.float32)
+            if overlap != "none":
+                # ring AG-matmul over the contracted hidden dim: the per-chunk
+                # x gather circulates as collective-permutes hidden behind the
+                # per-shard [tc,H/n]@[H/n,V/n] partial matmuls (fp32 accum).
+                lg = OV.ring_ag_matmul_contract(xc, wl, h_ax, n=n_h,
+                                                bidir=overlap == "bidir",
+                                                out_dtype=jnp.float32)
+            else:
+                xg = _ag(xc, h_ax, 2)                 # [b, tc, H] (tiny AG)
+                lg = jnp.einsum("bth,hv->btv", xg, wl,
+                                preferred_element_type=jnp.float32)
             mloc = jnp.max(lg, axis=-1)
             # pmax has no AD rule: gather the per-shard maxima (tiny) instead
             mall = lax.all_gather(lax.stop_gradient(mloc), h_ax, axis=0)
@@ -316,13 +410,16 @@ def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
                       == jnp.arange(v_loc)[None, None, :])
             gold = lax.psum(jnp.sum(lg * onehot, axis=-1), h_ax)
             wm = mc.astype(jnp.float32)
-            return (carry[0] + jnp.sum((lse - gold) * wm),
-                    carry[1] + jnp.sum(wm)), None
+            # rank-1 carry: scalar carries become scalar residuals under
+            # jax.checkpoint, which old shard_map's partial-eval mis-names
+            # (jax<=0.4.x _SpecError); a [2]-vector sidesteps the bug.
+            return carry + jnp.stack([jnp.sum((lse - gold) * wm),
+                                      jnp.sum(wm)]), None
 
         chunk = jax.checkpoint(chunk)                 # recompute logits in bwd
-        (nll, cnt), _ = lax.scan(chunk, (jnp.zeros(()), jnp.zeros(())), xs)
-        nll = lax.psum(nll, data_axes + (t_ax,))
-        cnt = lax.psum(cnt, data_axes + (t_ax,))
+        acc, _ = lax.scan(chunk, jnp.zeros((2,)), xs)
+        nll = lax.psum(acc[0], data_axes + (t_ax,))
+        cnt = lax.psum(acc[1], data_axes + (t_ax,))
         return nll, cnt
 
     d = data_axes if len(data_axes) > 1 else data_axes[0]

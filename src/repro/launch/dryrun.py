@@ -144,7 +144,8 @@ def run_cell(arch, shape, strategy, multi_pod, out_dir):
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         ma = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis_dict
+        ca = cost_analysis_dict(compiled)
         res = RA.from_compiled(
             compiled, arch=arch, shape=shape, mesh_name=meta["mesh_name"],
             strategy=strategy, chips=meta["chips"], cfg=meta["cfg"],

@@ -415,7 +415,8 @@ def train_loss(pctx, cfg: ModelConfig, params, batch, *, remat: str = "fusion"):
             out.hidden.astype(compute_dtype), head_w, batch["labels"], mask,
             mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
             h_ax=a.h_ax if a else "my",
-            data_axes=a.data_axes if a else ("data",))
+            data_axes=a.data_axes if a else ("data",),
+            overlap=pctx.overlap)
         loss = nll / jnp.maximum(cnt, 1.0)
     else:
         out = forward(pctx, cfg, params, batch, remat=remat)

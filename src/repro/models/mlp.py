@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.config import ModelConfig
 from repro.models import layers as L
 
@@ -182,8 +183,7 @@ def apply_moe(pctx, cfg: ModelConfig, p, x):
     if "we1b" in p:
         in_specs.append(P(ep_ax, None, tp_ax))
         args.append(p["we1b"].astype(x.dtype))
-    y, aux = jax.shard_map(
-        f, mesh=mesh, in_specs=tuple(in_specs),
-        out_specs=(P(dspec, a.t_ax, a.h_ax), P()),
-        check_vma=False)(*args)
+    y, aux = compat.shard_map(
+        f, mesh, tuple(in_specs),
+        (P(dspec, a.t_ax, a.h_ax), P()))(*args)
     return y, aux

@@ -56,6 +56,11 @@ class PCtx:
         a = self.ax
         return a.data_axes if a else ()
 
+    @property
+    def overlap(self) -> str:
+        """NoP comm/compute overlap mode for the hecaton ops (core/overlap.py)."""
+        return self.pcfg.overlap
+
     def constraint(self, x, spec: Optional[P]):
         if self.mesh is None or spec is None:
             return x
@@ -97,7 +102,7 @@ class PCtx:
             a = self.ax
             return hec.ffn_block(x, w1, w2, mesh=self.mesh, act_fn=act_fn,
                                  t_ax=a.t_ax, h_ax=a.h_ax, data_axes=a.data_axes,
-                                 w1b=w1b)
+                                 w1b=w1b, overlap=self.overlap)
         if self.mesh is not None:
             return meg.ffn(self, x, w1, w2, act_fn, w1b)
         h = _einsum(x, w1)
@@ -110,7 +115,7 @@ class PCtx:
         if self.use_hecaton:
             a = self.ax
             return hec.mixer_in(x, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
-                                data_axes=a.data_axes)
+                                data_axes=a.data_axes, overlap=self.overlap)
         if self.mesh is not None:
             return meg.col_parallel(self, x, w)
         return _einsum(x, w)
@@ -121,7 +126,7 @@ class PCtx:
         if self.use_hecaton:
             a = self.ax
             return hec.mixer_out(y, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
-                                 data_axes=a.data_axes)
+                                 data_axes=a.data_axes, overlap=self.overlap)
         if self.mesh is not None:
             return meg.row_parallel(self, y, w)
         return _einsum(y, w)
@@ -163,7 +168,8 @@ class PCtx:
         if self.use_hecaton:
             a = self.ax
             return hec.linear_seq_scatter(x, w, mesh=self.mesh, t_ax=a.t_ax,
-                                          h_ax=a.h_ax, data_axes=a.data_axes)
+                                          h_ax=a.h_ax, data_axes=a.data_axes,
+                                          overlap=self.overlap)
         if self.mesh is not None:
             return meg.col_parallel(self, x, w)   # vocab over model axis
         return _einsum(x, w)

@@ -29,7 +29,8 @@ def test_scan_flops_scaled_by_trip_count():
     expected = 8 * 2 * 128 ** 3
     assert abs(r.flops - expected) / expected < 0.01
     # XLA's own cost_analysis undercounts exactly 8x (documents why hlo.py exists)
-    xla = c.cost_analysis()["flops"]
+    from repro.compat import cost_analysis_dict
+    xla = cost_analysis_dict(c)["flops"]
     assert xla < expected / 4
 
 
