@@ -1,10 +1,12 @@
 """Measured (compiled-HLO) per-step collective bytes: hecaton vs megatron on a
 fake 8-device mesh — the empirical companion to comm_model.py's theory — plus
-the overlap counter: per-mode (none/ring/bidir) collective-permute vs bulk
-all-gather/reduce-scatter bytes of one Hecaton FFN block, forward and backward,
-proving the ring decomposition replaces every bulk collective in the layer hot
-path with a ppermute chain.  Runs in subprocesses (each needs its own XLA
-device-count flag)."""
+the overlap counter: per-mode (none/ring/bidir/fused) collective-permute vs
+bulk all-gather/reduce-scatter bytes of one Hecaton FFN block (forward and
+backward), one MoE block (EP/TP gathers + scatters), and one megatron
+column/row FFN, proving the ring decomposition replaces every bulk AG/RS in
+every hot path with a ppermute chain (the fused mode additionally runs its
+matmuls through the Pallas ring kernels' emulated path on CPU).  Runs in
+subprocesses (each needs its own XLA device-count flag)."""
 import json
 import os
 import subprocess
@@ -57,8 +59,9 @@ print("RESULT " + json.dumps(out))
 '''
 
 
-# Overlap counter: one Hecaton FFN block (fwd + grad) compiled per overlap
-# mode on an 8-device 2x2x2 mesh; reports per-collective bytes and op counts.
+# Overlap counter: one Hecaton FFN block (fwd + grad), one MoE block, and one
+# megatron column/row FFN compiled per overlap mode on fake 8-device meshes;
+# reports per-collective bytes and op counts for each path.
 SCRIPT_OVERLAP = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -66,7 +69,11 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.config import ModelConfig, MoEConfig, ParallelConfig
 from repro.core import hecaton as H
+from repro.models import mlp as MLP
+from repro.parallel import megatron as MEG
+from repro.parallel.context import PCtx
 from repro.roofline.hlo import analyze
 
 mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("data", "mx", "my"))
@@ -74,8 +81,22 @@ B, T, Hd, F = 4, 64, 128, 512
 sh = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
 shards = (NamedSharding(mesh, P("data", "mx", "my")),
           NamedSharding(mesh, P("my", "mx")), NamedSharding(mesh, P("mx", "my")))
+
+# MoE: experts over a 4-ring, FFN width over a 2-ring (data axis degenerate so
+# only the EP/TP collectives are counted).
+mesh_moe = Mesh(np.array(jax.devices()).reshape(1, 4, 2), ("data", "mx", "my"))
+moe_cfg = ModelConfig(name="cmp-moe", family="moe", num_layers=1, d_model=32,
+                      num_heads=4, num_kv_heads=4, d_ff=64, vocab_size=64,
+                      mlp_kind="swiglu", moe=MoEConfig(num_experts=8, top_k=2))
+moe_p = MLP.init_moe(moe_cfg, jax.random.PRNGKey(0))
+moe_x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32), jnp.float32)
+
+# Megatron 1D-TP: 8-way model ring, H=32 chunks evenly.
+mesh_meg = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+Hm, Fm = 32, 64
+
 out = {}
-for ov in ("none", "ring", "bidir"):
+for ov in ("none", "ring", "bidir", "fused"):
     def ffn(x, w1, w2, _ov=ov):
         return H.ffn_block(x, w1, w2, mesh=mesh, act_fn=jax.nn.silu,
                            t_ax="mx", h_ax="my", overlap=_ov)
@@ -87,6 +108,32 @@ for ov in ("none", "ring", "bidir"):
             sh((B, T, Hd)), sh((Hd, F)), sh((F, Hd))).compile()
         r = analyze(c.as_text())
         res[tag] = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
+
+    moe_pctx = PCtx(mesh=mesh_moe, pcfg=ParallelConfig(
+        strategy="hecaton", data=1, model=8, mx=4, my=2, overlap=ov,
+        zero1=False))
+    def moe_step(p, x, _pctx=moe_pctx):
+        def loss(p, x):
+            y, aux = MLP.apply_moe(_pctx, moe_cfg, p, x)
+            return y.sum() + aux
+        return jax.grad(loss, argnums=(0, 1))(p, x)
+    c = jax.jit(moe_step).lower(
+        jax.tree_util.tree_map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                               moe_p),
+        sh(moe_x.shape)).compile()
+    r = analyze(c.as_text())
+    res["moe"] = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
+
+    meg_pctx = PCtx(mesh=mesh_meg, pcfg=ParallelConfig(
+        strategy="megatron", data=1, model=8, overlap=ov, zero1=False))
+    def meg_step(x, w1, w2, _pctx=meg_pctx):
+        def loss(x, w1, w2):
+            return MEG.ffn(_pctx, x, w1, w2, jax.nn.silu).sum()
+        return jax.grad(loss, argnums=(0, 1, 2))(x, w1, w2)
+    c = jax.jit(meg_step).lower(
+        sh((2, 8, Hm)), sh((Hm, Fm)), sh((Fm, Hm))).compile()
+    r = analyze(c.as_text())
+    res["megatron"] = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
     out[ov] = res
 print("RESULT " + json.dumps(out))
 '''
@@ -109,10 +156,12 @@ def run():
 
 
 def run_overlap():
-    """Per-overlap-mode collective bytes/counts of one FFN block (fwd, fwd+bwd).
+    """Per-overlap-mode collective bytes/counts of one hecaton FFN block
+    (fwd, fwd+bwd), one MoE block (fwd+bwd) and one megatron FFN (fwd+bwd).
 
-    Returns {mode: {"fwd"|"fwd_bwd": {"bytes": {coll: B}, "count": {coll: n}}}}.
-    The ring/bidir modes must show zero bulk all-gather/reduce-scatter and a
+    Returns {mode: {path: {"bytes": {coll: B}, "count": {coll: n}}}} with
+    paths "fwd" / "fwd_bwd" (hecaton FFN), "moe", "megatron".  Every
+    ring/bidir/fused mode must show zero bulk all-gather/reduce-scatter and a
     collective-permute chain instead (asserted by tests/test_overlap.py)."""
     return _run_script(SCRIPT_OVERLAP)
 
@@ -138,4 +187,9 @@ def main(emit):
         emit(f"hlo_overlap_{mode}_cp_bytes", 0.0,
              f"{cp/1e3:.1f}KB/{int(n_cp)}ops")
         emit(f"hlo_overlap_{mode}_bulk_bytes", 0.0, f"{bulk/1e3:.1f}KB")
+        for path in ("moe", "megatron"):
+            pb = res.get(path, {}).get("bytes", {})
+            bulk_p = pb.get("all-gather", 0.0) + pb.get("reduce-scatter", 0.0)
+            emit(f"hlo_overlap_{path}_{mode}_bulk_bytes", 0.0,
+                 f"{bulk_p/1e3:.1f}KB")
     return {"compare": out, "overlap": ov}

@@ -1,11 +1,21 @@
 """Kernel micro-benchmarks (wall time of the jnp reference path on this host;
-the Pallas path is TPU-targeted and validated in interpret mode by tests)."""
+the Pallas path is TPU-targeted and validated in interpret mode by tests).
+
+``--modes`` selects which overlap-mode kernels to time alongside the
+references: ``fused`` adds the single-die Pallas tile matmul used inside the
+fused ring kernels (kernels/ring_matmul.py).  On a backend without remote-DMA
+support the fused row times the interpret path (flagged in the derived
+column) rather than being dropped, and any kernel that fails to build is
+skipped gracefully with the error in its row.
+"""
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as R
+
+DEFAULT_MODES = ("none", "fused")
 
 
 def _time(fn, *args, iters=5):
@@ -17,7 +27,7 @@ def _time(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run():
+def run(modes=DEFAULT_MODES):
     rows = []
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 8)
@@ -26,6 +36,18 @@ def run():
     mm = jax.jit(lambda a, b: R.matmul_ref(a, b, act="gelu"))
     rows.append(("micro_matmul_512_gelu", _time(mm, x, w),
                  f"{2*512**3/1e9:.2f}GF"))
+    if "fused" in modes:
+        try:
+            from repro import compat
+            from repro.kernels import ring_matmul as RM
+            emulated = not compat.remote_dma_supported()
+            tile = jax.jit(lambda a, b: RM.tile_matmul(a, b))
+            note = "ring-kernel-tile" + ("(interpret)" if emulated else "")
+            rows.append(("micro_ring_matmul_tile_512",
+                         _time(tile, x, w, iters=2 if emulated else 5), note))
+        except Exception as e:          # no Pallas on this backend: skip row
+            rows.append(("micro_ring_matmul_tile_512", 0.0,
+                         f"SKIP:{type(e).__name__}"))
     q = jax.random.normal(ks[2], (1, 8, 512, 64), jnp.float32)
     k = jax.random.normal(ks[3], (1, 4, 512, 64), jnp.float32)
     v = jax.random.normal(ks[4], (1, 4, 512, 64), jnp.float32)
@@ -41,7 +63,18 @@ def run():
     return rows
 
 
-def main(emit):
-    for name, us, d in run():
+def main(emit, modes=DEFAULT_MODES):
+    rows = run(modes)
+    for name, us, d in rows:
         emit(name, us, d)
-    return run()
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--modes", default=",".join(DEFAULT_MODES),
+                    help="comma-separated modes (e.g. none,fused)")
+    args = ap.parse_args()
+    for name, us, d in run(tuple(m for m in args.modes.split(",") if m)):
+        print(f"{name},{us:.2f},{d}")

@@ -1,4 +1,4 @@
-"""Wall-time comparison of bulk vs ring vs bidir collective matmuls.
+"""Wall-time comparison of bulk vs ring vs bidir vs fused collective matmuls.
 
 Times one Hecaton FFN block and one seq-scatter linear (forward + backward)
 per ``ParallelConfig.overlap`` mode on a multi-device CPU mesh and emits
@@ -8,12 +8,21 @@ Caveat printed into the derived column: a host-CPU mesh emulates the topology
 but has no async collective engine, so the ring decomposition pays its loop
 overhead without the latency hiding a TPU/GPU scheduler provides — the numbers
 here track HLO structure (collective-permute chains, step counts), while the
-byte accounting in hlo_compare.py is the hardware-independent signal.
+byte accounting in hlo_compare.py is the hardware-independent signal.  The
+``fused`` mode on a backend without remote-DMA support runs the Pallas ring
+kernels' interpret/ppermute-emulated path (kernels/ring_matmul.py) — still
+timed, flagged as emulated; a mode that fails outright is skipped gracefully
+with the error recorded in its row.
 
 Runs in a subprocess (needs its own XLA device-count flag).
+CLI: ``python benchmarks/overlap.py [--modes none,ring,bidir,fused]``.
 """
 
-SCRIPT = r'''
+import json
+
+DEFAULT_MODES = ("none", "ring", "bidir", "fused")
+
+SCRIPT_TMPL = r'''
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
@@ -21,8 +30,10 @@ import time
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro import compat
 from repro.core import hecaton as H
 
+MODES = __MODES__
 mesh = Mesh(np.array(jax.devices()).reshape(2, 2, 2), ("data", "mx", "my"))
 B, T, Hd, F = 8, 256, 256, 1024
 key = jax.random.PRNGKey(0)
@@ -44,7 +55,7 @@ def timeit(fn, *args, iters=10):
 
 
 out = {}
-for ov in ("none", "ring", "bidir"):
+for ov in MODES:
     def ffn_step(x, w1, w2, _ov=ov):
         def f(*a):
             return H.ffn_block(*a, mesh=mesh, act_fn=jax.nn.silu,
@@ -57,27 +68,58 @@ for ov in ("none", "ring", "bidir"):
                                         overlap=_ov).sum()
         return jax.grad(f, argnums=(0, 1))(x, w1)
 
-    out[ov] = {"ffn_us": timeit(jax.jit(ffn_step), x, w1, w2),
+    try:
+        row = {"ffn_us": timeit(jax.jit(ffn_step), x, w1, w2),
                "linear_us": timeit(jax.jit(lin_step), x, w1)}
+        if ov == "fused" and not compat.remote_dma_supported():
+            row["note"] = "interpret-emulated"
+        out[ov] = row
+    except Exception as e:                     # skip a broken mode gracefully
+        out[ov] = {"error": f"{type(e).__name__}: {e}"[:200]}
 print("RESULT " + json.dumps(out))
 '''
 
 
-def run():
+def run(modes=DEFAULT_MODES):
     from benchmarks.hlo_compare import _run_script
-    return _run_script(SCRIPT)
+    return _run_script(SCRIPT_TMPL.replace("__MODES__",
+                                           json.dumps(list(modes))))
 
 
-def main(emit):
-    out = run()
+def main(emit, modes=DEFAULT_MODES):
+    out = run(modes)
     if "error" in out:
         emit("overlap_bench", 0.0, "ERROR")
         return out
+    bulk = out.get("none", {})
     for kind in ("ffn", "linear"):
-        bulk = out["none"][f"{kind}_us"]
-        for mode in ("none", "ring", "bidir"):
-            us = out[mode][f"{kind}_us"]
-            derived = "bulk-baseline" if mode == "none" else \
-                f"{bulk/us:.2f}x_vs_bulk(cpu-emulated)"
+        for mode in modes:
+            row = out.get(mode, {})
+            if "error" in row:
+                emit(f"overlap_{kind}_{mode}", 0.0, f"SKIP:{row['error']}")
+                continue
+            us = row[f"{kind}_us"]
+            if mode == "none":
+                derived = "bulk-baseline"
+            else:
+                base = bulk.get(f"{kind}_us")
+                derived = (f"{base/us:.2f}x_vs_bulk(cpu-emulated)" if base
+                           else "no-bulk-baseline")
+                if row.get("note"):
+                    derived += f"({row['note']})"
             emit(f"overlap_{kind}_{mode}", us, derived)
     return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--modes", default=",".join(DEFAULT_MODES),
+                    help="comma-separated overlap modes to time")
+    args = ap.parse_args()
+    rows = []
+    main(lambda n, us, d: rows.append(f"{n},{us:.2f},{d}"),
+         modes=tuple(m for m in args.modes.split(",") if m))
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)

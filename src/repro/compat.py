@@ -1,15 +1,22 @@
-"""Small jax version-compatibility shims.
+"""Small jax version/backend-compatibility shims.
 
 The repo targets the ``jax.shard_map`` API (jax >= 0.6, ``check_vma=``) but must
 also run on the 0.4.x series the container ships, where shard_map lives in
 ``jax.experimental.shard_map`` and the flag is spelled ``check_rep=``.  Same
 story for ``Compiled.cost_analysis()``, which returns a list of per-program
 dicts on old jaxlibs and a plain dict on new ones.
-"""
+
+This module also hosts the *remote-DMA emulation shim* for the fused Pallas
+ring kernels (kernels/ring_matmul.py): only a real TPU backend can execute
+``pltpu.make_async_remote_copy`` between ring neighbours, so on every other
+backend (CPU CI, interpret mode) the kernels replace each inter-chip hop with
+a ``lax.ppermute`` ring step — identical data movement, same step count, local
+compute still running through the Pallas tile loop in interpret mode."""
 
 from __future__ import annotations
 
 import jax
+from jax import lax
 
 try:                                    # jax >= 0.6: public API, check_vma flag
     _new_shard_map = jax.shard_map
@@ -27,6 +34,30 @@ def shard_map(f, mesh, in_specs, out_specs, check=False):
                               out_specs=out_specs, check_vma=check)
     return _old_shard_map(f, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_rep=check)
+
+
+def remote_dma_supported() -> bool:
+    """Can this runtime execute ``pltpu.make_async_remote_copy`` for real?
+
+    True only on an actual TPU backend — the Pallas interpreter and the CPU/GPU
+    backends have no inter-chip DMA engine.  The fused ring kernels use this to
+    pick between the single-kernel remote-DMA path and the ppermute-emulated
+    path (``ring_step_permute``)."""
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:          # no backend initialized / headless analysis
+        return False
+
+
+def ring_step_permute(x, axis_name: str, n: int, shift: int = 1):
+    """One emulated fused-kernel ring hop: shard -> (rank + shift) % n.
+
+    This is the ppermute-emulation shim for ``kernels/ring_matmul.py``: on
+    backends without remote-DMA support, each ``make_async_remote_copy`` of the
+    circulating VMEM buffer becomes one ``lax.ppermute`` step with the exact
+    same ring permutation, so CPU CI covers the fused kernels' numerics (and
+    their HLO stays a collective-permute chain)."""
+    return lax.ppermute(x, axis_name, [(i, (i + shift) % n) for i in range(n)])
 
 
 def cost_analysis_dict(compiled) -> dict:

@@ -164,7 +164,10 @@ class ParallelConfig:
     # NoP communication/compute overlap for the hecaton collectives
     # (core/overlap.py): "none" = bulk-synchronous AG/RS (paper Alg. 1 as
     # written), "ring" = ppermute-decomposed collective matmuls (AG-matmul /
-    # matmul-RS), "bidir" = half-sized shards circulating both ring directions.
+    # matmul-RS), "bidir" = half-sized shards circulating both ring
+    # directions, "fused" = the whole ring inside one Pallas kernel with
+    # double-buffered remote DMA (kernels/ring_matmul.py; falls back to
+    # "ring" per collective on non-tile-aligned shapes).
     overlap: str = "none"
     # microbatches for grad accumulation (paper's mini-batches)
     microbatches: int = 8
@@ -175,8 +178,9 @@ class ParallelConfig:
         if self.strategy == "hecaton":
             assert self.mx * self.my == self.model, (
                 f"hecaton grid {self.mx}x{self.my} != model={self.model}")
-        assert self.overlap in ("none", "ring", "bidir"), (
-            f"overlap={self.overlap!r} not in ('none', 'ring', 'bidir')")
+        assert self.overlap in ("none", "ring", "bidir", "fused"), (
+            f"overlap={self.overlap!r} not in "
+            f"('none', 'ring', 'bidir', 'fused')")
 
     @property
     def total_devices(self) -> int:

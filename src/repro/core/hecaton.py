@@ -48,12 +48,24 @@ Communication/compute overlap (``overlap=`` on every op, plumbed from
                   paper's §III-B(3) overlap claim made explicit in the HLO.
   * ``"bidir"`` — same, with half-sized shards circulating in both ring
                   directions (full-duplex torus links).
+  * ``"fused"`` — the whole ring inside one Pallas kernel
+                  (kernels/ring_matmul.py): remote DMA into a double-buffered
+                  VMEM pair overlapped with the MXU tile loop by construction,
+                  removing the per-step dispatch gap the ``ring`` modes leave
+                  to the XLA scheduler.  CPU/interpret backends emulate each
+                  hop with ``lax.ppermute`` (same chain in the HLO).
+
+The mode lattice degrades left (``fused → ring``, ``bidir → ring``, any →
+bulk) per collective, decided entirely inside core/overlap.py's dispatchers:
+``fused`` requires tile-aligned shapes, ``bidir`` requires halvable shards, a
+ring reduce-scatter requires the scattered extent to chunk by the ring size,
+and degenerate (size-1) ring axes short-circuit to the bulk op — numerics are
+identical everywhere.
 
 The backward pass stays overlapped for free: the ring loops are unrolled linear
 primitives, and JAX transposes ring-AG-matmul into ring-matmul-RS (and vice
-versa) — see core/overlap.py.  Shards that cannot be halved degrade bidir →
-ring per collective with identical numerics, and degenerate (size-1) ring axes
-short-circuit to the bulk op.
+versa); the fused kernels carry ``custom_vjp``s implementing the same
+transposed rings — see core/overlap.py and kernels/ring_matmul.py.
 """
 
 from __future__ import annotations
@@ -118,7 +130,8 @@ def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
         if overlap != "none":
             return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
                                   n_s=n_h, gather_dim=1, scatter_dim=1,
-                                  overlap=overlap)
+                                  overlap=overlap,
+                                  mesh_axes=mesh.axis_names)
         xg = _ag(xl, t_ax, 1)           # Step 3: all-gather tokens within column
         yp = _mm(xg, wl)                # local tile matmul (partial over h_ax)
         return _rs(yp, h_ax, 1)         # Step 4: reduce-scatter tokens within row
@@ -156,7 +169,8 @@ def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
         if overlap != "none":
             return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
                                   n_s=n_h, gather_dim=1, scatter_dim=2,
-                                  overlap=overlap)
+                                  overlap=overlap,
+                                  mesh_axes=mesh.axis_names)
         xg = _ag(xl, t_ax, 1)           # gather sequence within column
         yp = _mm(xg, wl)                # [b, T, O/t_ax] partial over h_ax
         return _rs(yp, h_ax, 2)         # Step 10: reduce-scatter along *hidden*
@@ -195,9 +209,11 @@ def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
             rs_ok = OV.rs_ok(al.shape[1], n_t)
             if OV.fuse_side(al.shape[-1], wl.shape[-1]) == "rs" and rs_ok:
                 ag = OV.ring_all_gather(al, h_ax, dim=2, n=n_h, bidir=bidir)
-                return OV.ring_matmul_rs(ag, wl, t_ax, scatter_dim=1, n=n_t,
-                                         bidir=bidir)
-            yp = OV.ring_ag_matmul_contract(al, wl, h_ax, n=n_h, bidir=bidir)
+                return OV.matmul_rs(ag, wl, t_ax, scatter_dim=1, n=n_t,
+                                    overlap=overlap,
+                                    mesh_axes=mesh.axis_names)
+            yp = OV.ag_matmul_contract(al, wl, h_ax, n=n_h, overlap=overlap,
+                                       mesh_axes=mesh.axis_names)
             if not rs_ok:
                 return _rs(yp, t_ax, 1)
             return OV.ring_reduce_scatter(yp, t_ax, dim=1, n=n_t, bidir=bidir)
@@ -248,19 +264,20 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
         if rest:                                   # gated: share the gathered x
             xg = OV.ring_all_gather(xl, t_ax, dim=1, n=n_t, bidir=bidir)
             if OV.rs_ok(xg.shape[1], n_h):
-                h = OV.ring_matmul_rs(xg, w1l, h_ax, scatter_dim=1, n=n_h,
-                                      bidir=bidir)
-                g = OV.ring_matmul_rs(xg, rest[0], h_ax, scatter_dim=1,
-                                      n=n_h, bidir=bidir)
+                h, g = OV.matmul_rs_pair(xg, w1l, rest[0], h_ax,
+                                         scatter_dim=1, n=n_h,
+                                         overlap=overlap,
+                                         mesh_axes=mesh.axis_names)
             else:
                 h = _rs(_mm(xg, w1l), h_ax, 1)
                 g = _rs(_mm(xg, rest[0]), h_ax, 1)
             h = act_fn(h) * g
         else:
             h = act_fn(OV.ring_linear(xl, w1l, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
-                                      n_s=n_h, overlap=overlap))
+                                      n_s=n_h, overlap=overlap,
+                                      mesh_axes=mesh.axis_names))
         return OV.ring_linear(h, w2l, g_ax=h_ax, n_g=n_h, s_ax=t_ax, n_s=n_t,
-                              overlap=overlap)
+                              overlap=overlap, mesh_axes=mesh.axis_names)
 
     def f(xl, w1l, w2l, *rest):
         if overlap != "none":
@@ -392,10 +409,12 @@ def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
             if overlap != "none":
                 # ring AG-matmul over the contracted hidden dim: the per-chunk
                 # x gather circulates as collective-permutes hidden behind the
-                # per-shard [tc,H/n]@[H/n,V/n] partial matmuls (fp32 accum).
-                lg = OV.ring_ag_matmul_contract(xc, wl, h_ax, n=n_h,
-                                                bidir=overlap == "bidir",
-                                                out_dtype=jnp.float32)
+                # per-shard [tc,H/n]@[H/n,V/n] partial matmuls (fp32 accum);
+                # "fused" runs the whole chunk ring inside one Pallas kernel.
+                lg = OV.ag_matmul_contract(xc, wl, h_ax, n=n_h,
+                                           overlap=overlap,
+                                           out_dtype=jnp.float32,
+                                           mesh_axes=mesh.axis_names)
             else:
                 xg = _ag(xc, h_ax, 2)                 # [b, tc, H] (tiny AG)
                 lg = jnp.einsum("bth,hv->btv", xg, wl,

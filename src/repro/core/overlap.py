@@ -16,6 +16,21 @@ This module provides the standard remedy — decomposed collective matmuls over
   * ``"bidir"``  — bidirectional ring: every shard is split in half and the two
                    halves circulate in opposite directions, halving per-step
                    bytes per link on full-duplex (torus) links.
+  * ``"fused"``  — the whole ring inside ONE Pallas kernel
+                   (kernels/ring_matmul.py): a double-buffered VMEM pair
+                   receives the next peer's shard via remote DMA while the MXU
+                   consumes the current shard through the tile loop — overlap
+                   guaranteed by construction, no per-step dispatch gap.  On
+                   backends without remote-DMA support the kernels emulate
+                   each hop with ``lax.ppermute`` (compat.ring_step_permute)
+                   and run the tile loops in interpret mode.
+
+The mode lattice degrades left: ``fused`` falls back to ``ring`` per
+collective when a shape is not tile-aligned (:func:`fused_ok_*` in
+kernels/ring_matmul.py), exactly as ``bidir`` degrades to ``ring`` when a
+shard cannot be halved; every mode falls back to the bulk collective for
+extents a ring cannot chunk (``rs_ok``).  Numerics are identical across the
+lattice (fp32-accumulation tolerance).
 
 Primitives (all called *inside* shard_map, on per-device blocks):
 
@@ -55,7 +70,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-MODES = ("none", "ring", "bidir")
+from repro.kernels import ring_matmul as RM
+
+MODES = ("none", "ring", "bidir", "fused")
 
 
 def _mm_f32(x, w):
@@ -294,6 +311,75 @@ def ring_matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
 
 
 # ---------------------------------------------------------------------------
+# Mode dispatchers: route one collective matmul to the single-kernel fused
+# path (kernels/ring_matmul.py) when overlap="fused" and the shape is
+# tile-aligned, else to the ppermute ring above.  These are the only places
+# the fused/ring/bidir decision is made, so every hecaton primitive (and the
+# MoE / megatron ring paths) inherits the same degradation contract.
+# ---------------------------------------------------------------------------
+
+
+def ag_matmul(x, w, axis_name: str, *, dim: int, n: int, overlap: str,
+              mesh_axes=None):
+    """AG ⊕ matmul (gathered dim is a batch dim) under the given mode.
+
+    ``mesh_axes`` (the enclosing mesh's full axis-name tuple) lets the TPU
+    single-kernel path address ring neighbours by mesh coordinates; without
+    it the fused mode still runs, via its ppermute-emulated path."""
+    if overlap == "fused" and RM.fused_ok_ag(x.shape, w.shape, n, dim,
+                                             x.dtype.itemsize):
+        return RM.ag_matmul(x, w, axis_name, dim=dim, n=n,
+                            mesh_axes=mesh_axes)
+    return ring_ag_matmul(x, w, axis_name, dim=dim, n=n,
+                          bidir=overlap == "bidir")
+
+
+def matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
+              overlap: str, mesh_axes=None):
+    """matmul ⊕ RS under the given mode."""
+    if overlap == "fused" and RM.fused_ok_rs(x.shape, w.shape, n,
+                                             scatter_dim, x.dtype.itemsize):
+        return RM.matmul_rs(x, w, axis_name, scatter_dim=scatter_dim, n=n,
+                            mesh_axes=mesh_axes)
+    return ring_matmul_rs(x, w, axis_name, scatter_dim=scatter_dim, n=n,
+                          bidir=overlap == "bidir")
+
+
+def ag_matmul_contract(x, w, axis_name: str, *, n: int, overlap: str,
+                       out_dtype=None, mesh_axes=None):
+    """AG ⊕ matmul over the contracted dim under the given mode."""
+    if overlap == "fused" and RM.fused_ok_contract(x.shape, w.shape, n,
+                                                   x.dtype.itemsize):
+        return RM.ag_matmul_contract(x, w, axis_name, n=n,
+                                     out_dtype=out_dtype,
+                                     mesh_axes=mesh_axes)
+    return ring_ag_matmul_contract(x, w, axis_name, n=n,
+                                   bidir=overlap == "bidir",
+                                   out_dtype=out_dtype)
+
+
+def matmul_rs_pair(x, w1, w1b, axis_name: str, *, scatter_dim: int, n: int,
+                   overlap: str, mesh_axes=None):
+    """Gated pair: (x·w1, x·w1b) reduce-scattered, sharing the gathered x.
+
+    Fused mode reads each x tile once for both products inside one kernel;
+    the ring/bidir path runs two matmul-RS rings over the shared gather."""
+    if (overlap == "fused" and scatter_dim != x.ndim - 1
+            and RM.fused_ok_rs(x.shape, w1.shape, n, scatter_dim,
+                               x.dtype.itemsize)
+            and RM.fused_ok_rs(x.shape, w1b.shape, n, scatter_dim,
+                               x.dtype.itemsize)):
+        return RM.matmul_rs_pair(x, w1, w1b, axis_name,
+                                 scatter_dim=scatter_dim, n=n,
+                                 mesh_axes=mesh_axes)
+    bidir = overlap == "bidir"
+    return (ring_matmul_rs(x, w1, axis_name, scatter_dim=scatter_dim, n=n,
+                           bidir=bidir),
+            ring_matmul_rs(x, w1b, axis_name, scatter_dim=scatter_dim, n=n,
+                           bidir=bidir))
+
+
+# ---------------------------------------------------------------------------
 # Composed linear: RS(matmul(AG(x))) with the matmul fused into the heavier side
 # ---------------------------------------------------------------------------
 
@@ -308,15 +394,19 @@ def fuse_side(h_loc: int, o_loc: int) -> str:
 
 
 def ring_linear(x, w, *, g_ax: str, n_g: int, s_ax: str, n_s: int,
-                gather_dim: int = 1, scatter_dim: int = 1, overlap: str):
+                gather_dim: int = 1, scatter_dim: int = 1, overlap: str,
+                mesh_axes=None):
     """Overlapped y = RS_{s_ax}( AG_{g_ax}(x, gather_dim) @ w, scatter_dim).
 
     One of the two collectives gets the matmul fused into its ring loop
     (``fuse_side``); the other runs as a pure ppermute ring — every NoP
-    transfer in the chain is a collective-permute.  A scattered extent the
-    ring cannot chunk goes to the bulk ``psum_scatter`` instead (a no-op for
-    a size-1 axis; for a genuinely non-dividing extent it raises the same
-    shape error the bulk path always has) — the gather side stays overlapped.
+    transfer in the chain is a collective-permute.  Under ``overlap="fused"``
+    the matmul-carrying side runs as one Pallas ring kernel when tile-aligned
+    (kernels/ring_matmul.py), degrading per collective to the ppermute ring
+    otherwise.  A scattered extent the ring cannot chunk goes to the bulk
+    ``psum_scatter`` instead (a no-op for a size-1 axis; for a genuinely
+    non-dividing extent it raises the same shape error the bulk path always
+    has) — the gather side stays overlapped.
     """
     check_mode(overlap)
     bidir = overlap == "bidir"
@@ -324,9 +414,10 @@ def ring_linear(x, w, *, g_ax: str, n_g: int, s_ax: str, n_s: int,
                  else w.shape[-1])
     if fuse_side(x.shape[-1], w.shape[-1]) == "rs" and rs_ok(scattered, n_s):
         xg = ring_all_gather(x, g_ax, dim=gather_dim, n=n_g, bidir=bidir)
-        return ring_matmul_rs(xg, w, s_ax, scatter_dim=scatter_dim, n=n_s,
-                              bidir=bidir)
-    yp = ring_ag_matmul(x, w, g_ax, dim=gather_dim, n=n_g, bidir=bidir)
+        return matmul_rs(xg, w, s_ax, scatter_dim=scatter_dim, n=n_s,
+                         overlap=overlap, mesh_axes=mesh_axes)
+    yp = ag_matmul(x, w, g_ax, dim=gather_dim, n=n_g, overlap=overlap,
+                   mesh_axes=mesh_axes)
     if not rs_ok(scattered, n_s):           # cannot chunk: bulk reduce-scatter
         return lax.psum_scatter(yp, s_ax, scatter_dimension=scatter_dim,
                                 tiled=True)

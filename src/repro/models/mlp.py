@@ -8,6 +8,15 @@ an argsort-based capacity router (gather/scatter-add, fully differentiable).  Th
 only collectives are an all-gather of the (hidden-sharded) input and a
 reduce-scatter of the combined output — the same AG/RS-only property as the paper's
 dense method, so MoE inherits the complexity bound.
+
+With ``ParallelConfig.overlap`` != "none" those EP/TP gathers and scatters run
+as ``lax.ppermute`` rings (core/overlap.py): the input gathers become ring
+all-gathers and the two output reduce-scatters become circulating-accumulator
+rings, so the MoE path has zero bulk AG/RS in its HLO just like the dense hot
+path.  (The expert compute between them is gather/scatter-add dispatch, not a
+single matmul, so the ``fused`` single-kernel mode contributes its ring
+decomposition here rather than a fused matmul; extents a ring cannot chunk
+fall back to the bulk collective per collective, as everywhere else.)
 """
 
 from __future__ import annotations
@@ -21,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.config import ModelConfig
+from repro.core import overlap as OV
 from repro.models import layers as L
 
 
@@ -146,16 +156,25 @@ def apply_moe(pctx, cfg: ModelConfig, p, x):
 
     a = pctx.ax
     ep_ax, tp_ax = a.t_ax, a.h_ax           # experts over mx, ffn width over my
-    n_loc = mc.num_experts // a.size(ep_ax)
+    n_ep, n_tp = a.size(ep_ax), a.size(tp_ax)
+    n_loc = mc.num_experts // n_ep
     dspec = a.data_axes if len(a.data_axes) > 1 else a.data_axes[0]
     all_axes = a.data_axes + (ep_ax, tp_ax)
+    ov = pctx.overlap
+    bidir = ov == "bidir"
 
     def f(xl, router, w1, w2, *rest):
         # xl [b, s_loc, H/my].  Gather hidden (full H for routing) AND sequence
         # (every expert shard must see every token of its data shard) — the
         # mixer-pattern gathers, after which expert compute is comm-free.
-        xg = lax.all_gather(xl, tp_ax, axis=2, tiled=True)       # [b,s_loc,H]
-        xg = lax.all_gather(xg, ep_ax, axis=1, tiled=True)       # [b,S,H]
+        # With overlap enabled both gathers (and the reduce-scatters below)
+        # run as ppermute rings instead of bulk collectives.
+        if ov != "none":
+            xg = OV.ring_all_gather(xl, tp_ax, dim=2, n=n_tp, bidir=bidir)
+            xg = OV.ring_all_gather(xg, ep_ax, dim=1, n=n_ep, bidir=bidir)
+        else:
+            xg = lax.all_gather(xl, tp_ax, axis=2, tiled=True)   # [b,s_loc,H]
+            xg = lax.all_gather(xg, ep_ax, axis=1, tiled=True)   # [b,S,H]
         b, S, H = xg.shape
         e_off = lax.axis_index(ep_ax) * n_loc
         pl = {"router": router, "we1": w1, "we2": w2}
@@ -170,8 +189,14 @@ def apply_moe(pctx, cfg: ModelConfig, p, x):
         # must split the SEQUENCE dim per batch row — not the flattened (b*S)
         # dim, which would hand whole batch rows to different shards.
         y = y.reshape(b, S, H)
-        y = lax.psum_scatter(y, ep_ax, scatter_dimension=1, tiled=True)
-        y = lax.psum_scatter(y, tp_ax, scatter_dimension=2, tiled=True)
+        if ov != "none" and OV.rs_ok(S, n_ep):
+            y = OV.ring_reduce_scatter(y, ep_ax, dim=1, n=n_ep, bidir=bidir)
+        else:
+            y = lax.psum_scatter(y, ep_ax, scatter_dimension=1, tiled=True)
+        if ov != "none" and OV.rs_ok(H, n_tp):
+            y = OV.ring_reduce_scatter(y, tp_ax, dim=2, n=n_tp, bidir=bidir)
+        else:
+            y = lax.psum_scatter(y, tp_ax, scatter_dimension=2, tiled=True)
         aux = lax.pmean(moe_aux_losses(probs), all_axes)
         return y, aux
 

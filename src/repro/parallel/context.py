@@ -8,6 +8,12 @@ here.  ``PCtx`` binds (mesh, ParallelConfig, mode) and routes every projection t
                    (the paper's baseline, parallel/megatron.py);
   * plain einsum when ``mesh is None`` (smoke tests) .
 
+``ParallelConfig.overlap`` (none → ring → bidir → fused, core/overlap.py) is
+plumbed through unchanged: the hecaton ops AND the megatron baseline both
+ring-decompose their collectives per mode, ``fused`` additionally routing
+tile-aligned collective matmuls through the single-kernel Pallas ring path
+(kernels/ring_matmul.py) with automatic fallback to ``ring`` otherwise.
+
 Decode mode always uses the 1D layout over the *combined* model axes: Alg. 1's
 token-scatter needs >= sqrt(N) tokens per step, and the paper targets training /
 finetuning (DESIGN.md §4).
@@ -58,7 +64,9 @@ class PCtx:
 
     @property
     def overlap(self) -> str:
-        """NoP comm/compute overlap mode for the hecaton ops (core/overlap.py)."""
+        """NoP comm/compute overlap mode (core/overlap.py MODES lattice):
+        none | ring | bidir | fused — consumed by the hecaton ops, the MoE
+        EP/TP collectives, and the megatron ring paths alike."""
         return self.pcfg.overlap
 
     def constraint(self, x, spec: Optional[P]):

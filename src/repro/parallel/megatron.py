@@ -10,6 +10,18 @@ An optional *sequence-parallel* variant (Korthikanti et al.) is provided as a
 beyond-paper optimization knob for the baseline: activations outside matmuls are
 sharded over the sequence dim, turning each all-reduce into AG+RS (same volume as
 flat-ring all-reduce, lower memory).
+
+Overlap (``ParallelConfig.overlap`` != "none"): the baseline's collectives are
+ring-decomposed too, so per-mode comparisons against hecaton stay apples to
+apples.  The row-parallel all-reduce becomes matmul-RS ⊕ ring-AG over the
+1D ``model`` ring (core/overlap.py dispatchers — ``"fused"`` routes the
+matmul-RS through the single-kernel Pallas path when tile-aligned), and the
+column-parallel backward's dx all-reduce becomes the transposed ring via a
+``custom_vjp``.  Byte volume is identical to the bulk all-reduce
+(2·(n-1)/n per element); every transfer is a collective-permute.  Shapes the
+ring cannot chunk (hidden extent not divisible by the ring size, multi-axis
+``model`` meshes, decode) fall back to the bulk path — the same degradation
+contract as the hecaton ops.
 """
 
 from __future__ import annotations
@@ -18,6 +30,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import overlap as OV
 
 
 def _einsum(x, w):
@@ -35,23 +50,142 @@ def _dax(pctx):
     return a.data_axes[0] if len(a.data_axes) == 1 else a.data_axes
 
 
+def _ring_info(pctx, h_total: int):
+    """(axis_name, n) when the 1D model ring can decompose this linear's
+    all-reduce (single model axis, ring size > 1, hidden chunks evenly);
+    None routes the caller to the bulk path."""
+    a = pctx.ax
+    if pctx.overlap == "none" or a is None or len(a.model_axes) != 1:
+        return None
+    ax = a.model_axes[0]
+    n = a.size(ax)
+    if not OV.rs_ok(h_total, n):
+        return None
+    return ax, n
+
+
 def col_parallel(pctx, x, w):
-    """y = x @ W with W's output dim sharded over the model axes."""
+    """y = x @ W with W's output dim sharded over the model axes.
+
+    Forward is communication-free (x model-replicated, W column-sharded);
+    under overlap the backward's dx all-reduce runs as the transposed ring
+    (matmul-RS ⊕ ring-AG over hidden chunks) instead of a bulk collective.
+    """
     m, d = _model_axes(pctx), _dax(pctx)
+    ring = _ring_info(pctx, x.shape[-1])
+    if ring is not None:
+        return _col_ring(pctx, x, w, ring)
     x = pctx.constraint(x, P(d, None, None))
     w = pctx.constraint(w, P(None, m))
     y = _einsum(x, w)
     return pctx.constraint(y, P(d, None, m))
 
 
+def _col_ring(pctx, x, w, ring):
+    # The custom_vjp wraps the shard_map calls from OUTSIDE: shard_map's own
+    # transpose would conservatively psum cotangents over the unmentioned
+    # model axis (check_rep=False), double-counting the ring-reduced dx.
+    ax, n = ring
+    d = _dax(pctx)
+    a = pctx.ax
+    mesh = pctx.mesh
+    ov = pctx.overlap
+    x_spec, w_spec, y_spec = P(d, None, None), P(None, ax), P(d, None, ax)
+
+    @jax.custom_vjp
+    def col(xg, wg):
+        return compat.shard_map(_einsum, mesh, (x_spec, w_spec),
+                                y_spec)(xg, wg)
+
+    def col_fwd(xg, wg):
+        return col(xg, wg), (xg, wg)
+
+    def col_bwd(res, dy):
+        xg, wg = res
+
+        def fx(dyl, wl):
+            # dx = Σ_j dy_j · w_jᵀ: ring reduce over hidden chunks, then ring
+            # AG back to the model-replicated layout — the bulk all-reduce's
+            # bytes moved entirely as collective-permutes (fused kernel when
+            # tile-aligned).
+            part = OV.matmul_rs(dyl.astype(wl.dtype), wl.T, ax,
+                                scatter_dim=2, n=n, overlap=ov,
+                                mesh_axes=mesh.axis_names)
+            return OV.ring_all_gather(part, ax, dim=2, n=n,
+                                      bidir=ov == "bidir")
+
+        def fw(xl, dyl):
+            dw = jnp.einsum("bsh,bso->ho", xl, dyl.astype(xl.dtype),
+                            preferred_element_type=jnp.float32)
+            return lax.psum(dw, a.data_axes) if a.data_axes else dw
+
+        dx = compat.shard_map(fx, mesh, (y_spec, w_spec), x_spec)(dy, wg)
+        dw = compat.shard_map(fw, mesh, (x_spec, y_spec), w_spec)(xg, dy)
+        return dx.astype(xg.dtype), dw.astype(wg.dtype)
+
+    col.defvjp(col_fwd, col_bwd)
+    x = pctx.constraint(x, P(d, None, None))
+    return col(x, w.astype(x.dtype))
+
+
 def row_parallel(pctx, y, w):
-    """out = y @ W with W's input dim sharded; output all-reduced to replicated."""
+    """out = y @ W with W's input dim sharded; output all-reduced to replicated.
+
+    Under overlap the all-reduce is decomposed into matmul-RS (contribution
+    tiles folded into a circulating accumulator) followed by a ring
+    all-gather of the reduced hidden chunks; the backward is local."""
     m, d = _model_axes(pctx), _dax(pctx)
+    ring = _ring_info(pctx, w.shape[-1])
+    if ring is not None:
+        return _row_ring(pctx, y, w, ring)
     y = pctx.constraint(y, P(d, None, m))
     w = pctx.constraint(w, P(m, None))
     out = _einsum(y, w)
     # constraining to model-replicated forces GSPMD's all-reduce (flat ring on ICI)
     return pctx.constraint(out, P(d, None, None))
+
+
+def _row_ring(pctx, y, w, ring):
+    ax, n = ring
+    d = _dax(pctx)
+    a = pctx.ax
+    mesh = pctx.mesh
+    ov = pctx.overlap
+    y_spec, w_spec, o_spec = P(d, None, ax), P(ax, None), P(d, None, None)
+
+    @jax.custom_vjp
+    def row(yg, wg):
+        def f(yl, wl):
+            part = OV.matmul_rs(yl, wl, ax, scatter_dim=2, n=n, overlap=ov,
+                                mesh_axes=mesh.axis_names)
+            return OV.ring_all_gather(part, ax, dim=2, n=n,
+                                      bidir=ov == "bidir")
+        return compat.shard_map(f, mesh, (y_spec, w_spec), o_spec)(yg, wg)
+
+    def row_fwd(yg, wg):
+        return row(yg, wg), (yg, wg)
+
+    def row_bwd(res, dout):
+        # dout is model-replicated and w row-sharded ⇒ backward is comm-free
+        # on the model axis (the bulk path pays nothing here either).
+        yg, wg = res
+
+        def fy(doutl, wl):
+            return jnp.einsum("bsh,fh->bsf", doutl.astype(wl.dtype), wl,
+                              preferred_element_type=jnp.float32)
+
+        def fw(yl, doutl):
+            dw = jnp.einsum("bsf,bsh->fh", yl, doutl.astype(yl.dtype),
+                            preferred_element_type=jnp.float32)
+            return lax.psum(dw, a.data_axes) if a.data_axes else dw
+
+        dy = compat.shard_map(fy, mesh, (o_spec, w_spec), y_spec)(dout, wg)
+        dw = compat.shard_map(fw, mesh, (y_spec, o_spec), w_spec)(yg, dout)
+        return dy.astype(yg.dtype), dw.astype(wg.dtype)
+
+    row.defvjp(row_fwd, row_bwd)
+    y = pctx.constraint(y, P(d, None, ax))
+    return row(y, w.astype(y.dtype))
 
 
 def ffn(pctx, x, w1, w2, act_fn, w1b=None):

@@ -1,9 +1,11 @@
-"""Subprocess numerics check: ring/bidir overlapped hecaton ops == bulk path
-== dense reference, forward AND gradient, on a fake 8-device topology.
+"""Subprocess numerics check: ring/bidir/fused overlapped hecaton ops == bulk
+path == dense reference, forward AND gradient, on a fake 8-device topology.
 
 Covers an asymmetric 4x2 hecaton grid (different ring sizes per axis), odd
-shard extents (bidir must degrade to the unidirectional ring per collective),
-and the fused LM loss's per-chunk contraction gather.
+shard extents (bidir must degrade to the unidirectional ring per collective;
+fused handles them via degraded tile sizes), the fused LM loss's per-chunk
+contraction gather, and — for "fused" — the Pallas ring kernels running their
+interpret/ppermute-emulated path (kernels/ring_matmul.py).
 
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
@@ -37,7 +39,7 @@ def check_ops(mesh, B, T, Hd, O, tag):
     w2s = jax.device_put(w2, NamedSharding(mesh, P("mx", "my")))
     wbs = jax.device_put(wb, NamedSharding(mesh, P("my", "mx")))
 
-    for ov in ("ring", "bidir"):
+    for ov in ("ring", "bidir", "fused"):
         kw = dict(mesh=mesh, t_ax="mx", h_ax="my", overlap=ov)
 
         def lin(x, w, _kw=kw):
@@ -102,7 +104,7 @@ def check_fused_loss(mesh):
 
     ref = jax.jit(mkloss("none"))(xs, ws)
     gref = jax.jit(jax.grad(mkloss("none"), argnums=(0, 1)))(xs, ws)
-    for ov in ("ring", "bidir"):
+    for ov in ("ring", "bidir", "fused"):
         np.testing.assert_allclose(float(jax.jit(mkloss(ov))(xs, ws)),
                                    float(ref), rtol=1e-6)
         g = jax.jit(jax.grad(mkloss(ov), argnums=(0, 1)))(xs, ws)

@@ -29,16 +29,18 @@ def _run(script):
 
 
 def test_overlap_numerics():
-    """ring/bidir fwd+grad == bulk == dense ref on 4x2 / 2x2 / 4x1 grids,
-    including odd-shard bidir fallback and the fused-loss contraction ring."""
+    """ring/bidir/fused fwd+grad == bulk == dense ref on 4x2 / 2x2 / 4x1
+    grids, including odd-shard bidir fallback, the fused-loss contraction
+    ring, and the Pallas ring kernels' interpret path."""
     out = _run("check_overlap.py")
     assert "ALL OVERLAP NUMERICS CHECKS PASSED" in out
 
 
 def test_overlap_hlo_collective_permute_replaces_bulk():
-    """Acceptance: with overlap enabled, the compiled FFN block's hot path has
-    a collective-permute chain and ZERO bulk all-gather/reduce-scatter — for
-    the forward and the backward pass — while the bulk path has the inverse."""
+    """Acceptance: with overlap enabled, the compiled hot paths (hecaton FFN
+    fwd AND bwd, MoE EP/TP gathers+scatters, megatron column/row FFN) have a
+    collective-permute chain and ZERO bulk all-gather/reduce-scatter — while
+    the bulk mode has the inverse on the FFN path."""
     from benchmarks import hlo_compare
     out = hlo_compare.run_overlap()
     assert "error" not in out, out.get("error")
@@ -47,11 +49,19 @@ def test_overlap_hlo_collective_permute_replaces_bulk():
         assert none_b.get("all-gather", 0) > 0
         assert none_b.get("reduce-scatter", 0) > 0
         assert none_b.get("collective-permute", 0) == 0
-        for mode in ("ring", "bidir"):
+        for mode in ("ring", "bidir", "fused"):
             b = out[mode][tag]["bytes"]
             assert b.get("all-gather", 0) == 0, (mode, tag, b)
             assert b.get("reduce-scatter", 0) == 0, (mode, tag, b)
             assert b.get("collective-permute", 0) > 0, (mode, tag, b)
+    # MoE and megatron paths: the bulk mode has AG/RS, the ring modes none
+    for path in ("moe", "megatron"):
+        for mode in ("ring", "bidir", "fused"):
+            b = out[mode][path]["bytes"]
+            assert b.get("all-gather", 0) == 0, (mode, path, b)
+            assert b.get("reduce-scatter", 0) == 0, (mode, path, b)
+            assert b.get("collective-permute", 0) > 0, (mode, path, b)
+    assert out["none"]["moe"]["bytes"].get("all-gather", 0) > 0
     # bidir halves per-step messages but doubles the permute count
     n_ring = out["ring"]["fwd"]["count"]["collective-permute"]
     n_bidir = out["bidir"]["fwd"]["count"]["collective-permute"]
@@ -66,7 +76,7 @@ def test_overlap_hlo_collective_permute_replaces_bulk():
 def test_mode_fallback_logic():
     from repro.core.overlap import MODES, check_mode, rs_ok
 
-    assert MODES == ("none", "ring", "bidir")
+    assert MODES == ("none", "ring", "bidir", "fused")
     for m in MODES:
         assert check_mode(m) == m
     with pytest.raises(ValueError):
