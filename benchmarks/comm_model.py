@@ -28,33 +28,43 @@ from __future__ import annotations
 
 from repro.core import theory as T
 
-# fraction of NoP transmission time hidden behind compute, per overlap mode
+# fraction of NoP transmission time hidden behind compute, per overlap mode.
+# These are the DEFAULT (uncalibrated) values; ``fit_overlap_eff`` below fits
+# the table from measured per-mode step times (BENCH_overlap.json via
+# ``benchmarks/run.py --calibrate``) and the fitted values are persisted
+# alongside the theory rows.
 OVERLAP_EFF = {"none": 0.00, "ring": 0.70, "bidir": 0.80, "fused": 0.95}
 
 
-def exposed_comm(comm_s: float, compute_s: float, mode: str) -> float:
+def exposed_comm(comm_s: float, compute_s: float, mode: str,
+                 eff=None) -> float:
     """NoP seconds left on the critical path after overlap.
 
-    Hiding is bounded both by the mode's efficiency and by the compute
-    available to hide behind (a ring longer than its matmuls stays exposed)."""
-    hidden = min(OVERLAP_EFF[mode] * comm_s, compute_s)
+    Hiding is bounded both by the mode's efficiency (``eff`` table, default
+    the hardcoded ``OVERLAP_EFF``) and by the compute available to hide
+    behind (a ring longer than its matmuls stays exposed)."""
+    table = OVERLAP_EFF if eff is None else eff
+    hidden = min(table[mode] * comm_s, compute_s)
     return comm_s - hidden
 
 
 def effective_bandwidth(beta: float, comm_s: float, compute_s: float,
-                        mode: str) -> float:
+                        mode: str, eff=None) -> float:
     """Apparent link bandwidth once overlap hides part of the transfer."""
-    exp = exposed_comm(comm_s, compute_s, mode)
+    exp = exposed_comm(comm_s, compute_s, mode, eff)
     if exp <= 0:
         return float("inf")
     return beta * comm_s / exp
 
 
-def overlap_rows():
+def overlap_rows(eff=None):
     """Hecaton per-overlap-mode layer latency on the paper ladder (std pkg).
 
     The same layer_time decomposition as Fig. 8, with the NoP term replaced by
-    its exposed (post-overlap) fraction — normalized to the bulk mode."""
+    its exposed (post-overlap) fraction — normalized to the bulk mode.
+    ``eff`` substitutes a calibrated efficiency table (``fit_overlap_eff``)
+    for the hardcoded defaults."""
+    table = OVERLAP_EFF if eff is None else eff
     beta = PACKAGES["standard"]
     rows = []
     for name, h, N, layers in WORKLOADS:
@@ -63,8 +73,8 @@ def overlap_rows():
                             dram_channels=max(8, int(N ** 0.5) * 4))
         lt = T.layer_time("hecaton", sp)
         base = None
-        for mode in OVERLAP_EFF:
-            nop = exposed_comm(lt["nop"], lt["compute"], mode)
+        for mode in table:
+            nop = exposed_comm(lt["nop"], lt["compute"], mode, table)
             total = max(lt["compute"] + nop, lt["dram"]) * layers
             base = total if base is None else base
             rows.append({
@@ -72,9 +82,71 @@ def overlap_rows():
                 "latency_norm": total / base,
                 "exposed_nop": nop,
                 "eff_bandwidth": effective_bandwidth(
-                    beta, lt["nop"], lt["compute"], mode),
+                    beta, lt["nop"], lt["compute"], mode, table),
             })
     return rows
+
+
+def fit_overlap_eff(step_times, prior=None):
+    """Fit per-mode overlap efficiency from measured per-mode step times.
+
+    ``step_times`` is the ``overlap_step_times_us`` payload of
+    BENCH_overlap.json: ``{mode: {"<kind>_us": t, ...}}`` with a ``"none"``
+    baseline row.  Model per kind *k* and mode *m*:
+
+        t_{k,m} = compute_k + (1 - e_m) * comm_k,       comm_k = rho * t_{k,none}
+
+    The system is underdetermined by exactly one dof (the compute/comm split
+    rho), so rho is chosen by a 1-D search minimizing the distance of the
+    fitted efficiencies to the ``prior`` table (the hardcoded defaults) —
+    i.e. the measurement reshapes the table as far as the data supports and
+    shrinks toward the prior where it cannot.  Efficiencies are clipped to
+    [0, 1]: on a host-CPU mesh with no async collective engine the ring modes
+    can measure *slower* than bulk, which clips to 0 rather than going
+    negative (the clip fraction is reported in the diagnostics).
+
+    Returns ``{"eff": {mode: e}, "comm_fraction": rho, "prior_distance": d,
+    "clipped": [...]}`` or None if the payload has no usable baseline."""
+    prior = dict(OVERLAP_EFF if prior is None else prior)
+    if not isinstance(step_times, dict):
+        return None
+    t = {m: {k: v for k, v in row.items()
+             if k.endswith("_us") and isinstance(v, (int, float)) and v > 0}
+         for m, row in step_times.items()
+         if isinstance(row, dict) and "error" not in row}
+    base = t.pop("none", None)
+    modes = [m for m in t if t[m]]
+    if not base or not modes:
+        return None
+
+    def eff_at(rho):
+        eff, clipped = {}, []
+        for m in modes:
+            vals = []
+            for k, tn in base.items():
+                tm = t[m].get(k)
+                if tm:
+                    vals.append((tn - tm) / (rho * tn))
+            if not vals:
+                continue
+            raw = sum(vals) / len(vals)
+            e = min(1.0, max(0.0, raw))
+            if e != raw:
+                clipped.append(m)
+            eff[m] = e
+        return eff, clipped
+
+    best = None
+    for i in range(1, 40):
+        rho = i / 40.0
+        eff, clipped = eff_at(rho)
+        score = sum((eff.get(m, 0.0) - prior.get(m, 0.0)) ** 2
+                    for m in modes)
+        if best is None or score < best[0]:
+            best = (score, rho, eff, clipped)
+    score, rho, eff, clipped = best
+    return {"eff": {"none": 0.0, **eff}, "comm_fraction": rho,
+            "prior_distance": score, "clipped": sorted(set(clipped))}
 
 # the paper's workload ladder (§VI-A): h doubles, N scales by 4x
 WORKLOADS = [

@@ -139,6 +139,66 @@ print("RESULT " + json.dumps(out))
 '''
 
 
+# Residual-layout counter: a 2-layer dense LM (train fwd+bwd) compiled on a
+# megatron 1D-TP ring under BOTH residual layouts (replicated vs seq-sharded)
+# per overlap mode.  Proves the seq layout removes every bulk AG/RS from the
+# block boundaries under ring/bidir/fused (entry gathers / exit scatters ride
+# the collective-permute lattice) and that the per-die residual-stream bytes
+# carried across the layer scan shrink by 1/n_model.
+SCRIPT_RESIDUAL = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import lm
+from repro.parallel import specs as SP
+from repro.parallel.context import PCtx
+from repro.roofline.hlo import analyze
+
+cfg = ModelConfig(name="res", family="dense", num_layers=2, d_model=64,
+                  num_heads=8, num_kv_heads=8, d_ff=128, vocab_size=256,
+                  mlp_kind="swiglu")
+B, S, n_model = 4, 64, 8
+mesh = Mesh(np.array(jax.devices()).reshape(1, n_model), ("data", "model"))
+params = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+out = {"n_model": n_model}
+for residual in ("replicated", "seq"):
+    res_l = {}
+    for ov in ("none", "ring", "bidir", "fused"):
+        pcfg = ParallelConfig(strategy="megatron", data=1, model=n_model,
+                              overlap=ov, residual=residual, zero1=False)
+        pctx = PCtx(mesh, pcfg, "train")
+        pshard = SP.sharding_tree(SP.param_specs(params, mesh, pcfg), mesh)
+        bspec = SP.batch_specs(mesh, pcfg, microbatched=False, seq_len=S)
+        bshard = {k: NamedSharding(mesh, bspec[k])
+                  for k in ("tokens", "labels")}
+        bstruct = {k: jax.ShapeDtypeStruct((B, S), jnp.int32)
+                   for k in ("tokens", "labels")}
+        def loss(p, b, _pctx=pctx):
+            return lm.train_loss(_pctx, cfg, p, {**b, "_dtype": jnp.float32},
+                                 remat="none")[0]
+        c = jax.jit(jax.grad(loss), in_shardings=(pshard, bshard)).lower(
+            params, bstruct).compile()
+        r = analyze(c.as_text())
+        row = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
+        try:                      # measured per-device temp memory (may be
+            ma = c.memory_analysis()          # unavailable on some backends)
+            row["temp_bytes"] = int(getattr(ma, "temp_size_in_bytes", 0))
+        except Exception:
+            row["temp_bytes"] = None
+        # analytic per-die residual-stream bytes carried across the layer scan
+        row["residual_bytes_per_die"] = (B * S * cfg.d_model * 4
+                                         // (n_model if residual == "seq"
+                                             else 1))
+        res_l[ov] = row
+    out[residual] = res_l
+print("RESULT " + json.dumps(out))
+'''
+
+
 def _run_script(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
@@ -164,6 +224,19 @@ def run_overlap():
     ring/bidir/fused mode must show zero bulk all-gather/reduce-scatter and a
     collective-permute chain instead (asserted by tests/test_overlap.py)."""
     return _run_script(SCRIPT_OVERLAP)
+
+
+def run_residual():
+    """Per-residual-layout (replicated vs seq) × per-overlap-mode collective
+    bytes of a full 2-layer megatron LM train step (fwd+bwd).
+
+    Returns {"n_model": n, layout: {mode: {"bytes", "count", "temp_bytes",
+    "residual_bytes_per_die"}}}.  Acceptance (asserted by
+    tests/test_overlap.py and the CI smoke check): the seq layout has ZERO
+    bulk all-gather/reduce-scatter under overlap ∈ {ring, bidir, fused}, no
+    more bulk bytes than the replicated layout anywhere, and its per-die
+    residual bytes are 1/n_model of the replicated layout's."""
+    return _run_script(SCRIPT_RESIDUAL)
 
 
 def main(emit):
@@ -192,4 +265,17 @@ def main(emit):
             bulk_p = pb.get("all-gather", 0.0) + pb.get("reduce-scatter", 0.0)
             emit(f"hlo_overlap_{path}_{mode}_bulk_bytes", 0.0,
                  f"{bulk_p/1e3:.1f}KB")
-    return {"compare": out, "overlap": ov}
+    res_l = run_residual()
+    if "error" in res_l:
+        emit("hlo_residual", 0.0, "ERROR")
+    else:
+        for layout in ("replicated", "seq"):
+            for mode, row in res_l[layout].items():
+                b = row["bytes"]
+                bulk = b.get("all-gather", 0.0) + b.get("reduce-scatter", 0.0)
+                emit(f"hlo_residual_{layout}_{mode}_bulk_bytes", 0.0,
+                     f"{bulk/1e3:.1f}KB")
+            emit(f"hlo_residual_{layout}_act_bytes", 0.0,
+                 f"{res_l[layout]['ring']['residual_bytes_per_die']/1e3:.1f}"
+                 "KB/die")
+    return {"compare": out, "overlap": ov, "residual": res_l}

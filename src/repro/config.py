@@ -92,6 +92,10 @@ class ModelConfig:
     # modality frontend stub: number of prefix embeddings supplied by input_specs()
     # (audio frames for whisper encoder, image patches for paligemma).
     frontend_stub_len: int = 0
+    # dropout applied to the embedding output (computed on the local token
+    # shard of the sequence-sharded residual stream; needs a "dropout_rng"
+    # batch entry to be active — omitted rng means deterministic eval).
+    embed_dropout: float = 0.0
     max_seq_len: int = 1_048_576
     dtype_note: str = "bf16 compute / fp32 master"
 
@@ -169,6 +173,17 @@ class ParallelConfig:
     # double-buffered remote DMA (kernels/ring_matmul.py; falls back to
     # "ring" per collective on non-tile-aligned shapes).
     overlap: str = "none"
+    # Canonical inter-block residual-stream layout (parallel/sharding.py
+    # RESIDUAL_LAYOUTS): "seq" keeps activations token-sharded over the model
+    # axes between blocks — hecaton's Alg. 1 tiling natively, and the
+    # Korthikanti-style sequence-parallel layout for the megatron baseline
+    # (column-parallel gathers the sequence at entry, row-parallel
+    # reduce-scatters it at exit; both ride the ``overlap`` ring lattice).
+    # "replicated" restores the classic 1D-TP model-replicated residual
+    # (per-die activation memory does NOT shrink with N — the property the
+    # paper criticizes in §V-A(b)).  Decode and non-dividing sequence extents
+    # fall back to "replicated" per call site.
+    residual: str = "seq"
     # microbatches for grad accumulation (paper's mini-batches)
     microbatches: int = 8
     # attention layout preference (see parallel/sharding.py solver)
@@ -181,6 +196,8 @@ class ParallelConfig:
         assert self.overlap in ("none", "ring", "bidir", "fused"), (
             f"overlap={self.overlap!r} not in "
             f"('none', 'ring', 'bidir', 'fused')")
+        assert self.residual in ("seq", "replicated"), (
+            f"residual={self.residual!r} not in ('seq', 'replicated')")
 
     @property
     def total_devices(self) -> int:

@@ -34,6 +34,14 @@ recomputes gathers (core/schedule.py).
 All functions are no-ops (plain einsums) when ``mesh is None`` so the same model code
 runs single-device smoke tests.
 
+Residual layout: the canonical inter-block activation contract
+(``ParallelConfig.residual == "seq"``) is the SEQ-SHARDED residual stream —
+for these ops that is simply Alg. 1's native tiling P(data, t_ax, h_ax):
+every primitive here already accepts token-scattered inputs without an
+up-front gather, which is why no block boundary carries a bulk collective.
+The flag exists for the megatron baseline (parallel/megatron.py), whose
+replicated layout is kept as the §V-A(b) comparison point.
+
 Communication/compute overlap (``overlap=`` on every op, plumbed from
 ``ParallelConfig.overlap`` via ``parallel/context.py``):
 
@@ -312,31 +320,67 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
 # sums the vocab partials and restores the canonical activation tiling.
 # (Also works around an XLA GSPMD bug partitioning gathers from 2D-sharded
 # tables: dynamic-slice verifier failure, observed jax 0.8.2 CPU backend.)
+#
+# With ``overlap`` != "none" the last bulk collective outside the hot paths
+# honours the mode lattice too: the ids gather and the vocab-partial
+# reduce-scatter run as ppermute rings, and ``"fused"`` additionally routes
+# the collect through the single-kernel matmul-RS (the vocab partial is
+# expressed as a one-hot matmul so there is a matmul to fuse the scatter
+# into) when the local vocab slice is small enough for that to be a win —
+# larger slices degrade to the ring reduce-scatter, per the lattice.
 # ---------------------------------------------------------------------------
+
+# local vocab slice above which the one-hot-matmul form of the vocab collect
+# (the fused matmul-RS route) costs more MXU time than it hides — degrade to
+# the plain ring reduce-scatter beyond it.
+EMBED_FUSED_VMAX = 2048
 
 
 def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
              t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
              compute_dtype=jnp.bfloat16, seq_sharded: bool = True,
-             batch_sharded: bool = True) -> jax.Array:
+             batch_sharded: bool = True, overlap: str = "none") -> jax.Array:
     """ids [B,S] -> embeddings.
 
     seq_sharded=True (train/prefill): ids arrive tokens-over-t_ax, output is
-    canonical [B, S/t_ax, H/h_ax].  seq_sharded=False (decode): ids replicated,
-    output [B, S, H/h_ax] with a psum over t_ax instead of the scatter.
+    canonical [B, S/t_ax, H/h_ax] (for megatron callers ``h_ax=None``: the
+    seq-sharded residual P(d, model, None)).  seq_sharded=False (decode): ids
+    replicated, output [B, S, H/h_ax] with a psum over t_ax instead of the
+    scatter.  ``overlap`` != "none" replaces the bulk ids-gather / vocab
+    reduce-scatter with the ring forms (fused one-hot matmul-RS when cheap).
     """
+    OV.check_mode(overlap)
     if mesh is None:
         return jnp.take(table, ids, axis=0).astype(compute_dtype)
+    n_t = mesh.shape[t_ax]
+    bidir = overlap == "bidir"
 
     def f(ids_l, tab_l):
-        idg = _ag(ids_l, t_ax, 1) if seq_sharded else ids_l
+        if seq_sharded and overlap != "none":
+            idg = OV.ring_all_gather(ids_l, t_ax, dim=1, n=n_t, bidir=bidir)
+        elif seq_sharded:
+            idg = _ag(ids_l, t_ax, 1)
+        else:
+            idg = ids_l
         v_loc = tab_l.shape[0]
         off = lax.axis_index(t_ax) * v_loc
         lid = idg - off
         ok = (lid >= 0) & (lid < v_loc)
+        if (seq_sharded and overlap == "fused" and v_loc <= EMBED_FUSED_VMAX
+                and OV.rs_ok(idg.shape[1], n_t)):
+            # one-hot form: emb_partial = onehot @ table_slice, which the
+            # fused dispatcher can run as a single-kernel matmul ⊕ RS
+            onehot = (jnp.where(ok, lid, v_loc)[..., None]
+                      == jnp.arange(v_loc)[None, None, :]).astype(compute_dtype)
+            tab = tab_l.astype(compute_dtype)
+            return OV.matmul_rs(onehot, tab, t_ax, scatter_dim=1, n=n_t,
+                                overlap=overlap, mesh_axes=mesh.axis_names)
         emb = jnp.take(tab_l, jnp.clip(lid, 0, v_loc - 1), axis=0)
         emb = (emb * ok[..., None]).astype(compute_dtype)
         if seq_sharded:
+            if overlap != "none" and OV.rs_ok(emb.shape[1], n_t):
+                return OV.ring_reduce_scatter(emb, t_ax, dim=1, n=n_t,
+                                              bidir=bidir)
             return _rs(emb, t_ax, 1)        # sums vocab partials + tiles tokens
         return lax.psum(emb, t_ax)
 

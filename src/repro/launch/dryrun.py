@@ -71,16 +71,30 @@ def _batch_sharding(mesh, pcfg, batch_structs, *, global_batch):
     d = shd._one(ax.data_axes)
     if global_batch % ax.n_data:
         d = None                      # e.g. long_500k batch=1: data axis idle
-    seq_ax = ax.t_ax if pcfg.strategy == "hecaton" else None
+    if pcfg.strategy == "hecaton":
+        seq_ax = ax.t_ax
+    elif pcfg.residual == "seq":
+        # megatron seq-sharded residual: inputs arrive token-sharded over the
+        # model axis so the embedding scatter lands in the canonical layout
+        seq_ax = shd._one(ax.model_axes)
+    else:
+        seq_ax = None
+
+    def s_ok(extent):
+        # shard a sequence-like dim only when it divides the token ring
+        # (e.g. whisper's 1500 frames do NOT divide a 16-way model ring)
+        return (seq_ax is not None and extent > 1
+                and extent % ax.size(seq_ax) == 0)
+
     out = {}
     for k, v in batch_structs.items():
         rank = len(v.shape)
-        if k in ("patches", "frames"):
-            spec = P(d, seq_ax, None)
+        if k == "dropout_rng":
+            spec = P()                # PRNG key: replicated, never sharded
+        elif k in ("patches", "frames"):
+            spec = P(d, seq_ax if s_ok(v.shape[1]) else None, None)
         elif rank == 2:
-            s = seq_ax if (v.shape[1] % ax.size(seq_ax) == 0 and
-                           v.shape[1] > 1) else None
-            spec = P(d, s)
+            spec = P(d, seq_ax if s_ok(v.shape[1]) else None)
         else:
             spec = P(d)
         out[k] = NamedSharding(mesh, spec)

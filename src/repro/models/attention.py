@@ -167,9 +167,12 @@ def apply_attn(pctx, cfg: ModelConfig, p, x, *, positions, causal: bool = True,
     nh, nkv = cfg.num_heads, cfg.num_kv_heads
     B, S, _ = x.shape
 
-    q = pctx.mixer_in(x, p["wq"]).reshape(B, S, nh, dh)
-    k = pctx.mixer_in(x, p["wk"]).reshape(B, S, nkv, dh)
-    v = pctx.mixer_in(x, p["wv"]).reshape(B, S, nkv, dh)
+    # one shared entry gather for the q/k/v trio (megatron seq layout
+    # ring-gathers the token shard once; hecaton/replicated fall back)
+    qp, kp, vp = pctx.mixer_in_many(x, p["wq"], p["wk"], p["wv"])
+    q = qp.reshape(B, S, nh, dh)
+    k = kp.reshape(B, S, nkv, dh)
+    v = vp.reshape(B, S, nkv, dh)
 
     hspec = pctx.heads_spec(layout) if layout is not None else None
     q = pctx.constraint(q, hspec)
@@ -243,9 +246,8 @@ def cross_kv(pctx, cfg: ModelConfig, p, memory):
     """Precompute cross-attention K/V from encoder output (cached for decode)."""
     B, Sm, _ = memory.shape
     dh, nkv = cfg.resolved_head_dim, cfg.num_kv_heads
-    k = pctx.mixer_in(memory, p["wk"]).reshape(B, Sm, nkv, dh)
-    v = pctx.mixer_in(memory, p["wv"]).reshape(B, Sm, nkv, dh)
-    return k, v
+    kp, vp = pctx.mixer_in_many(memory, p["wk"], p["wv"])
+    return kp.reshape(B, Sm, nkv, dh), vp.reshape(B, Sm, nkv, dh)
 
 
 # ---------------------------------------------------------------------------
@@ -260,13 +262,13 @@ def apply_mla(pctx, cfg: ModelConfig, p, x, *, positions,
     B, S, _ = x.shape
     hspec = pctx.heads_spec(layout) if layout is not None else None
 
-    ql = pctx.mixer_in(x, p["wq_a"])
+    ql, kv = pctx.mixer_in_many(x, p["wq_a"], p["wkv_a"])
     ql = L.apply_norm("rmsnorm", {"scale": p["q_norm"]}, ql)
-    q = pctx.mixer_in(ql, p["wq_b"]).reshape(B, S, nh, dn + dr)
+    # ql is mixer-interior (full sequence already gathered): interior=True
+    # keeps the megatron seq-sharded path from re-gathering a non-entry
+    q = pctx.mixer_in(ql, p["wq_b"], interior=True).reshape(B, S, nh, dn + dr)
     q = pctx.constraint(q, hspec)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-
-    kv = pctx.mixer_in(x, p["wkv_a"])
     c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
     c_kv = L.apply_norm("rmsnorm", {"scale": p["kv_norm"]}, c_kv)
 

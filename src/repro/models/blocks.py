@@ -46,9 +46,13 @@ def init_stacked(init_fn, n: int, key):
 def apply_attn_block(pctx, cfg: ModelConfig, p, x, *, positions, layout,
                      causal=True, cache=None, memory_kv=None,
                      ) -> Tuple[jax.Array, Any, jax.Array]:
-    """Returns (x, new_cache, aux_loss)."""
+    """Returns (x, new_cache, aux_loss).
+
+    Pre-norms and residual adds run on the canonical (seq-sharded) residual
+    layout via the PCtx entry points — the whole block boundary is shard-local
+    work; the mixers gather/scatter the sequence internally."""
     aux = jnp.zeros((), jnp.float32)
-    h = L.apply_norm(cfg.norm_kind, p["norm1"], x)
+    h = pctx.norm(cfg.norm_kind, p["norm1"], x)
     if cfg.mla:
         a, new_cache = ATT.apply_mla(pctx, cfg, p["attn"], h, positions=positions,
                                      cache=cache, layout=layout)
@@ -57,10 +61,10 @@ def apply_attn_block(pctx, cfg: ModelConfig, p, x, *, positions, layout,
                                       causal=causal, cache=cache, layout=layout)
     x = pctx.canon(x + a)
     if memory_kv is not None:
-        h = L.apply_norm(cfg.norm_kind, p["norm_x"], x)
+        h = pctx.norm(cfg.norm_kind, p["norm_x"], x)
         a = ATT.apply_cross_attn(pctx, cfg, p["xattn"], h, memory_kv, layout=layout)
         x = pctx.canon(x + a)
-    h = L.apply_norm(cfg.norm_kind, p["norm2"], x)
+    h = pctx.norm(cfg.norm_kind, p["norm2"], x)
     if cfg.moe:
         m, aux = MLP.apply_moe(pctx, cfg, p["mlp"], h)
     else:
@@ -71,7 +75,7 @@ def apply_attn_block(pctx, cfg: ModelConfig, p, x, *, positions, layout,
 
 def apply_mamba_block(pctx, cfg: ModelConfig, p, x, *, layout, state=None,
                       ) -> Tuple[jax.Array, Any]:
-    h = L.apply_norm(cfg.norm_kind, p["norm1"], x)
+    h = pctx.norm(cfg.norm_kind, p["norm1"], x)
     m, new_state = SSM.apply_mamba(pctx, cfg, p["mixer"], h, state=state,
                                    layout=layout)
     return pctx.canon(x + m.astype(x.dtype)), new_state

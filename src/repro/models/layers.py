@@ -52,6 +52,18 @@ def apply_norm(kind: str, params, x, eps: float = 1e-6):
     raise KeyError(kind)
 
 
+def dropout(x, rate: float, rng=None):
+    """Inverted dropout; identity when rate is 0 or no rng is supplied.
+
+    Called on the canonical (seq-sharded) residual via ``PCtx.dropout`` so the
+    mask is drawn shard-local under GSPMD — no replicated [B,S,H] mask."""
+    if rate <= 0.0 or rng is None:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(rng, keep, x.shape)
+    return jnp.where(mask, x / keep, 0).astype(x.dtype)
+
+
 def rms_head_norm(scale, x, eps: float = 1e-6):
     """qk-norm: RMSNorm over head_dim of [..., head_dim]."""
     xf = x.astype(jnp.float32)

@@ -6,6 +6,10 @@ Remat (core/schedule.py policies) wraps the scan body.
 
 Sharding: all projections route through PCtx (Hecaton Alg. 1 or the Megatron
 baseline); embeddings / norms / loss are jit-level ops under GSPMD constraints.
+The residual stream stays in the canonical seq-sharded layout
+(``ParallelConfig.residual``) across the whole layer scan: embedding output,
+dropout, pre-norms, residual adds and the final norm all run on the local
+token shard, so no block boundary carries a bulk collective.
 """
 
 from __future__ import annotations
@@ -309,6 +313,10 @@ def forward(pctx, cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
         is_prefix = (positions < P_len)[..., None]
         x = jnp.where(is_prefix, patches_full, x)
     x = pctx.canon(x)
+    if cfg.embed_dropout and pctx.mode == "train":
+        # shard-local: the mask is drawn on the canonical (seq-sharded)
+        # residual, so no replicated [B,S,H] ever materializes
+        x = pctx.dropout(x, cfg.embed_dropout, batch.get("dropout_rng"))
 
     layout = pctx.attn_layout(cfg.num_heads, B)   # B here is the global batch
     aux = jnp.zeros((), jnp.float32)
@@ -337,7 +345,7 @@ def forward(pctx, cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
                                          positions=fpos, layout=layout,
                                          causal=cfg.encoder_is_causal, caches=None,
                                          memory=None, remat=remat)
-            mem = L.apply_norm(cfg.norm_kind, params["enc_norm"], mem)
+            mem = pctx.norm(cfg.norm_kind, params["enc_norm"], mem)
             x, aux, _ = _scan_attn_stack(pctx, cfg, params["blocks"], x,
                                          positions=positions, layout=layout,
                                          causal=True, caches=None, memory=mem,
@@ -357,7 +365,7 @@ def forward(pctx, cfg: ModelConfig, params, batch: Dict[str, jax.Array], *,
         if caches is not None:
             new_caches = {"attn": attn_c}
 
-    x = L.apply_norm(cfg.norm_kind, params["final_norm"], x)
+    x = pctx.norm(cfg.norm_kind, params["final_norm"], x)
     if skip_head:
         return LMOut(None, aux, new_caches, hidden=x)
     head_w = (params["embed"]["table"].T.astype(compute_dtype)

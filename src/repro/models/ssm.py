@@ -197,8 +197,8 @@ def apply_mamba(pctx, cfg: ModelConfig, p, x, *, state: Optional[SSMState] = Non
     Di, nh = d_inner(cfg), n_heads(cfg)
     hspec = pctx.heads_spec(layout) if layout is not None else None
 
-    z = pctx.mixer_in(x, p["wz"])                       # [B,S,Di] full seq
-    xs = pctx.mixer_in(x, p["wx"])
+    z, xs = pctx.mixer_in_many(x, p["wz"], p["wx"])     # [B,S,Di] full seq,
+    # sharing one entry gather of the token shard (megatron seq layout)
     Bp = pctx.small_proj(x, p["wB"])                    # [B,S,g*ds] (tiny)
     Cp = pctx.small_proj(x, p["wC"])
     dt = pctx.small_proj(x, p["wdt"])                   # [B,S,nh]

@@ -14,9 +14,19 @@ ring-decompose their collectives per mode, ``fused`` additionally routing
 tile-aligned collective matmuls through the single-kernel Pallas ring path
 (kernels/ring_matmul.py) with automatic fallback to ``ring`` otherwise.
 
+``ParallelConfig.residual`` ("seq" | "replicated") selects the canonical
+inter-block activation layout.  The default "seq" keeps the residual stream
+token-sharded over the model axes for the whole layer scan — hecaton's 2D
+tiling natively, the Korthikanti sequence-parallel layout P(d, model, None)
+for megatron — so the shard-local entry points here (:meth:`norm`,
+:meth:`dropout`, residual adds via :meth:`canon`) run on 1/n_t of the tokens
+and no block boundary carries a bulk collective: megatron's entry gathers /
+exit scatters ride the same overlap lattice as the hecaton ops.
+
 Decode mode always uses the 1D layout over the *combined* model axes: Alg. 1's
 token-scatter needs >= sqrt(N) tokens per step, and the paper targets training /
-finetuning (DESIGN.md §4).
+finetuning (DESIGN.md §4).  Decode therefore also forces the replicated
+residual (S=1 cannot token-scatter).
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.config import ParallelConfig
 from repro.core import hecaton as hec
+from repro.models import layers as _L
 from repro.parallel import megatron as meg
 from repro.parallel import sharding as shd
 
@@ -69,6 +80,17 @@ class PCtx:
         EP/TP collectives, and the megatron ring paths alike."""
         return self.pcfg.overlap
 
+    @property
+    def residual(self) -> str:
+        """Effective residual-stream layout (sharding.RESIDUAL_LAYOUTS).
+
+        ``pcfg.residual`` except in decode, which forces "replicated" (S=1
+        cannot token-scatter).  hecaton's canonical tiling is seq-sharded by
+        construction, so the flag only changes the megatron baseline."""
+        if self.mode == "decode":
+            return "replicated"
+        return self.pcfg.residual
+
     def constraint(self, x, spec: Optional[P]):
         if self.mesh is None or spec is None:
             return x
@@ -82,17 +104,49 @@ class PCtx:
         """Constrain [B,S,H] to the canonical block-boundary layout.
 
         Decode (S=1) cannot token-scatter: canonical is batch-over-data only,
-        hidden replicated (1D-TP residual layout)."""
+        hidden replicated (1D-TP residual layout).  A megatron sequence the
+        model ring cannot divide likewise stays replicated."""
         a = self.ax
         if a is None:
             return x
         if self.mode == "decode":
             d = a.data_axes[0] if len(a.data_axes) == 1 else a.data_axes
             return self.constraint(x, P(d, None, None))
-        return self.constraint(x, shd.act_canonical(a))
+        layout = self.residual
+        if (layout == "seq" and a.t_ax is None
+                and not shd.seq_shardable(a, x.shape[1])):
+            layout = "replicated"
+        return self.constraint(x, shd.act_canonical(a, layout))
 
     def mixer_spec(self) -> Optional[P]:
         return shd.act_mixer(self.ax)
+
+    # ------------------------------------------------------------------
+    # shard-local residual-stream ops (norm / dropout run on 1/n_t tokens)
+    # ------------------------------------------------------------------
+    def norm(self, kind: str, params, x, eps: float = 1e-6):
+        """Pre-norm on the canonical residual layout.
+
+        Norm statistics are over the (unsharded) hidden dim, so the whole op
+        is computed on the local token shard — zero communication, and under
+        the seq layout per-die norm work and activation bytes shrink by
+        1/n_t (the redundancy sequence parallelism removes)."""
+        return _L.apply_norm(kind, params, self.canon(x), eps=eps)
+
+    def dropout(self, x, rate: float, rng=None):
+        """Dropout on the local token shard of the canonical layout.
+
+        ``rng=None`` (or rate 0) is the deterministic path.  The mask is
+        generated under GSPMD on the sharded operand, so no replicated
+        [B,S,H] mask ever materializes.  The seq layout reproduces the
+        single-device mask bit-for-bit; on the 0.4.x jax series the
+        replicated megatron layout can draw a different (equally valid) mask
+        for the same key — old GSPMD's non-partitionable threefry lowering is
+        not bit-stable across program structure.  Keep rate and values are
+        exact in every layout."""
+        if rate <= 0.0 or rng is None:
+            return x
+        return _L.dropout(self.canon(x), rate, rng)
 
     # ------------------------------------------------------------------
     # projections
@@ -117,16 +171,36 @@ class PCtx:
         h = act_fn(h) * _einsum(x, w1b) if w1b is not None else act_fn(h)
         return _einsum(h, w2)
 
-    def mixer_in(self, x, w):
-        """Projection into a token mixer: out has full sequence, hidden over grid."""
+    def mixer_in(self, x, w, interior: bool = False):
+        """Projection into a token mixer: out has full sequence, hidden over grid.
+
+        ``interior=True`` marks inputs that are already mixer-interior
+        (full-sequence, hidden-sharded — e.g. MLA's second q projection) so
+        the megatron seq-sharded path does not re-gather an entry that never
+        scattered."""
         (w,) = self._cast(x, w)
         if self.use_hecaton:
             a = self.ax
             return hec.mixer_in(x, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
                                 data_axes=a.data_axes, overlap=self.overlap)
         if self.mesh is not None:
-            return meg.col_parallel(self, x, w)
+            return meg.col_parallel(self, x, w, interior=interior)
         return _einsum(x, w)
+
+    def mixer_in_many(self, x, *ws):
+        """Several mixer-in projections of the SAME residual entry (QKV and
+        friends) sharing one entry gather where the layout allows it.
+
+        megatron seq layout: routes through ``col_parallel_shared`` — the
+        sequence is ring-gathered ONCE and every projection reads the shared
+        gather (1x entry NoP bytes instead of len(ws)x; one reduce-scatter in
+        the backward).  Everything else falls back to per-weight
+        :meth:`mixer_in` (hecaton's identical per-op gathers CSE in XLA)."""
+        ws = self._cast(x, *ws)
+        if (self.mesh is not None and not self.use_hecaton
+                and self.mode != "decode"):
+            return meg.col_parallel_shared(self, x, ws)
+        return tuple(self.mixer_in(x, w) for w in ws)
 
     def mixer_out(self, y, w):
         """Projection out of a token mixer back to canonical layout."""
@@ -140,7 +214,12 @@ class PCtx:
         return _einsum(y, w)
 
     def embed(self, table, ids, compute_dtype):
-        """Vocab-parallel embedding lookup (core/hecaton.embed_2d)."""
+        """Vocab-parallel embedding lookup (core/hecaton.embed_2d).
+
+        The vocab-partial collect rides the overlap lattice too (satellite of
+        the seq-residual PR): ring ids-gather + ring reduce-scatter of the
+        embedding partials.  Under the megatron seq layout the scatter lands
+        the output directly in the canonical token-sharded residual."""
         if self.mesh is None:
             return jnp.take(table, ids, axis=0).astype(compute_dtype)
         a = self.ax
@@ -152,11 +231,13 @@ class PCtx:
             return hec.embed_2d(ids, table, mesh=self.mesh, t_ax=a.t_ax,
                                 h_ax=a.h_ax, data_axes=a.data_axes,
                                 compute_dtype=compute_dtype,
-                                seq_sharded=seq_ok, batch_sharded=batch_ok)
+                                seq_sharded=seq_ok, batch_sharded=batch_ok,
+                                overlap=self.overlap)
+        seq_ok = self.residual == "seq" and shd.seq_shardable(a, S)
         return hec.embed_2d(ids, table, mesh=self.mesh, t_ax="model",
                             h_ax=None, data_axes=a.data_axes,
-                            compute_dtype=compute_dtype, seq_sharded=False,
-                            batch_sharded=batch_ok)
+                            compute_dtype=compute_dtype, seq_sharded=seq_ok,
+                            batch_sharded=batch_ok, overlap=self.overlap)
 
     def small_proj(self, x, w):
         """Tiny projection (mamba dt/B/C, routers) whose output dim is too small
@@ -190,15 +271,6 @@ class PCtx:
         if self.use_hecaton:
             return P(d, a.h_ax, a.t_ax)
         return P(d, None, shd._one(a.model_axes))
-
-    def canon_spec_for(self, shape_seq_divisible: bool) -> Optional[P]:
-        a = self.ax
-        if a is None:
-            return None
-        d = shd._one(a.data_axes)
-        if self.mode == "decode" or not shape_seq_divisible:
-            return P(d, None, None)
-        return shd.act_canonical(a)
 
     # ------------------------------------------------------------------
     # attention layout

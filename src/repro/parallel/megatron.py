@@ -1,27 +1,39 @@
 """Megatron-style 1D tensor parallelism — the paper's baseline ("F" in Fig. 8).
 
-Column-parallel then row-parallel linears over a single ``model`` axis; the row
-output is all-reduced (GSPMD inserts the flat-ring all-reduce when we constrain the
-output back to the model-replicated layout).  Activations are replicated over the
-model axis — exactly the property the paper criticizes in §V-A(b): per-device
-activation memory does NOT shrink with N, which our memory_analysis dry-runs surface.
+Column-parallel then row-parallel linears over a single ``model`` axis.  The
+CANONICAL inter-block activation layout is the *sequence-sharded* residual
+stream (``ParallelConfig.residual == "seq"``, Korthikanti et al.): between
+blocks the [B, S, H] residual lives at P(data, model, None) — tokens sharded
+over the model ring — so pre-norm, dropout and the residual add all run on the
+local 1/n token shard, and per-die activation memory for the layer scan
+shrinks by 1/n.  Column-parallel becomes *gather-at-entry* (the sequence
+all-gather fuses into the matmul as a ring AG-matmul under ``overlap``) and
+row-parallel becomes *scatter-at-exit* (the output all-reduce is replaced by a
+matmul ⊕ reduce-scatter of the sequence dim) — same byte volume as the flat
+all-reduce, 2·(n-1)/n per element, but no model-replicated activation ever
+materializes between blocks.
 
-An optional *sequence-parallel* variant (Korthikanti et al.) is provided as a
-beyond-paper optimization knob for the baseline: activations outside matmuls are
-sharded over the sequence dim, turning each all-reduce into AG+RS (same volume as
-flat-ring all-reduce, lower memory).
+``residual == "replicated"`` restores the classic layout (activations
+replicated over the model axis between blocks; the row output is all-reduced)
+— exactly the property the paper criticizes in §V-A(b): per-device activation
+memory does NOT shrink with N, which our memory_analysis dry-runs surface.
+Decode (S=1) and sequence extents the model ring cannot divide fall back to
+the replicated layout per call.
 
 Overlap (``ParallelConfig.overlap`` != "none"): the baseline's collectives are
 ring-decomposed too, so per-mode comparisons against hecaton stay apples to
-apples.  The row-parallel all-reduce becomes matmul-RS ⊕ ring-AG over the
-1D ``model`` ring (core/overlap.py dispatchers — ``"fused"`` routes the
-matmul-RS through the single-kernel Pallas path when tile-aligned), and the
-column-parallel backward's dx all-reduce becomes the transposed ring via a
-``custom_vjp``.  Byte volume is identical to the bulk all-reduce
-(2·(n-1)/n per element); every transfer is a collective-permute.  Shapes the
-ring cannot chunk (hidden extent not divisible by the ring size, multi-axis
-``model`` meshes, decode) fall back to the bulk path — the same degradation
-contract as the hecaton ops.
+apples.  In the seq layout the entry gather runs as a ring AG-matmul and the
+exit reduce as a ring matmul-RS (core/overlap.py dispatchers — ``"fused"``
+routes tile-aligned collective matmuls through the single-kernel Pallas
+path); the backwards are the transposed rings, derived automatically by
+differentiating through the unrolled ring loops.  In the replicated layout
+the row-parallel all-reduce becomes matmul-RS ⊕ ring-AG over the 1D ``model``
+ring, and the column-parallel backward's dx all-reduce becomes the transposed
+ring via a ``custom_vjp`` (needed there because the replicated operands leave
+the model axis unmentioned in the shard_map specs).  Shapes the ring cannot
+chunk (hidden extent not divisible by the ring size, multi-axis ``model``
+meshes, decode) fall back to the bulk path — the same degradation contract as
+the hecaton ops.
 """
 
 from __future__ import annotations
@@ -33,6 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import overlap as OV
+from repro.parallel import sharding as shd
 
 
 def _einsum(x, w):
@@ -64,13 +77,37 @@ def _ring_info(pctx, h_total: int):
     return ax, n
 
 
-def col_parallel(pctx, x, w):
+def _seq_ring(pctx, seq_len: int):
+    """(axis_name, n) when the seq-sharded residual layout applies to this
+    projection's sequence extent; None keeps the replicated-residual path
+    (decode, non-dividing S, multi-axis model meshes)."""
+    a = pctx.ax
+    if pctx.residual != "seq" or a is None:
+        return None
+    if not shd.seq_shardable(a, seq_len):
+        return None
+    ax = a.model_axes[0]
+    return ax, a.size(ax)
+
+
+def col_parallel(pctx, x, w, interior: bool = False):
     """y = x @ W with W's output dim sharded over the model axes.
 
-    Forward is communication-free (x model-replicated, W column-sharded);
+    Seq-sharded residual layout (the canonical): x arrives token-sharded
+    P(d, model, None) and the sequence is gathered AT ENTRY, fused into the
+    matmul as a ring AG-matmul under ``overlap`` (bulk all-gather otherwise);
+    the backward's dx reduce-scatter is the transposed ring, for free.
+
+    Replicated layout (or ``interior=True`` for projections that consume a
+    mixer-interior full-sequence tensor, e.g. MLA's second q projection):
+    forward is communication-free (x model-replicated, W column-sharded);
     under overlap the backward's dx all-reduce runs as the transposed ring
     (matmul-RS ⊕ ring-AG over hidden chunks) instead of a bulk collective.
     """
+    if not interior:
+        seq = _seq_ring(pctx, x.shape[1])
+        if seq is not None:
+            return _col_seq(pctx, x, w, seq)
     m, d = _model_axes(pctx), _dax(pctx)
     ring = _ring_info(pctx, x.shape[-1])
     if ring is not None:
@@ -79,6 +116,32 @@ def col_parallel(pctx, x, w):
     w = pctx.constraint(w, P(None, m))
     y = _einsum(x, w)
     return pctx.constraint(y, P(d, None, m))
+
+
+def _col_seq(pctx, x, w, ring):
+    """Gather-at-entry column parallel: AG the token shard over the model
+    ring, fused into the matmul (``overlap`` != none) or bulk (none).
+
+    Unlike the replicated-layout ring, every operand mentions the model axis
+    in its shard_map spec (x on the sequence dim, w on the output dim), so
+    differentiating straight through the shard_map yields the correct
+    transposed ring — transpose(AG-matmul) = matmul-RS — with no custom_vjp.
+    """
+    ax, n = ring
+    d = _dax(pctx)
+    mesh, ov = pctx.mesh, pctx.overlap
+    x_spec, w_spec, y_spec = P(d, ax, None), P(None, ax), P(d, None, ax)
+
+    def f(xl, wl):
+        if ov != "none":
+            return OV.ag_matmul(xl, wl, ax, dim=1, n=n, overlap=ov,
+                                mesh_axes=mesh.axis_names)
+        xg = lax.all_gather(xl, ax, axis=1, tiled=True)
+        return _einsum(xg, wl)
+
+    x = pctx.constraint(x, x_spec)
+    return compat.shard_map(f, mesh, (x_spec, w_spec), y_spec)(
+        x, w.astype(x.dtype))
 
 
 def _col_ring(pctx, x, w, ring):
@@ -128,12 +191,54 @@ def _col_ring(pctx, x, w, ring):
     return col(x, w.astype(x.dtype))
 
 
-def row_parallel(pctx, y, w):
-    """out = y @ W with W's input dim sharded; output all-reduced to replicated.
+def col_parallel_shared(pctx, x, ws):
+    """Several column-parallel projections of the SAME residual entry (QKV,
+    MLA's q/kv down-projections, mamba's z/x), sharing ONE sequence gather.
 
-    Under overlap the all-reduce is decomposed into matmul-RS (contribution
-    tiles folded into a circulating accumulator) followed by a ring
-    all-gather of the reduced hidden chunks; the backward is local."""
+    Seq layout: one shard_map ring-gathers the token shard once (pure
+    ppermute ring under overlap, bulk AG otherwise) and every projection
+    reads the gathered xg — entry NoP bytes are 1x instead of len(ws)x.  The
+    backward needs only a single reduce-scatter: each dy_i @ w_iᵀ is local
+    (w is sharded on its *output* dim), the per-device contributions sum at
+    xg, and transpose(ring-AG) reduce-scatters them back to the token shard.
+    Other layouts fall back to per-weight :func:`col_parallel`."""
+    seq = _seq_ring(pctx, x.shape[1])
+    if seq is None or len(ws) == 1:
+        return tuple(col_parallel(pctx, x, w) for w in ws)
+    ax, n = seq
+    d = _dax(pctx)
+    mesh, ov = pctx.mesh, pctx.overlap
+    x_spec, w_spec, y_spec = P(d, ax, None), P(None, ax), P(d, None, ax)
+
+    def f(xl, *wls):
+        if ov != "none":
+            xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=ov == "bidir")
+        else:
+            xg = lax.all_gather(xl, ax, axis=1, tiled=True)
+        return tuple(_einsum(xg, wl) for wl in wls)
+
+    x = pctx.constraint(x, x_spec)
+    return compat.shard_map(f, mesh, (x_spec,) + (w_spec,) * len(ws),
+                            (y_spec,) * len(ws))(
+        x, *[w.astype(x.dtype) for w in ws])
+
+
+def row_parallel(pctx, y, w):
+    """out = y @ W with W's input dim sharded; partial outputs reduced.
+
+    Seq-sharded residual layout (the canonical): the model-axis reduction is a
+    *scatter-at-exit* — matmul ⊕ reduce-scatter of the sequence dim (ring
+    matmul-RS under ``overlap``), returning the residual token-sharded
+    P(d, model, None).  Half the bulk all-reduce's exit bytes, and no
+    model-replicated [B, S, H] is ever materialized.
+
+    Replicated layout: output all-reduced to replicated.  Under overlap the
+    all-reduce is decomposed into matmul-RS (contribution tiles folded into a
+    circulating accumulator) followed by a ring all-gather of the reduced
+    hidden chunks; the backward is local."""
+    seq = _seq_ring(pctx, y.shape[1])
+    if seq is not None:
+        return _row_seq(pctx, y, w, seq)
     m, d = _model_axes(pctx), _dax(pctx)
     ring = _ring_info(pctx, w.shape[-1])
     if ring is not None:
@@ -143,6 +248,28 @@ def row_parallel(pctx, y, w):
     out = _einsum(y, w)
     # constraining to model-replicated forces GSPMD's all-reduce (flat ring on ICI)
     return pctx.constraint(out, P(d, None, None))
+
+
+def _row_seq(pctx, y, w, ring):
+    """Scatter-at-exit row parallel: the partial-sum reduction over the model
+    ring reduce-scatters the SEQUENCE dim, restoring the token-sharded
+    residual.  transpose(matmul-RS) = AG-matmul, so the backward re-gathers
+    the cotangent sequence as a ring too — all differentiate-through."""
+    ax, n = ring
+    d = _dax(pctx)
+    mesh, ov = pctx.mesh, pctx.overlap
+    y_spec, w_spec, o_spec = P(d, None, ax), P(ax, None), P(d, ax, None)
+
+    def f(yl, wl):
+        if ov != "none" and OV.rs_ok(yl.shape[1], n):
+            return OV.matmul_rs(yl, wl, ax, scatter_dim=1, n=n, overlap=ov,
+                                mesh_axes=mesh.axis_names)
+        return lax.psum_scatter(_einsum(yl, wl), ax, scatter_dimension=1,
+                                tiled=True)
+
+    y = pctx.constraint(y, y_spec)
+    return compat.shard_map(f, mesh, (y_spec, w_spec), o_spec)(
+        y, w.astype(y.dtype))
 
 
 def _row_ring(pctx, y, w, ring):
@@ -189,9 +316,53 @@ def _row_ring(pctx, y, w, ring):
 
 
 def ffn(pctx, x, w1, w2, act_fn, w1b=None):
+    """Column→row FFN.  Seq layout runs the whole block in ONE shard_map so
+    the gated variant's two up-projections share a single entry gather of the
+    token shard (zero extra communication for the gate — the same layer-fusion
+    property hecaton's ffn_block has)."""
+    seq = _seq_ring(pctx, x.shape[1])
+    if seq is not None:
+        return _ffn_seq(pctx, x, w1, w2, act_fn, w1b, seq)
     h = col_parallel(pctx, x, w1)
     if w1b is not None:
         h = act_fn(h) * col_parallel(pctx, x, w1b)
     else:
         h = act_fn(h)
     return row_parallel(pctx, h, w2)
+
+
+def _ffn_seq(pctx, x, w1, w2, act_fn, w1b, ring):
+    """Seq-sharded FFN: entry AG (ring, shared by the gated pair) → local
+    column matmuls → exit matmul-RS of the sequence dim.  One gather + one
+    scatter per block, both collective-permute chains under overlap."""
+    ax, n = ring
+    d = _dax(pctx)
+    mesh, ov = pctx.mesh, pctx.overlap
+
+    def f(xl, w1l, w2l, *rest):
+        bidir = ov == "bidir"
+        if rest:                                   # gated: share the gathered x
+            if ov != "none":
+                xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=bidir)
+            else:
+                xg = lax.all_gather(xl, ax, axis=1, tiled=True)
+            h = act_fn(_einsum(xg, w1l)) * _einsum(xg, rest[0])
+        elif ov != "none":
+            h = act_fn(OV.ag_matmul(xl, w1l, ax, dim=1, n=n, overlap=ov,
+                                    mesh_axes=mesh.axis_names))
+        else:
+            xg = lax.all_gather(xl, ax, axis=1, tiled=True)
+            h = act_fn(_einsum(xg, w1l))
+        if ov != "none" and OV.rs_ok(h.shape[1], n):
+            return OV.matmul_rs(h, w2l, ax, scatter_dim=1, n=n, overlap=ov,
+                                mesh_axes=mesh.axis_names)
+        return lax.psum_scatter(_einsum(h, w2l), ax, scatter_dimension=1,
+                                tiled=True)
+
+    x_spec = P(d, ax, None)
+    in_specs = [x_spec, P(None, ax), P(ax, None)]
+    args = [pctx.constraint(x, x_spec), w1.astype(x.dtype), w2.astype(x.dtype)]
+    if w1b is not None:
+        in_specs.append(P(None, ax))
+        args.append(w1b.astype(x.dtype))
+    return compat.shard_map(f, mesh, tuple(in_specs), x_spec)(*args)

@@ -120,13 +120,37 @@ def solve_attn_layout(ax: AxisInfo, n_heads: int, batch_per_data: int,
 # Canonical activation / param spec helpers
 # ---------------------------------------------------------------------------
 
-def act_canonical(ax: Optional[AxisInfo]) -> Optional[P]:
-    """[B, S, H] spec at block boundaries."""
+# Inter-block residual-stream layouts (ParallelConfig.residual):
+#   "seq"        — tokens sharded over the model axes between blocks.  The
+#                  hecaton canonical tiling P(d, mx, my) is natively
+#                  sequence-sharded; for megatron this is the Korthikanti
+#                  sequence-parallel layout P(d, model, None).
+#   "replicated" — classic 1D-TP model-replicated residual P(d, None, None)
+#                  (kept as the comparison baseline and the decode layout).
+RESIDUAL_LAYOUTS = ("seq", "replicated")
+
+
+def check_residual(layout: str) -> str:
+    if layout not in RESIDUAL_LAYOUTS:
+        raise ValueError(f"residual={layout!r} not in {RESIDUAL_LAYOUTS}")
+    return layout
+
+
+def act_canonical(ax: Optional[AxisInfo], layout: str = "seq") -> Optional[P]:
+    """[B, S, H] spec at block boundaries for the given residual layout.
+
+    hecaton's 2D tiling is sequence-sharded by construction (tokens over
+    ``t_ax``, hidden over ``h_ax``) regardless of ``layout``; megatron
+    switches between the seq-sharded P(d, model, None) and the
+    model-replicated P(d, None, None) residual."""
     if ax is None:
         return None
+    check_residual(layout)
     d = _one(ax.data_axes)
     if ax.t_ax is not None:
         return P(d, ax.t_ax, ax.h_ax)
+    if layout == "seq":
+        return P(d, _one(ax.model_axes), None)
     return P(d, None, None)            # megatron: activations model-replicated
 
 
@@ -136,6 +160,19 @@ def act_mixer(ax: Optional[AxisInfo]) -> Optional[P]:
         return None
     d = _one(ax.data_axes)
     return P(d, None, _one(ax.model_axes))
+
+
+def seq_shardable(ax: Optional[AxisInfo], seq_len: int) -> bool:
+    """Can a megatron residual of this sequence extent shard over the model
+    axes?  Requires a single non-degenerate model axis that divides the
+    sequence; anything else (decode's S=1 included) falls back to the
+    replicated residual at the call site."""
+    if ax is None or ax.t_ax is not None:
+        return False                    # hecaton: handled by its own tiling
+    if len(ax.model_axes) != 1:
+        return False
+    n = ax.size(ax.model_axes[0])
+    return n > 1 and seq_len > 1 and seq_len % n == 0
 
 
 def vocab_spec(ax: Optional[AxisInfo]) -> Optional[P]:

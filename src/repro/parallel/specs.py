@@ -113,17 +113,30 @@ def opt_state_specs(pspecs, params_shape, mesh: Optional[Mesh],
 
 
 def batch_specs(mesh: Optional[Mesh], pcfg: ParallelConfig, *, microbatched: bool,
-                keys=("tokens", "labels")):
-    """Input batch specs: batch over data axes; sequence over t_ax (hecaton)."""
+                keys=("tokens", "labels"), seq_len: Optional[int] = None):
+    """Input batch specs: batch over data axes; sequence over the token axis.
+
+    hecaton always token-scatters over ``t_ax``; megatron scatters over the
+    ``model`` axis when the seq-sharded residual layout is active (and, when
+    ``seq_len`` is given, divides the model ring) so inputs arrive already in
+    the canonical block-boundary layout — no entry reshard."""
     if mesh is None:
         return {k: None for k in keys}
     ax = shd.axis_info(mesh, pcfg.strategy)
     d = shd._one(ax.data_axes)
-    seq_ax = ax.t_ax if pcfg.strategy == "hecaton" else None
+    if pcfg.strategy == "hecaton":
+        seq_ax = ax.t_ax
+    elif pcfg.residual == "seq" and (seq_len is None
+                                     or shd.seq_shardable(ax, seq_len)):
+        seq_ax = shd._one(ax.model_axes)
+    else:
+        seq_ax = None
     lead = (None,) if microbatched else ()
     out = {}
     for k in keys:
-        if k in ("tokens", "labels", "loss_mask", "positions"):
+        if k == "dropout_rng":
+            out[k] = P(*lead)         # PRNG key(s): replicated, never sharded
+        elif k in ("tokens", "labels", "loss_mask", "positions"):
             out[k] = P(*lead, d, seq_ax)
         elif k in ("patches", "frames"):
             out[k] = P(*lead, d, seq_ax, ax.h_ax if ax.h_ax else None)

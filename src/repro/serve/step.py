@@ -35,14 +35,13 @@ def build_prefill(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig, mesh,
             Fl = frames.shape[1]
             fpos = jnp.broadcast_to(jnp.arange(Fl, dtype=jnp.int32)[None],
                                     (B, Fl))
-            from repro.models import blocks as BLK, layers as LY
             mem = enc_pctx.canon(frames)
             layout = enc_pctx.attn_layout(cfg.num_heads, B)
             mem, _, _ = lm._scan_attn_stack(
                 enc_pctx, cfg, params["encoder"], mem, positions=fpos,
                 layout=layout, causal=cfg.encoder_is_causal, caches=None,
                 memory=None, remat="none")
-            mem = LY.apply_norm(cfg.norm_kind, params["enc_norm"], mem)
+            mem = enc_pctx.norm(cfg.norm_kind, params["enc_norm"], mem)
 
             def per_layer_kv(p_l):
                 return ATT.cross_kv(enc_pctx, cfg, p_l["xattn"], mem)

@@ -23,12 +23,19 @@ from repro.parallel.context import PCtx
 
 
 def microbatch_split(batch: Dict[str, jax.Array], n_micro: int):
-    """[B, ...] -> [n_micro, B/n_micro, ...] for every array in the batch."""
+    """[B, ...] -> [n_micro, B/n_micro, ...] for every array in the batch.
+
+    A ``dropout_rng`` key is not batch-shaped: it is *split* into one
+    independent PRNG key per microbatch instead (so every microbatch draws a
+    distinct dropout mask), which keeps every leaf scannable over the leading
+    microbatch dim."""
     def split(a):
         B = a.shape[0]
         assert B % n_micro == 0, f"batch {B} % microbatches {n_micro}"
         return a.reshape(n_micro, B // n_micro, *a.shape[1:])
-    return {k: split(v) for k, v in batch.items() if hasattr(v, "shape")}
+    return {k: (jax.random.split(v, n_micro) if k == "dropout_rng"
+                else split(v))
+            for k, v in batch.items() if hasattr(v, "shape")}
 
 
 def build_train_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,

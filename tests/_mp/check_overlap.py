@@ -7,6 +7,13 @@ fused handles them via degraded tile sizes), the fused LM loss's per-chunk
 contraction gather, and — for "fused" — the Pallas ring kernels running their
 interpret/ppermute-emulated path (kernels/ring_matmul.py).
 
+Also checks the residual-stream layouts: the megatron baseline under
+``ParallelConfig.residual`` seq vs replicated (gather-at-entry col /
+scatter-at-exit row, all overlap modes) on 1x8 / 2x4 / 4x2 model rings,
+embed_2d's overlapped vocab scatter, and a full-model train loss+grad on a
+megatron mesh in both layouts — everything against the single-device dense
+reference.
+
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 import os
@@ -113,6 +120,130 @@ def check_fused_loss(mesh):
         print(f"fused_lm_loss: {ov} fwd+grad OK")
 
 
+def check_megatron_residual(mesh, tag):
+    """meg col→row mixer + gated ffn, seq vs replicated residual, all modes."""
+    from repro.config import ParallelConfig
+    from repro.parallel import megatron as MEG
+    from repro.parallel.context import PCtx
+
+    n_d = mesh.shape["data"]
+    n_m = mesh.shape["model"]
+    B, S, Hd, F = 2 * n_d, 16, 24, 48     # S divides every model ring tested
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (B, S, Hd), jnp.float32)
+    w1 = jax.random.normal(k2, (Hd, F), jnp.float32) / np.sqrt(Hd)
+    w2 = jax.random.normal(k3, (F, Hd), jnp.float32) / np.sqrt(F)
+    wb = jax.random.normal(k4, (Hd, F), jnp.float32) / np.sqrt(Hd)
+
+    def ffn_ref(x, w1, w2, wb):
+        return (jax.nn.silu(x @ w1) * (x @ wb)) @ w2
+
+    def mix_ref(x, w1, w2):
+        return jnp.tanh(x @ w1) @ w2
+
+    gfr = jax.grad(lambda *a: ffn_ref(*a).sum(), argnums=(0, 1, 2, 3))(
+        x, w1, w2, wb)
+    gmr = jax.grad(lambda *a: mix_ref(*a).sum(), argnums=(0, 1, 2))(x, w1, w2)
+
+    for residual in ("replicated", "seq"):
+        for ov in ("none", "ring", "bidir", "fused"):
+            pctx = PCtx(mesh=mesh, pcfg=ParallelConfig(
+                strategy="megatron", data=n_d, model=n_m, overlap=ov,
+                residual=residual, zero1=False), mode="train")
+
+            def ffn(x, w1, w2, wb, _p=pctx):
+                return MEG.ffn(_p, x, w1, w2, jax.nn.silu, wb)
+
+            def mix(x, w1, w2, _p=pctx):
+                a = MEG.col_parallel(_p, x, w1)
+                return MEG.row_parallel(_p, jnp.tanh(a), w2)
+
+            _close(jax.jit(ffn)(x, w1, w2, wb), ffn_ref(x, w1, w2, wb),
+                   f"{tag}/{residual}/{ov} ffn fwd")
+            gf = jax.jit(jax.grad(lambda *a: ffn(*a).sum(),
+                                  argnums=(0, 1, 2, 3)))(x, w1, w2, wb)
+            for got, want in zip(gf, gfr):
+                _close(got, want, f"{tag}/{residual}/{ov} ffn grad")
+            _close(jax.jit(mix)(x, w1, w2), mix_ref(x, w1, w2),
+                   f"{tag}/{residual}/{ov} mixer fwd")
+            gm = jax.jit(jax.grad(lambda *a: mix(*a).sum(),
+                                  argnums=(0, 1, 2)))(x, w1, w2)
+            for got, want in zip(gm, gmr):
+                _close(got, want, f"{tag}/{residual}/{ov} mixer grad")
+        print(f"{tag}: megatron {residual} residual fwd+grad OK")
+
+
+def check_megatron_model(mesh):
+    """Full-model train loss + grads, seq vs replicated residual, vs ref."""
+    from repro.config import ModelConfig, ParallelConfig
+    from repro.models import lm
+    from repro.parallel import specs as SP
+    from repro.parallel.context import PCtx
+
+    cfg = ModelConfig(name="res-test", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, mlp_kind="swiglu", qk_norm=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1),
+             "_dtype": jnp.float32}
+    pctx1 = PCtx(None, ParallelConfig(data=1, model=1, mx=1, my=1))
+    ref, _ = lm.train_loss(pctx1, cfg, params, batch, remat="none")
+    gref = jax.grad(lambda p: lm.train_loss(pctx1, cfg, p, batch,
+                                            remat="none")[0])(params)
+
+    n_d, n_m = mesh.shape["data"], mesh.shape["model"]
+    for residual in ("replicated", "seq"):
+        for ov in ("none", "ring", "fused"):
+            pcfg = ParallelConfig(strategy="megatron", data=n_d, model=n_m,
+                                  overlap=ov, residual=residual, zero1=False)
+            pspecs = SP.param_specs(params, mesh, pcfg)
+            params_s = jax.device_put(params, SP.sharding_tree(pspecs, mesh))
+            bsp = SP.batch_specs(mesh, pcfg, microbatched=False, seq_len=16)
+            batch_s = {k: jax.device_put(batch[k],
+                                         NamedSharding(mesh, bsp[k]))
+                       for k in ("tokens", "labels")}
+            pctx = PCtx(mesh, pcfg, "train")
+
+            def loss(p, b, _pctx=pctx):
+                return lm.train_loss(_pctx, cfg, p,
+                                     {**b, "_dtype": jnp.float32},
+                                     remat="none")[0]
+
+            got = jax.jit(loss)(params_s, batch_s)
+            np.testing.assert_allclose(float(got), float(ref), rtol=1e-4,
+                                       err_msg=f"model {residual}/{ov}")
+            g = jax.jit(jax.grad(loss))(params_s, batch_s)
+            for gg, gw in zip(jax.tree_util.tree_leaves(g),
+                              jax.tree_util.tree_leaves(gref)):
+                np.testing.assert_allclose(np.asarray(gg), np.asarray(gw),
+                                           rtol=2e-3, atol=2e-4,
+                                           err_msg=f"model {residual}/{ov}")
+        print(f"megatron full model {residual} residual loss+grad OK")
+
+
+def check_embed_overlap(mesh):
+    """embed_2d overlapped ids gather + vocab scatter == take, fwd+grad."""
+    table = jax.random.normal(jax.random.PRNGKey(2), (64, 32), jnp.float32)
+    ids = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0, 64)
+    table_s = jax.device_put(table, NamedSharding(mesh, P("mx", "my")))
+    ids_s = jax.device_put(ids, NamedSharding(mesh, P("data", "mx")))
+    gr = jax.grad(lambda t: jnp.take(t, ids, axis=0).sum())(table)
+    for ov in ("none", "ring", "bidir", "fused"):
+        emb = jax.jit(lambda i, t, _ov=ov: H.embed_2d(
+            i, t, mesh=mesh, t_ax="mx", h_ax="my",
+            compute_dtype=jnp.float32, overlap=_ov))(ids_s, table_s)
+        np.testing.assert_allclose(np.asarray(emb), np.asarray(table[ids]),
+                                   rtol=1e-6, err_msg=f"embed {ov}")
+        g = jax.jit(jax.grad(lambda t, _ov=ov: H.embed_2d(
+            ids_s, t, mesh=mesh, t_ax="mx", h_ax="my",
+            compute_dtype=jnp.float32, overlap=_ov).sum()))(table_s)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=1e-6,
+                                   err_msg=f"embed {ov} grad")
+    print("embed_2d overlap modes fwd+grad OK")
+
+
 def main():
     devs = np.array(jax.devices())
     # asymmetric grid: mx ring of 4, my ring of 2; even shard extents
@@ -128,7 +259,17 @@ def main():
     # degenerate my=1 ring: RS side falls back to the (singleton) bulk path
     mesh_c = Mesh(devs.reshape(2, 4, 1), ("data", "mx", "my"))
     check_ops(mesh_c, B=4, T=8, Hd=16, O=8, tag="grid4x1")
+    check_embed_overlap(mesh_b)
     print("ALL OVERLAP NUMERICS CHECKS PASSED")
+    # megatron residual layouts: 1x8 / 2x4 / 4x2 (data x model) rings
+    check_megatron_residual(Mesh(devs.reshape(1, 8), ("data", "model")),
+                            "ring1x8")
+    check_megatron_residual(Mesh(devs.reshape(2, 4), ("data", "model")),
+                            "ring2x4")
+    check_megatron_residual(Mesh(devs.reshape(4, 2), ("data", "model")),
+                            "ring4x2")
+    check_megatron_model(Mesh(devs.reshape(2, 4), ("data", "model")))
+    print("ALL RESIDUAL LAYOUT CHECKS PASSED")
 
 
 if __name__ == "__main__":
