@@ -1,0 +1,142 @@
+"""Checkpoint-induced step-time stall: sync vs async (ISSUE 4 acceptance).
+
+Trains an embedding-heavy tiny LM (large vocab, shallow stack — cheap per-step
+compute, a state big enough that serializing it costs real wall time) and
+measures the wall time of steps that land on a checkpoint boundary vs steps
+that don't, once with the blocking CheckpointManager (device_get + serialize +
+write on the training thread) and once with AsyncCheckpointManager (host
+staging-arena snapshot at the boundary; serialization + atomic publish on the
+writer thread overlap the following steps).
+
+Rows (also persisted as ``checkpoint_stall`` in BENCH_overlap.json):
+
+  ckpt_stall_base_us        median non-boundary step (sync run — the async
+                            run's base steps absorb writer-thread contention
+                            and would bias the denominator)
+  ckpt_stall_async_base_us  median non-boundary step of the async run, for
+                            reference (includes writer contention)
+  ckpt_stall_sync_us        median boundary step, blocking saves
+  ckpt_stall_async_us       median boundary step, async saves
+  ckpt_stall_sync_x         sync boundary / base   (the stall being hidden)
+  ckpt_stall_async_x        async boundary / base  (acceptance: <= 1.5x)
+  ckpt_stall_state_mb       bytes snapshotted per checkpoint
+
+The step function donates its buffers, so the async boundary still pays the
+device→host snapshot (it must — the next step reuses the device memory); what
+the writer thread hides is everything after it.
+"""
+import time
+
+STEPS = 14
+EVERY = 4          # boundaries at local steps 3, 7, 11 (published 4, 8, 12)
+WARMUP = 2
+
+
+def _build():
+    import jax
+    import jax.numpy as jnp
+    from repro.config import ModelConfig, ParallelConfig, RunConfig
+    from repro.data.synthetic import SyntheticLM
+    from repro.train import step as TS
+
+    # ~65MB state behind a step with enough token compute that the arena
+    # snapshot (a parallel memcpy of the state) stays well under the step
+    # time, while the DURABLE serialize+fsync publish costs a multiple of it
+    cfg = ModelConfig(name="stall", family="dense", num_layers=2,
+                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                      vocab_size=8_192, mlp_kind="swiglu")
+    rc = RunConfig("t", "train", 128, 4, lr=1e-3)
+    pcfg = ParallelConfig(data=1, model=1, mx=1, my=1, microbatches=1,
+                          zero1=False)
+    ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
+                                     compute_dtype=jnp.float32),
+                 donate_argnums=(0, 1))
+    ds = SyntheticLM(cfg.vocab_size, rc.seq_len, rc.global_batch)
+    batches = [{k: jnp.asarray(v) for k, v in ds.batch_at(s).items()}
+               for s in range(STEPS + WARMUP)]
+    return cfg, ts, batches
+
+
+def _run(mgr, ts, batches, init_state):
+    """Fold ts over the batches; boundary steps include the save call (the
+    stall under test).  Returns (boundary_times, base_times) in seconds."""
+    import jax
+
+    params, opt = init_state()
+    for b in batches[:WARMUP]:
+        params, opt, m = ts(params, opt, b)
+    jax.block_until_ready(m["loss"])
+    boundary, base = [], []
+    for step, b in enumerate(batches[WARMUP:]):
+        t0 = time.perf_counter()
+        params, opt, m = ts(params, opt, b)
+        jax.block_until_ready(m["loss"])
+        is_boundary = (step + 1) % EVERY == 0
+        if is_boundary:
+            mgr.save_async(step + 1, {"params": params, "opt_state": opt})
+        dt = time.perf_counter() - t0
+        (boundary if is_boundary else base).append(dt)
+    mgr.wait_until_finished()
+    mgr.close()
+    return boundary, base
+
+
+def main(emit):
+    import tempfile
+
+    import jax
+    import numpy as np
+    from repro.checkpoint.manager import AsyncCheckpointManager, \
+        CheckpointManager
+    from repro.models import lm
+    from repro.optim import adamw
+
+    cfg, ts, batches = _build()
+
+    def init_state():
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return params, adamw.init(params)
+
+    p, o = init_state()
+    state_mb = sum(np.asarray(x).nbytes for x in
+                   jax.tree_util.tree_leaves({"p": p, "o": o})) / 1e6
+    del p, o
+
+    # durable=True on BOTH paths: the comparison is fair (identical bytes,
+    # identical fsync barrier) and realistic — a checkpoint you cannot
+    # trust after power loss hides its cost by not paying it
+    sync_b, sync_base = _run(
+        CheckpointManager(tempfile.mkdtemp(), durable=True),
+        ts, batches, init_state)
+    async_b, async_base = _run(
+        AsyncCheckpointManager(tempfile.mkdtemp(), durable=True),
+        ts, batches, init_state)
+    # baseline from the SYNC run only: in the async run the writer thread
+    # serializes during the non-boundary steps and inflates them — pooling
+    # those samples would bias the denominator the acceptance ratio divides
+    # by (the async run's base median is reported separately instead)
+    base = float(np.median(sync_base))
+    sync_us = float(np.median(sync_b)) * 1e6
+    async_us = float(np.median(async_b)) * 1e6
+    base_us = base * 1e6
+    rows = {
+        "base_us": base_us, "sync_us": sync_us, "async_us": async_us,
+        "sync_x": sync_us / base_us, "async_x": async_us / base_us,
+        "async_base_us": float(np.median(async_base)) * 1e6,
+        "state_mb": state_mb,
+    }
+    emit("ckpt_stall_base_us", base_us, f"{state_mb:.0f}MB-state")
+    emit("ckpt_stall_async_base_us", rows["async_base_us"],
+         "non-boundary-steps-while-writer-runs")
+    emit("ckpt_stall_sync_us", sync_us, f"{rows['sync_x']:.2f}x-base")
+    emit("ckpt_stall_async_us", async_us, f"{rows['async_x']:.2f}x-base")
+    emit("ckpt_stall_sync_x", 0.0, f"{rows['sync_x']:.2f}")
+    emit("ckpt_stall_async_x", 0.0,
+         f"{rows['async_x']:.2f}(acceptance<=1.5)")
+    return rows
+
+
+if __name__ == "__main__":
+    def emit(name, us, derived):
+        print(f"{name},{us:.2f},{derived}")
+    main(emit)

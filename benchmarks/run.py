@@ -14,6 +14,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                   for the hecaton FFN, MoE and megatron paths
   overlap       — wall time bulk vs ring vs bidir vs fused collective matmuls
                   (CPU mesh; fused runs the interpret-emulated kernel path)
+  ckpt_stall    — checkpoint-boundary step-time stall, blocking vs async
+                  double-buffered saves (ISSUE 4 acceptance rows)
 
 Besides the CSV, the harness persists ``BENCH_overlap.json`` next to the repo
 root: per-mode step times from ``benchmarks/overlap.py``, the micro matmul
@@ -81,11 +83,11 @@ def main() -> None:
     def emit(name, us, derived):
         rows.append(f"{name},{us:.2f},{derived}")
 
-    from benchmarks import (comm_model, dram, hlo_compare, layout,
-                            link_latency, micro, overlap, scaling)
+    from benchmarks import (ckpt_stall, comm_model, dram, hlo_compare,
+                            layout, link_latency, micro, overlap, scaling)
     results = {}
     for mod in (comm_model, scaling, dram, layout, link_latency, micro,
-                hlo_compare, overlap):
+                hlo_compare, overlap, ckpt_stall):
         try:
             results[mod.__name__.split(".")[-1]] = mod.main(emit)
         except Exception as e:  # keep the harness robust; surface the failure
@@ -99,6 +101,7 @@ def main() -> None:
             "hlo_overlap": (results.get("hlo_compare") or {}).get("overlap"),
             "residual_layouts": (results.get("hlo_compare")
                                  or {}).get("residual"),
+            "checkpoint_stall": results.get("ckpt_stall"),
         }
         from benchmarks import comm_model as _cm
         payload["theory_overlap"] = _cm.overlap_rows()

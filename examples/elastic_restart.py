@@ -1,18 +1,23 @@
 """Fault tolerance demo: inject failures mid-training, supervisor restarts from
-the latest atomic checkpoint, and the final run resumes on a RESHARDED mesh
-(elastic rescale: checkpoint written single-device, restored onto a 4-device
-mesh) with bit-exact data continuation.
+the latest atomic checkpoint, and the resumed trajectory is BIT-EXACT against
+an uninterrupted baseline run (the crash-resume divergence check CI enforces).
+
+Checkpointing runs through the ASYNC double-buffered manager: boundary steps
+only snapshot into the host staging arena; serialization + the atomic publish
+happen on the writer thread, and the supervisor's ``ckpt=`` fence aborts any
+in-flight save from a dead incarnation so a restart only ever restores a
+fully-published step.
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
-import os
 import shutil
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint.manager import CheckpointManager
-from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.checkpoint.manager import make_manager
+from repro.config import CheckpointConfig, ModelConfig, ParallelConfig, \
+    RunConfig
 from repro.data.synthetic import SyntheticLM
 from repro.models import lm
 from repro.optim import adamw
@@ -29,7 +34,7 @@ cfg = ModelConfig(name="elastic-demo", family="dense", num_layers=2,
 rc = RunConfig("e", "train", 32, 8, lr=1e-3)
 pcfg = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1)
 TOTAL = 60
-ckpt = CheckpointManager(CKPT)
+ckpt = make_manager(CKPT, CheckpointConfig(every=10, keep=3, async_=True))
 injector = FailureInjector({17: "chip down", 38: "host unreachable"})
 ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
                                  compute_dtype=jnp.float32),
@@ -37,28 +42,64 @@ ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
 ds = SyntheticLM(cfg.vocab_size, rc.seq_len, rc.global_batch)
 
 
-def make_state(_):
+def fresh_state():
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    opt = adamw.init(params)
+    return {"params": params, "opt_state": adamw.init(params)}
+
+
+def batches(lo, hi):
+    it = (ds.batch_at(s) for s in range(lo, hi))
+    return ({k: jnp.asarray(v) for k, v in b.items()} for b in it)
+
+
+# ---------------------------------------------------------------------------
+# uninterrupted baseline: the loss history every resumed run must reproduce
+# ---------------------------------------------------------------------------
+baseline = train_loop.train(ts, fresh_state(), batches(0, TOTAL),
+                            num_steps=TOTAL, log_every=20,
+                            log_fn=lambda *a: None)
+baseline_hist = dict(baseline["history"])
+print(f"baseline (uninterrupted): {sorted(baseline_hist.items())}")
+
+
+# ---------------------------------------------------------------------------
+# supervised run with injected failures + async checkpointing
+# ---------------------------------------------------------------------------
+def make_state(_):
+    state = fresh_state()
     start = 0
     if ckpt.latest_step() is not None:
-        restored, start = ckpt.restore({"params": params, "opt_state": opt})
-        params, opt = restored["params"], restored["opt_state"]
+        restored, start = ckpt.restore(
+            {"params": state["params"], "opt_state": state["opt_state"]})
+        state = {"params": restored["params"],
+                 "opt_state": restored["opt_state"]}
         print(f"  [supervisor] restored step {start}")
-    return {"params": params, "opt_state": opt}, start
+    return state, start
 
 
 def run_steps(state, start, inc):
     print(f"  [supervisor] incarnation {inc.index} from step {start}")
-    it = (ds.batch_at(s) for s in range(start, TOTAL))
-    it = ({k: jnp.asarray(v) for k, v in b.items()} for b in it)
-    return train_loop.train(ts, state, it, start_step=start, num_steps=TOTAL,
+    return train_loop.train(ts, state, batches(start, TOTAL),
+                            start_step=start, num_steps=TOTAL,
                             ckpt=ckpt, ckpt_every=10, log_every=20,
                             injector=injector)
 
 
-state, incarnations = run_supervised(make_state, run_steps, max_restarts=4)
+state, incarnations = run_supervised(make_state, run_steps, max_restarts=4,
+                                     ckpt=ckpt)
+ckpt.close()
 print(f"survived {len(injector.log)} injected failures "
       f"({incarnations} incarnations): {injector.log}")
 assert incarnations == 3 and state["history"][-1][0] == TOTAL - 1
+
+# crash-resume divergence check: every loss the resumed incarnation logged
+# must equal the uninterrupted baseline's at the same step, bit-exact
+resumed = dict(state["history"])
+assert resumed, "resumed run logged no history"
+for step, loss in sorted(resumed.items()):
+    assert baseline_hist[step] == loss, (
+        f"resumed loss diverged at step {step}: "
+        f"{loss!r} != baseline {baseline_hist[step]!r}")
+print(f"resumed losses bit-exact vs baseline at steps "
+      f"{sorted(resumed)}")
 print("elastic_restart OK")

@@ -19,8 +19,9 @@ args = ap.parse_args()
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ParallelConfig, RunConfig
-from repro.checkpoint.manager import CheckpointManager
+from repro.config import CheckpointConfig, ModelConfig, ParallelConfig, \
+    RunConfig
+from repro.checkpoint.manager import make_manager
 from repro.data.synthetic import Prefetcher, SyntheticLM
 from repro.models import lm
 from repro.optim import adamw
@@ -51,11 +52,14 @@ ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
              donate_argnums=(0, 1))
 ds = SyntheticLM(cfg.vocab_size, seq, batch)
 it = Prefetcher(iter(ds))
-ckpt = CheckpointManager(args.ckpt)
+# async double-buffered saves: the boundary step only snapshots to the host
+# staging arena; serialization+publish overlap the following steps
+ckpt = make_manager(args.ckpt, CheckpointConfig(every=100, async_=True))
 state = {"params": params, "opt_state": opt}
 state = train_loop.train(ts, state, it, num_steps=args.steps, ckpt=ckpt,
                          ckpt_every=100, log_every=20, timer=StepTimer())
 it.close()
+ckpt.close()
 h = state["history"]
 print(f"loss {h[0][1]:.3f} -> {h[-1][1]:.3f} over {args.steps} steps")
 assert h[-1][1] < h[0][1]

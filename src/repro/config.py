@@ -208,6 +208,38 @@ class ParallelConfig:
 
 
 # ---------------------------------------------------------------------------
+# Checkpoint configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    """Persistence policy for the train loop (checkpoint/manager.py).
+
+    ``async_`` selects the AsyncCheckpointManager: the step boundary only
+    snapshots param+optimizer shards into a reusable host staging arena and a
+    background writer thread serializes + atomically publishes, so the
+    compute pipeline never stalls on persistence (ISSUE 4 / the paper's
+    DRAM-traffic-hiding argument).  ``staging`` degrades the async manager to
+    the blocking path ("sync") without changing the manager type — useful for
+    A/B-ing the stall.  ``max_inflight`` bounds the arena (and therefore host
+    memory): acquiring a slot blocks when that many snapshots are unwritten.
+    """
+    every: int = 50                  # save cadence in steps
+    keep: int = 3                    # published checkpoints retained by GC
+    async_: bool = True              # background writer vs blocking save
+    staging: str = "host"            # "host" (staged async) | "sync"
+    max_inflight: int = 2            # double-buffered staging arena slots
+    durable: bool = False            # fsync data + dirs around the publish
+
+    def __post_init__(self):
+        assert self.every >= 1, f"ckpt every={self.every} must be >= 1"
+        assert self.keep >= 1, f"ckpt keep={self.keep} must be >= 1"
+        assert self.max_inflight >= 1, self.max_inflight
+        assert self.staging in ("host", "sync"), (
+            f"staging={self.staging!r} not in ('host', 'sync')")
+
+
+# ---------------------------------------------------------------------------
 # Run configuration (shape cells)
 # ---------------------------------------------------------------------------
 

@@ -39,15 +39,19 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-keep", type=int, default=3)
+    ap.add_argument("--ckpt-sync", action="store_true",
+                    help="blocking saves (default: async double-buffered "
+                         "writer that hides the persistence stall)")
     args = ap.parse_args()
     _maybe_respawn(args.mesh_devices)
 
     import dataclasses
     import jax
     import jax.numpy as jnp
-    from repro.checkpoint.manager import CheckpointManager
-    from repro.config import (ParallelConfig, RunConfig, get_config,
-                              get_smoke_config)
+    from repro.checkpoint.manager import make_manager
+    from repro.config import (CheckpointConfig, ParallelConfig, RunConfig,
+                              get_config, get_smoke_config)
     from repro.data.synthetic import Prefetcher, SyntheticLM
     from repro.launch.mesh import make_small_mesh
     from repro.optim import adamw
@@ -88,7 +92,9 @@ def main():
     ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, extras=extras)
     it = Prefetcher(iter(ds))
 
-    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
+                            async_=not args.ckpt_sync)
+    ckpt = make_manager(args.ckpt_dir, ccfg) if args.ckpt_dir else None
     start = 0
     if ckpt is not None and ckpt.latest_step() is not None:
         restored, start = ckpt.restore(
@@ -99,9 +105,11 @@ def main():
     state = {"params": params, "opt_state": opt_state}
     state = train_loop.train(ts, state, it, start_step=start,
                              num_steps=args.steps, ckpt=ckpt,
-                             ckpt_every=args.ckpt_every,
+                             ckpt_every=ccfg.every,
                              timer=StepTimer())
     it.close()
+    if ckpt is not None:
+        ckpt.close()                 # train() already drained in-flight saves
     h = state["history"]
     print(f"final loss {h[-1][1]:.4f} (first {h[0][1]:.4f})")
 

@@ -409,22 +409,34 @@ def _loss_mask(cfg, batch):
 
 
 def train_loss(pctx, cfg: ModelConfig, params, batch, *, remat: str = "fusion"):
+    from repro.parallel import megatron as meg
     mask = _loss_mask(cfg, batch)
     use_fused = (pctx.mesh is None or pctx.use_hecaton) and         pctx.pcfg.fused_loss
-    if use_fused:
-        from repro.core import hecaton as hec
+    use_meg_fused = (not use_fused and pctx.mesh is not None
+                     and pctx.pcfg.fused_loss
+                     and meg.seq_loss_ok(pctx, batch["tokens"].shape[1],
+                                         cfg.padded_vocab))
+    if use_fused or use_meg_fused:
         out = forward(pctx, cfg, params, batch, remat=remat, skip_head=True)
         compute_dtype = batch.get("_dtype", jnp.bfloat16)
         head_w = (params["embed"]["table"].T.astype(compute_dtype)
                   if cfg.tie_embeddings else
                   params["lm_head"]["w"].astype(compute_dtype))
-        a = pctx.ax
-        nll, cnt = hec.fused_lm_loss(
-            out.hidden.astype(compute_dtype), head_w, batch["labels"], mask,
-            mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
-            h_ax=a.h_ax if a else "my",
-            data_axes=a.data_axes if a else ("data",),
-            overlap=pctx.overlap)
+        hidden = out.hidden.astype(compute_dtype)
+        if use_meg_fused:
+            # megatron seq layout: labels stay sharded; the head's vocab
+            # chunks ring over the model axis (fused_lm_loss_seq)
+            nll, cnt = meg.fused_lm_loss_seq(pctx, hidden, head_w,
+                                             batch["labels"], mask)
+        else:
+            from repro.core import hecaton as hec
+            a = pctx.ax
+            nll, cnt = hec.fused_lm_loss(
+                hidden, head_w, batch["labels"], mask,
+                mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
+                h_ax=a.h_ax if a else "my",
+                data_axes=a.data_axes if a else ("data",),
+                overlap=pctx.overlap)
         loss = nll / jnp.maximum(cnt, 1.0)
     else:
         out = forward(pctx, cfg, params, batch, remat=remat)

@@ -34,6 +34,13 @@ the model axis unmentioned in the shard_map specs).  Shapes the ring cannot
 chunk (hidden extent not divisible by the ring size, multi-axis ``model``
 meshes, decode) fall back to the bulk path — the same degradation contract as
 the hecaton ops.
+
+The LM loss is fused over sequence shards too (:func:`fused_lm_loss_seq`):
+instead of gathering the sequence at the lm_head and bulk-gathering the
+sharded labels for a replicated xent, the head's vocab chunks ring over the
+model axis while each device online-softmaxes its LOCAL token shard — labels
+stay sharded end to end, closing the last block-boundary bulk collective of
+the seq residual layout (the ROADMAP megatron leftover).
 """
 
 from __future__ import annotations
@@ -313,6 +320,92 @@ def _row_ring(pctx, y, w, ring):
     row.defvjp(row_fwd, row_bwd)
     y = pctx.constraint(y, P(d, None, ax))
     return row(y, w.astype(y.dtype))
+
+
+def seq_loss_ok(pctx, seq_len: int, vocab: int) -> bool:
+    """Gate for :func:`fused_lm_loss_seq`: the seq-sharded residual layout
+    must apply to this sequence extent AND the (padded) vocab must chunk
+    evenly over the model ring so the circulating head-weight shards stay
+    equal-sized."""
+    seq = _seq_ring(pctx, seq_len)
+    if seq is None:
+        return False
+    _, n = seq
+    return n > 1 and vocab % n == 0
+
+
+def fused_lm_loss_seq(pctx, x, w, labels, loss_mask):
+    """Sequence-sharded fused LM loss for the megatron baseline — labels (and
+    the final-norm hidden) never leave their token shard.
+
+    The classic path gathers the sequence at the lm_head (col_parallel) and
+    bulk-gathers the sharded int32 labels for the replicated xent — the last
+    block-boundary bulk collective left in the seq residual layout (ROADMAP
+    megatron leftover).  Here each device keeps its LOCAL token shard
+    x [B, S/n, H] and its LOCAL vocab shard of the head W [H, V/n], and the
+    ring circulates the *weight* chunks instead: at step k a device holds
+    vocab chunk (i+k) mod n, folds the partial logits into an online-softmax
+    accumulator (running max / sum-exp, hecaton's fused_lm_loss trick), picks
+    up the gold logit when the label lands in the current chunk's vocab
+    range, and ppermutes the chunk onward.  After n steps every token has its
+    full-vocab lse and gold without any [tokens, V] logits, sequence gather,
+    or label gather materializing — the HLO carries only collective-permutes
+    (asserted by tests/test_overlap.py + the CI residual smoke check).  The
+    backward differentiates through the unrolled ring (operands all mention
+    the model axis, as in ``_col_seq``), so transpose(w-ring) is the reversed
+    w-ring and dx stays token-sharded.
+
+    Returns (masked NLL sum, mask count) as replicated scalars — the caller
+    divides.  Callers must check :func:`seq_loss_ok` first.
+    """
+    ax, n = _seq_ring(pctx, x.shape[1])
+    d = _dax(pctx)
+    mesh = pctx.mesh
+    if loss_mask is None:
+        loss_mask = jnp.ones(labels.shape, jnp.float32)
+    data_axes = pctx.ax.data_axes
+
+    def f(xl, wl, ll, ml):
+        v_loc = wl.shape[1]
+        b, s_loc, _ = xl.shape
+        i = lax.axis_index(ax)
+
+        def body(carry, k):
+            m_run, s_run, gold, wk = carry
+            lg = jnp.einsum("bth,hv->btv", xl, wk,
+                            preferred_element_type=jnp.float32)
+            v_off = ((i + k) % n) * v_loc
+            mloc = lax.stop_gradient(jnp.max(lg, axis=-1))
+            new_m = jnp.maximum(m_run, mloc)
+            s_run = (s_run * jnp.exp(m_run - new_m)
+                     + jnp.sum(jnp.exp(lg - new_m[..., None]), axis=-1))
+            onehot = ((ll[..., None] - v_off)
+                      == jnp.arange(v_loc)[None, None, :])
+            gold = gold + jnp.sum(lg * onehot, axis=-1)
+            wk = lax.ppermute(wk, ax, [(j, (j - 1) % n) for j in range(n)])
+            return (new_m, s_run, gold, wk), None
+
+        body = jax.checkpoint(body)          # recompute the logits in bwd
+        # -1e30 (not -inf): new_m at step 0 equals mloc, and a finite floor
+        # keeps exp(m_run - new_m) free of inf-inf NaNs under AD
+        init = (jnp.full((b, s_loc), -1e30, jnp.float32),
+                jnp.zeros((b, s_loc), jnp.float32),
+                jnp.zeros((b, s_loc), jnp.float32),
+                wl)
+        (m_run, s_run, gold, _), _ = lax.scan(body, init, jnp.arange(n))
+        lse = m_run + jnp.log(s_run)
+        wm = ml.astype(jnp.float32)
+        axes = data_axes + (ax,)
+        return (lax.psum(jnp.sum((lse - gold) * wm), axes),
+                lax.psum(jnp.sum(wm), axes))
+
+    x_spec = P(d, ax, None)
+    l_spec = P(d, ax)
+    return compat.shard_map(
+        f, mesh, (x_spec, P(None, ax), l_spec, l_spec), (P(), P()))(
+        pctx.constraint(x, x_spec), w.astype(x.dtype),
+        pctx.constraint(labels, l_spec),
+        pctx.constraint(loss_mask.astype(jnp.float32), l_spec))
 
 
 def ffn(pctx, x, w1, w2, act_fn, w1b=None):

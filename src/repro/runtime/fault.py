@@ -6,7 +6,15 @@ implemented (all exercised by tests/test_fault.py and examples/elastic_restart.p
 1. **Checkpoint/restart** — training state is periodically saved atomically
    (checkpoint/manager.py); the loop (train/loop.py) is a pure function of
    (state, step), and the data pipeline is seekable (data/synthetic.batch_at),
-   so a restart resumes bit-exact from the last checkpoint.
+   so a restart resumes bit-exact from the last checkpoint.  Saves are
+   *asynchronous* by default (AsyncCheckpointManager: host-arena snapshot on
+   the step boundary, serialization + atomic publish on a writer thread), so
+   the supervisor must fence them on failure: ``run_supervised(ckpt=...)``
+   calls ``ckpt.abort()`` when an incarnation dies, which discards queued
+   snapshots from the dead incarnation, interrupts any mid-write publish, and
+   sweeps ``step_K.tmp`` debris — a restart therefore only ever restores a
+   fully-published step (``all_steps`` never lists ``.tmp``).  Restore keeps
+   the elastic re-sharding path (point 3) untouched.
 
 2. **Failure detection** — a heartbeat watchdog wraps the step function; a step
    exceeding ``hang_timeout`` or raising marks the incarnation dead, and the
@@ -86,12 +94,20 @@ class Incarnation:
 def run_supervised(make_state: Callable[[Optional[int]], tuple],
                    run_steps: Callable,
                    *, max_restarts: int = 5,
-                   on_restart: Optional[Callable[[Incarnation], None]] = None):
+                   on_restart: Optional[Callable[[Incarnation], None]] = None,
+                   ckpt=None):
     """Supervisor loop: (re)build state from the latest checkpoint and run.
 
     ``make_state(step|None) -> (state, start_step)`` restores or cold-starts.
     ``run_steps(state, start_step, incarnation) -> final_state`` raises on
     failure (real or injected).  Returns (final_state, incarnations_used).
+
+    ``ckpt`` (optional, the run's CheckpointManager) lets the supervisor
+    fence asynchronous persistence: when an incarnation dies, ``ckpt.abort()``
+    runs BEFORE ``make_state`` rebuilds — in-flight saves issued by the dead
+    incarnation are discarded (queued snapshots dropped, a mid-write publish
+    interrupted, ``.tmp`` debris swept), so the restart restores only a
+    fully-published step and never a half-written one.
     """
     restarts = 0
     while True:
@@ -103,6 +119,8 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
             return run_steps(state, start, inc), restarts + 1
         except RuntimeError as e:
             restarts += 1
+            if ckpt is not None:
+                ckpt.abort()          # dead incarnation: fence async saves
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded {max_restarts} restarts; last error: {e}")

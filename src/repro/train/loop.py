@@ -3,6 +3,18 @@
 Pure-state design: the loop is a fold of ``train_step`` over a seekable data
 stream, so (checkpoint, step) fully determines the future — the property the
 supervisor (runtime/fault.py) relies on for restart-exactness.
+
+Checkpointing is non-blocking when the manager supports it
+(checkpoint/manager.AsyncCheckpointManager): the boundary step only snapshots
+state into the host staging arena via ``save_async`` — serialization and the
+atomic publish happen on the manager's writer thread while the next steps
+run.  The snapshot must happen here, synchronously at the boundary, because
+the step function donates its buffers: by the next ``train_step`` call the
+device memory behind ``params``/``opt_state`` may be reused.  On normal exit
+the loop drains in-flight saves (``wait_until_finished``), which also
+surfaces any writer error; on failure the supervisor aborts them instead
+(``run_supervised(ckpt=...)``) so a restart never resumes from a
+half-published step.
 """
 
 from __future__ import annotations
@@ -43,6 +55,10 @@ def train(train_step: Callable, state: Dict, data_iter, *,
                    f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
                    f"{dt*1e3:.0f}ms")
         if ckpt is not None and (step + 1) % ckpt_every == 0:
-            ckpt.save(step + 1, {"params": params, "opt_state": opt_state})
+            # non-blocking on AsyncCheckpointManager; = save() on the sync one
+            ckpt.save_async(step + 1, {"params": params,
+                                       "opt_state": opt_state})
+    if ckpt is not None:
+        ckpt.wait_until_finished()          # drain async writes; raise errors
     state.update(params=params, opt_state=opt_state)
     return state

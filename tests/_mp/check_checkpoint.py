@@ -1,0 +1,202 @@
+"""Subprocess checks for the async checkpoint subsystem (ISSUE 4 acceptance).
+
+Part A — kill-mid-write atomicity: a CHILD process (``--child-kill DIR``)
+trains a tiny model, publishes step 4, then issues ``save_async(8)`` with a
+deliberately slowed writer and ``os._exit(1)``s between ``save_async`` and
+writer completion — the acceptance criterion's kill.  The parent verifies the
+half-written step is never published nor listed, its ``.tmp`` debris is swept
+by the next incarnation's manager, and the restore from the previous
+PUBLISHED step (4) resumes bit-exact against an uninterrupted run.
+
+Part B — elastic restore: a checkpoint saved from a single-device run is
+restored with *target-mesh* shardings onto 1x8 / 2x4 / 4x2 (data x model)
+megatron grids; resuming through the checkpoint roundtrip must be bit-exact
+(loss history AND final params) against resuming from the same state
+device_put directly — the fold-of-train_step property train/loop.py
+documents.  The resumed sharded state is then saved *asynchronously* from
+the mesh and restored again, proving sharded→global snapshots are lossless.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import subprocess
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.manager import (AsyncCheckpointManager,
+                                      CheckpointManager)
+from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.data.synthetic import SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import step as TS
+
+CFG = ModelConfig(name="ckpt-test", family="dense", num_layers=2, d_model=32,
+                  num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                  mlp_kind="swiglu")
+RC = RunConfig("t", "train", 16, 8, lr=2e-3)
+DS = SyntheticLM(CFG.vocab_size, RC.seq_len, RC.global_batch, seed=7)
+PCFG1 = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1,
+                       microbatches=1, zero1=False)
+
+
+def _ts1():
+    return jax.jit(TS.build_train_step(CFG, PCFG1, RC, None,
+                                       compute_dtype=jnp.float32))
+
+
+def _fold(ts, params, opt, lo, hi, batch_fn=None):
+    losses = []
+    for s in range(lo, hi):
+        b = batch_fn(s) if batch_fn else {
+            k: jnp.asarray(v) for k, v in DS.batch_at(s).items()}
+        params, opt, m = ts(params, opt, b)
+        losses.append(float(m["loss"]))
+    return params, opt, losses
+
+
+# ---------------------------------------------------------------------------
+# Part A: kill between save_async and writer completion
+# ---------------------------------------------------------------------------
+
+def child_kill(ckpt_dir):
+    ts = _ts1()
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    mgr = AsyncCheckpointManager(ckpt_dir)
+    params, opt, _ = _fold(ts, params, opt, 0, 4)
+    mgr.save_async(4, {"params": params, "opt_state": opt})
+    mgr.wait_until_finished()                 # step 4 is PUBLISHED
+    params, opt, _ = _fold(ts, params, opt, 4, 8)
+    # slow the writer so the kill reliably lands mid-write
+    import repro.checkpoint.manager as M
+    orig = M.np.save
+
+    def slow_save(*a, **k):
+        time.sleep(0.25)
+        return orig(*a, **k)
+
+    M.np.save = slow_save
+    mgr.save_async(8, {"params": params, "opt_state": opt})
+    time.sleep(0.1)                           # let the writer open step_8.tmp
+    os._exit(42)                              # hard kill, writer mid-write —
+    # 42 (not 1) so the parent can tell the deliberate kill from an uncaught
+    # child exception, which exits 1
+
+
+def check_kill_mid_write(ckpt_dir):
+    env = dict(os.environ)
+    r = subprocess.run([sys.executable, os.path.abspath(__file__),
+                        "--child-kill", ckpt_dir],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 42, (r.returncode, r.stdout, r.stderr[-2000:])
+    names = os.listdir(ckpt_dir)
+    assert "step_00000008" not in names, names   # half-write never published
+    assert "step_00000004" in names, names
+    # next incarnation: debris invisible and swept, restore = step 4
+    mgr = CheckpointManager(ckpt_dir)
+    assert mgr.all_steps() == [4], mgr.all_steps()
+    assert not [n for n in os.listdir(ckpt_dir) if n.endswith(".tmp")]
+
+    ts = _ts1()
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    o0 = adamw.init(p0)
+    pa, oa, la = _fold(ts, p0, o0, 0, 8)      # uninterrupted reference
+    restored, step = mgr.restore({"params": p0, "opt_state": o0})
+    assert step == 4
+    pb, ob, lb = _fold(ts, restored["params"], restored["opt_state"], 4, 8)
+    assert la[4:] == lb, (la[4:], lb)         # bit-exact resumed losses
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print("kill-mid-write: step 8 never published, debris swept, "
+          "restore(4) resumed bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# Part B: elastic restore onto 1x8 / 2x4 / 4x2 grids
+# ---------------------------------------------------------------------------
+
+def check_elastic_grids(tmp_root):
+    from repro.parallel import specs as SP
+
+    ts1 = _ts1()
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    o0 = adamw.init(p0)
+    p3, o3, _ = _fold(ts1, p0, o0, 0, 3)
+    ckpt_dir = os.path.join(tmp_root, "elastic")
+    mgr = CheckpointManager(ckpt_dir)
+    mgr.save(3, {"params": p3, "opt_state": o3})
+
+    devs = np.array(jax.devices())
+    from jax.sharding import Mesh
+    for n_d, n_m in ((1, 8), (2, 4), (4, 2)):
+        mesh = Mesh(devs.reshape(n_d, n_m), ("data", "model"))
+        pcfg = ParallelConfig(strategy="megatron", data=n_d, model=n_m,
+                              microbatches=1, zero1=False)
+        pspecs = SP.param_specs(p3, mesh, pcfg)
+        pshard = SP.sharding_tree(pspecs, mesh)
+        oshard = SP.sharding_tree(
+            SP.opt_state_specs(pspecs, p3, mesh, pcfg), mesh)
+        bsp = SP.batch_specs(mesh, pcfg, microbatched=False,
+                             seq_len=RC.seq_len)
+        ts = jax.jit(TS.build_train_step(CFG, pcfg, RC, mesh,
+                                         compute_dtype=jnp.float32))
+
+        def batch_fn(s, _mesh=mesh, _bsp=bsp):
+            return {k: jax.device_put(jnp.asarray(v),
+                                      NamedSharding(_mesh, _bsp[k]))
+                    for k, v in DS.batch_at(s).items()}
+
+        # resume THROUGH the checkpoint, re-sharded for this grid
+        restored, step = mgr.restore({"params": p3, "opt_state": o3},
+                                     shardings={"params": pshard,
+                                                "opt_state": oshard})
+        assert step == 3
+        pa, oa, la = _fold(ts, restored["params"], restored["opt_state"],
+                           3, 6, batch_fn)
+        # resume from the SAME state device_put directly (no checkpoint)
+        pb, ob, lb = _fold(ts, jax.device_put(p3, pshard),
+                           jax.device_put(o3, oshard), 3, 6, batch_fn)
+        assert la == lb, (n_d, n_m, la, lb)   # bit-exact loss resume
+        for a, b in zip(jax.tree_util.tree_leaves(pa),
+                        jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+        # async save FROM the sharded state; restore = device_get bit-exact
+        amgr = AsyncCheckpointManager(os.path.join(tmp_root,
+                                                   f"grid{n_d}x{n_m}"))
+        amgr.save_async(6, {"params": pa, "opt_state": oa})
+        amgr.wait_until_finished()
+        rt, _ = amgr.restore({"params": p3, "opt_state": o3})
+        for a, b in zip(jax.tree_util.tree_leaves(rt),
+                        jax.tree_util.tree_leaves(
+                            {"params": pa, "opt_state": oa})):
+            np.testing.assert_array_equal(np.asarray(a),
+                                          np.asarray(jax.device_get(b)))
+        amgr.close()
+        print(f"elastic {n_d}x{n_m}: ckpt-roundtrip resume bit-exact, "
+              "sharded async snapshot lossless")
+
+
+def main():
+    import tempfile
+    root = tempfile.mkdtemp(prefix="ckpt_check_")
+    check_kill_mid_write(os.path.join(root, "kill"))
+    check_elastic_grids(root)
+    print("ALL CHECKPOINT CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--child-kill":
+        child_kill(sys.argv[2])
+    else:
+        main()

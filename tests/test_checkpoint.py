@@ -1,0 +1,322 @@
+"""Checkpoint subsystem tests (ISSUE 4): async/sync equivalence, crash
+atomicity, GC under in-flight saves, error propagation, abort fencing, and
+the manifest encoding (keys with ``__`` / ``/``, bf16 leaves).  The
+kill-mid-write and elastic-grid acceptance checks run in a subprocess
+(tests/_mp/check_checkpoint.py)."""
+
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.checkpoint.manager as M
+from repro.checkpoint.manager import (AsyncCheckpointManager,
+                                      CheckpointManager, make_manager)
+from repro.config import CheckpointConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+STATE = {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                    "scale": jnp.float32(2.5)},
+         "opt_state": [jnp.zeros((4,), jnp.int32),
+                       {"mu": jnp.ones((3, 4)) * 0.25}]}
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# subprocess acceptance (kill-mid-write + elastic grids)
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_mp_acceptance():
+    """Kill between save_async and writer completion never publishes the
+    half-written step and resumes bit-exact from the previous published one;
+    elastic restore onto 1x8/2x4/4x2 grids is a bit-exact fold resume."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable,
+                        os.path.join(ROOT, "tests", "_mp",
+                                     "check_checkpoint.py")],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, \
+        f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "ALL CHECKPOINT CHECKS PASSED" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# async == sync, non-blocking, backpressure
+# ---------------------------------------------------------------------------
+
+def test_async_save_equals_sync_save_bit_for_bit(tmp_path):
+    sync = CheckpointManager(str(tmp_path / "sync"))
+    asyn = AsyncCheckpointManager(str(tmp_path / "async"))
+    sync.save(7, STATE, extra_meta={"tag": "x"})
+    asyn.save_async(7, STATE, extra_meta={"tag": "x"})
+    asyn.wait_until_finished()
+    d1, d2 = (os.path.join(m.dir, "step_00000007") for m in (sync, asyn))
+    assert sorted(os.listdir(d1)) == sorted(os.listdir(d2))
+    for fn in os.listdir(d1):
+        with open(os.path.join(d1, fn), "rb") as f1, \
+                open(os.path.join(d2, fn), "rb") as f2:
+            assert f1.read() == f2.read(), fn
+    _leaves_equal(asyn.restore(STATE)[0], STATE)
+    asyn.close()
+
+
+def test_save_async_does_not_block_on_serialization(tmp_path, monkeypatch):
+    """The step boundary pays only the host snapshot: with serialization
+    gated on an event, save_async must return while the writer is stuck."""
+    gate = threading.Event()
+    orig = M.np.save
+
+    def gated_save(*a, **k):
+        gate.wait(timeout=30)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(M.np, "save", gated_save)
+    mgr = AsyncCheckpointManager(str(tmp_path), max_inflight=1)
+    t0 = time.time()
+    mgr.save_async(1, STATE)
+    assert time.time() - t0 < 5           # returned with the writer gated
+    assert mgr.all_steps() == []          # nothing published yet
+    gate.set()
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [1]
+    mgr.close()
+
+
+def test_save_async_backpressure_bounds_inflight(tmp_path, monkeypatch):
+    """With max_inflight=1 and the writer gated, a second save_async must
+    block (bounded staging arena) instead of queueing unboundedly."""
+    gate = threading.Event()
+    orig = M.np.save
+    monkeypatch.setattr(M.np, "save",
+                        lambda *a, **k: (gate.wait(timeout=30),
+                                         orig(*a, **k))[1])
+    mgr = AsyncCheckpointManager(str(tmp_path), max_inflight=1)
+    mgr.save_async(1, STATE)
+    blocked = threading.Event()
+
+    def second():
+        mgr.save_async(2, STATE)      # must block on the arena slot
+        blocked.set()
+
+    t = threading.Thread(target=second, daemon=True)
+    t.start()
+    assert not blocked.wait(timeout=0.3)  # still waiting while gated
+    gate.set()
+    assert blocked.wait(timeout=30)
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [1, 2]
+    mgr.close()
+
+
+def test_async_snapshot_is_decoupled_from_later_mutation(tmp_path,
+                                                         monkeypatch):
+    """The staging arena owns the bytes: mutating the source array after
+    save_async (stand-in for a donated buffer being reused by the next step)
+    must not corrupt the checkpoint."""
+    gate = threading.Event()
+    orig = M.np.save
+    monkeypatch.setattr(M.np, "save",
+                        lambda *a, **k: (gate.wait(timeout=30),
+                                         orig(*a, **k))[1])
+    src = np.arange(8.0)
+    mgr = AsyncCheckpointManager(str(tmp_path))
+    mgr.save_async(1, {"w": src})
+    src[:] = -1.0                         # "donated" memory reused
+    gate.set()
+    mgr.wait_until_finished()
+    restored, _ = mgr.restore({"w": jnp.zeros(8)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.arange(8.0))
+    mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# GC, atomicity debris, abort, errors
+# ---------------------------------------------------------------------------
+
+def test_gc_honors_keep_with_inflight_async_saves(tmp_path):
+    mgr = AsyncCheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save_async(s, STATE)
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [4, 5]
+    mgr.close()
+
+
+def test_stale_tmp_never_listed_and_swept_on_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, STATE)
+    debris = tmp_path / "step_00000009.tmp"
+    debris.mkdir()
+    (debris / "leaf_00000.npy").write_bytes(b"garbage")
+    assert mgr.all_steps() == [5]         # never listed
+    assert mgr.latest_step() == 5
+    mgr2 = CheckpointManager(str(tmp_path))   # next incarnation sweeps
+    assert not debris.exists()
+    assert mgr2.all_steps() == [5]
+
+
+def test_abort_discards_queued_saves_keeps_published(tmp_path, monkeypatch):
+    gate = threading.Event()
+    orig = M.np.save
+    monkeypatch.setattr(M.np, "save",
+                        lambda *a, **k: (gate.wait(timeout=30),
+                                         orig(*a, **k))[1])
+    mgr = AsyncCheckpointManager(str(tmp_path), max_inflight=2)
+    monkeypatch.undo()
+    mgr.save_async(1, STATE)
+    mgr.wait_until_finished()             # step 1 published
+    monkeypatch.setattr(M.np, "save",
+                        lambda *a, **k: (gate.wait(timeout=30),
+                                         orig(*a, **k))[1])
+    mgr.save_async(2, STATE)              # stuck mid-write
+    mgr.save_async(3, STATE)              # queued behind it
+    threading.Timer(0.2, gate.set).start()
+    mgr.abort()
+    assert mgr.all_steps() == [1]         # nothing half-published
+    assert not [n for n in os.listdir(str(tmp_path)) if n.endswith(".tmp")]
+    monkeypatch.undo()
+    mgr.save_async(4, STATE)              # manager survives the abort
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [1, 4]
+    mgr.close()
+
+
+def test_abort_clears_sticky_writer_error(tmp_path, monkeypatch):
+    """The supervisor's abort fence must clear a dead incarnation's writer
+    error along with its in-flight saves — otherwise every restarted
+    incarnation re-raises the stale error at its first checkpoint boundary
+    and the restart budget burns down on a long-recovered fault."""
+    mgr = AsyncCheckpointManager(str(tmp_path))
+    monkeypatch.setattr(M.np, "save",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            IOError("transient ENOSPC")))
+    mgr.save_async(1, STATE)
+    with pytest.raises(RuntimeError):
+        mgr.wait_until_finished()
+    monkeypatch.undo()                    # the "disk" recovered
+    mgr.abort()                           # supervisor fences the incarnation
+    mgr.save_async(2, STATE)              # next incarnation starts clean
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [2]
+    mgr.close()
+
+
+def test_writer_error_is_sticky_and_surfaces(tmp_path, monkeypatch):
+    mgr = AsyncCheckpointManager(str(tmp_path))
+
+    def boom(*a, **k):
+        raise IOError("disk full")
+
+    monkeypatch.setattr(M.np, "save", boom)
+    mgr.save_async(1, STATE)
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.wait_until_finished()
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="disk full"):
+        mgr.save_async(2, STATE)          # sticky until acknowledged
+    with pytest.raises(RuntimeError):
+        mgr.check_error()
+    assert mgr.all_steps() == []          # the failed write left no debris
+    assert not [n for n in os.listdir(str(tmp_path)) if n.endswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# manifest encoding: tricky keys, exotic dtypes (deterministic version of the
+# hypothesis property in test_properties.py)
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_tricky_keys_and_dtypes(tmp_path):
+    tree = {
+        "a__b": jnp.float32(1.0),              # "__" must not alias a/b
+        "a": {"b": jnp.float32(2.0),
+              "c%d": jnp.arange(3, dtype=jnp.int32)},
+        "a/b": jnp.float32(3.0),               # "/" must not alias nesting
+        "bf16": jnp.asarray([1.5, -2.25], jnp.bfloat16),
+        "f16": jnp.asarray([0.5], jnp.float16),
+        "bool": jnp.asarray([True, False]),
+        "list": [jnp.zeros((2, 2)), {"nested": jnp.ones((1,), jnp.int32)}],
+    }
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    restored, step = mgr.restore(tree)
+    assert step == 1
+    _leaves_equal(restored, tree)
+    # manifest is complete: one entry per leaf, distinct files
+    import json
+    with open(os.path.join(str(tmp_path), "step_00000001",
+                           "meta.json")) as f:
+        meta = json.load(f)
+    n_leaves = len(jax.tree_util.tree_leaves(tree))
+    assert len(meta["manifest"]) == n_leaves
+    files = [v["file"] for v in meta["manifest"].values()]
+    assert len(set(files)) == n_leaves
+
+
+def test_checkpoint_config_validation_and_make_manager(tmp_path):
+    ccfg = CheckpointConfig()
+    assert ccfg.every == 50 and ccfg.keep == 3 and ccfg.async_
+    with pytest.raises(AssertionError):
+        CheckpointConfig(every=0)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(keep=0)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(staging="device")
+    with pytest.raises(AssertionError):
+        CheckpointConfig(max_inflight=0)
+
+    m1 = make_manager(str(tmp_path / "a"), CheckpointConfig(async_=False,
+                                                            keep=7))
+    assert type(m1) is CheckpointManager and m1.keep == 7
+    m2 = make_manager(str(tmp_path / "b"), CheckpointConfig(keep=4))
+    assert isinstance(m2, AsyncCheckpointManager) and m2.keep == 4
+    m3 = make_manager(str(tmp_path / "c"))
+    assert type(m3) is CheckpointManager
+    m2.close()
+
+
+def test_staging_sync_degrades_to_blocking_save(tmp_path):
+    mgr = AsyncCheckpointManager(str(tmp_path), staging="sync")
+    mgr.save_async(3, STATE)              # blocking: published on return
+    assert mgr.all_steps() == [3]
+    mgr.close()
+
+
+def test_train_loop_uses_async_path_and_drains(tmp_path):
+    """train() must route boundary saves through save_async and drain on
+    exit — a gated writer would otherwise leave steps unpublished."""
+    from repro.train import loop as train_loop
+
+    calls = []
+
+    class Probe(AsyncCheckpointManager):
+        def save_async(self, step, state, extra_meta=None):
+            calls.append(step)
+            return super().save_async(step, state, extra_meta)
+
+    mgr = Probe(str(tmp_path))
+
+    def ts(params, opt, batch):
+        return params, opt, {"loss": jnp.float32(1.0)}
+
+    state = {"params": {"w": jnp.zeros(2)}, "opt_state": {}}
+    train_loop.train(ts, state, iter([{}] * 6), num_steps=6, ckpt=mgr,
+                     ckpt_every=2, log_every=100, log_fn=lambda *a: None)
+    assert calls == [2, 4, 6]
+    assert mgr.all_steps() == [2, 4, 6]   # drained before returning
+    mgr.close()

@@ -1,0 +1,186 @@
+"""Unit tests for the fault-tolerance runtime (runtime/fault.py) — the test
+file its docstring has always advertised: FailureInjector determinism,
+StepTimer straggler detection (EWMA freeze while slow, streak reset),
+rebalance_data_shards edge cases, and run_supervised restart accounting
+(including the async-checkpoint abort fence).  End-to-end restart behaviour
+lives in tests/test_system.py and examples/elastic_restart.py."""
+
+import pytest
+
+from repro.runtime.fault import (FailureInjector, Incarnation, StepTimer,
+                                 rebalance_data_shards, run_supervised)
+
+
+# ---------------------------------------------------------------------------
+# FailureInjector
+# ---------------------------------------------------------------------------
+
+def test_injector_fails_each_step_exactly_once():
+    inj = FailureInjector({3: "chip down", 7: "host unreachable"})
+    inj.check(0)
+    inj.check(2)
+    with pytest.raises(RuntimeError, match="chip down"):
+        inj.check(3)
+    inj.check(3)                      # popped: a restart re-runs step 3 fine
+    with pytest.raises(RuntimeError, match="host unreachable"):
+        inj.check(7)
+    assert inj.log == ["step 3: injected chip down",
+                       "step 7: injected host unreachable"]
+    assert inj.fail_at == {}
+
+
+# ---------------------------------------------------------------------------
+# StepTimer
+# ---------------------------------------------------------------------------
+
+def test_steptimer_first_sample_seeds_ewma():
+    t = StepTimer()
+    assert t.record(1.0) is False
+    assert t.ewma == 1.0
+
+
+def test_steptimer_ewma_freezes_while_slow():
+    """Outlier steps must NOT be folded into the EWMA — otherwise a sustained
+    straggler drags the baseline up and masks itself."""
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3)
+    t.record(1.0)
+    for _ in range(2):
+        assert t.record(10.0) is False
+    assert t.ewma == 1.0              # frozen through the slow streak
+    assert t.record(10.0) is True     # patience reached
+    assert t.ewma == 1.0
+    assert t.slow_streak == 0         # reset after the event fires
+    assert len(t.events) == 1
+
+
+def test_steptimer_fast_step_resets_streak_and_updates_ewma():
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3)
+    t.record(1.0)
+    t.record(10.0)
+    t.record(10.0)                    # streak = 2, one short of patience
+    assert t.record(1.2) is False     # healthy step: streak resets
+    assert t.slow_streak == 0
+    assert t.ewma == pytest.approx(1.1)   # 0.5*1.0 + 0.5*1.2
+    assert t.record(10.0) is False    # streak restarts from scratch
+    assert t.slow_streak == 1
+    assert t.events == []
+
+
+def test_steptimer_borderline_step_is_not_slow():
+    t = StepTimer(alpha=0.5, straggler_factor=2.5, patience=1)
+    t.record(1.0)
+    assert t.record(2.5) is False     # exactly at factor*ewma: not an outlier
+    assert t.ewma == pytest.approx(1.75)
+
+
+# ---------------------------------------------------------------------------
+# rebalance_data_shards
+# ---------------------------------------------------------------------------
+
+def test_rebalance_moves_one_shard_to_least_loaded_healthy_host():
+    out = rebalance_data_shards(4, [1], shards_per_host=[2, 2, 1, 2])
+    assert out == [2, 1, 2, 2]        # host 2 was least loaded
+    assert sum(out) == 7
+
+
+def test_rebalance_all_hosts_slow_is_a_noop():
+    shards = [1, 2, 3]
+    out = rebalance_data_shards(3, [0, 1, 2], shards_per_host=shards)
+    assert out == shards              # nowhere healthy to move work
+    assert out is not shards          # but never aliases the input
+
+
+def test_rebalance_zero_shard_straggler_is_skipped():
+    out = rebalance_data_shards(3, [0], shards_per_host=[0, 2, 2])
+    assert out == [0, 2, 2]           # nothing to take from an empty host
+
+
+def test_rebalance_multiple_stragglers_conserve_shards():
+    out = rebalance_data_shards(5, [0, 1])
+    assert sum(out) == 5
+    assert out[0] == 0 and out[1] == 0
+    assert sorted(out[2:]) == [1, 2, 2]
+
+
+# ---------------------------------------------------------------------------
+# run_supervised
+# ---------------------------------------------------------------------------
+
+class _FlakyRun:
+    """Raises on the first ``fails`` invocations, then succeeds."""
+
+    def __init__(self, fails):
+        self.fails = fails
+        self.calls = 0
+
+    def __call__(self, state, start, inc):
+        self.calls += 1
+        if self.calls <= self.fails:
+            raise RuntimeError(f"boom {self.calls}")
+        return {"done": True, "inc": inc}
+
+
+def test_run_supervised_counts_incarnations_and_restarts():
+    restarts = []
+    run = _FlakyRun(fails=2)
+    state, incarnations = run_supervised(
+        lambda _: ({}, 0), run, max_restarts=5,
+        on_restart=restarts.append)
+    assert state["done"] and incarnations == 3
+    assert [i.index for i in restarts] == [1, 2]
+    assert all(isinstance(i, Incarnation) for i in restarts)
+
+
+def test_run_supervised_exhaustion_raises():
+    run = _FlakyRun(fails=100)
+    with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
+        run_supervised(lambda _: ({}, 0), run, max_restarts=2)
+    assert run.calls == 3             # initial attempt + 2 restarts
+
+
+def test_run_supervised_zero_restarts_budget():
+    with pytest.raises(RuntimeError, match="exceeded 0 restarts"):
+        run_supervised(lambda _: ({}, 0), _FlakyRun(fails=1), max_restarts=0)
+
+
+def test_run_supervised_non_runtime_errors_propagate():
+    """Only RuntimeError (real/injected chip+host failures) is supervised;
+    programming errors must surface immediately, not burn restarts."""
+    def run(state, start, inc):
+        raise ValueError("bug, not a fault")
+    with pytest.raises(ValueError):
+        run_supervised(lambda _: ({}, 0), run)
+
+
+class _FakeAsyncCkpt:
+    def __init__(self):
+        self.aborts = 0
+
+    def abort(self):
+        self.aborts += 1
+
+
+def test_run_supervised_aborts_inflight_saves_per_failure():
+    """The supervisor fences async persistence: every dead incarnation gets
+    its in-flight saves aborted BEFORE the next make_state restores."""
+    ckpt = _FakeAsyncCkpt()
+    order = []
+
+    def make_state(_):
+        order.append(("make", ckpt.aborts))
+        return {}, 0
+
+    state, incarnations = run_supervised(
+        make_state, _FlakyRun(fails=2), max_restarts=5, ckpt=ckpt)
+    assert incarnations == 3
+    assert ckpt.aborts == 2
+    # each restore happened only after the preceding failure was fenced
+    assert order == [("make", 0), ("make", 1), ("make", 2)]
+
+
+def test_run_supervised_aborts_on_exhaustion_too():
+    ckpt = _FakeAsyncCkpt()
+    with pytest.raises(RuntimeError, match="exceeded"):
+        run_supervised(lambda _: ({}, 0), _FlakyRun(fails=100),
+                       max_restarts=1, ckpt=ckpt)
+    assert ckpt.aborts == 2           # fenced even when giving up
