@@ -148,6 +148,43 @@ def fit_overlap_eff(step_times, prior=None):
     return {"eff": {"none": 0.0, **eff}, "comm_fraction": rho,
             "prior_distance": score, "clipped": sorted(set(clipped))}
 
+def pipeline_rows(pods=(2, 4), micro=(4, 8, 32)):
+    """Inter-pod 1F1B pipeline theory (PR 5): bubble fraction + boundary
+    transfer exposure on the largest-workload ladder rung, per (p, m).
+
+    Each row carries BOTH the closed-form bubble ``(p-1)/(m+p-1)``
+    (core/theory.pipeline_bubble_fraction) and the bubble of the actual
+    simulated 1F1B table (parallel/pipeline.schedule_1f1b) — the two must
+    agree exactly, which is asserted here so the emitted
+    ``theory_pipeline_*`` rows are self-checking.
+    """
+    from repro.parallel.pipeline import schedule_1f1b
+    name, h, N, layers = WORKLOADS[-1]
+    beta = PACKAGES["standard"]
+    rows = []
+    for p_ in pods:
+        for m in micro:
+            cp = T.CommParams(N=N, beta=beta, b=8, s=2048, h=h)
+            sp = T.SystemParams(comm=cp, flops_per_device=DIE_FLOPS,
+                                dram_channels=max(8, int(N ** 0.5) * 4))
+            pt = T.pipeline_step_time(sp, p_, m, layers,
+                                      pod_beta=POD_BETA)
+            sched = schedule_1f1b(p_, m)
+            frac = T.pipeline_bubble_fraction(p_, m)
+            assert abs(sched.bubble_fraction - frac) < 1e-12, (
+                p_, m, sched.bubble_fraction, frac)
+            rows.append({
+                "workload": name, "pods": p_, "micro": m,
+                "bubble_theory": frac,
+                "bubble_schedule": sched.bubble_fraction,
+                "makespan_ticks": sched.makespan,
+                "boundary_comm_s": pt["boundary_comm"],
+                "exposed_boundary_s": pt["exposed_boundary"],
+                "total_s": pt["total"],
+            })
+    return rows
+
+
 # the paper's workload ladder (§VI-A): h doubles, N scales by 4x
 WORKLOADS = [
     ("tinyllama-1.1b", 2048, 16, 22),
@@ -159,6 +196,9 @@ WORKLOADS = [
 # these are fitted so the analytical model reproduces the paper's reported
 # headline ratios (5.29x/3.46x on the largest workload, standard package).
 PACKAGES = {"standard": 12e9, "advanced": 48e9}   # D2D bytes/s per link
+# Inter-package (pod-to-pod) bandwidth: the slow off-package tier the 1F1B
+# pipeline is placed on — DRAM-channel class, ~an order below on-package D2D.
+POD_BETA = 1.6e9
 DIE_FLOPS = 5e12            # per-die FP32 (7nm-rescaled PE array)
 E_D2D = 1.0e-12 * 8         # J/byte on-package
 E_DRAM = 19e-12 * 8         # J/byte off-package
@@ -229,7 +269,16 @@ def main(emit):
         bw_s = "inf" if bw == float("inf") else f"{bw/1e9:.0f}GBps"
         emit(f"theory_overlap_{r['mode']}", 0.0,
              f"{r['latency_norm']:.3f}x_bulk/effbw={bw_s}")
-    return rows
+    # inter-pod 1F1B pipeline theory (PR 5): bubble fraction per (pods,
+    # microbatches) — the simulated schedule must match (p-1)/(m+p-1),
+    # asserted inside pipeline_rows so these rows are self-checking
+    pipe = pipeline_rows()
+    for r in pipe:
+        emit(f"theory_pipeline_p{r['pods']}_m{r['micro']}", 0.0,
+             f"bubble={r['bubble_theory']:.4f}"
+             f"/sched={r['bubble_schedule']:.4f}"
+             f"/exposed={r['exposed_boundary_s']*1e3:.2f}ms")
+    return {"methods": rows, "pipeline": pipe}
 
 
 if __name__ == "__main__":

@@ -4,6 +4,9 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
 
   comm_model    — Fig. 8 / Table III latency+energy comparison (4 methods)
                   + per-overlap-mode exposed-NoP theory (effective bandwidth)
+                  + inter-pod 1F1B pipeline theory (``theory_pipeline_*``
+                  rows: bubble fraction vs the simulated schedule, boundary
+                  transfer exposure)
   scaling       — Fig. 9 weak scaling
   dram          — Fig. 10 DRAM-bandwidth sweep
   layout        — Fig. 11 die-layout study
@@ -102,6 +105,8 @@ def main() -> None:
             "residual_layouts": (results.get("hlo_compare")
                                  or {}).get("residual"),
             "checkpoint_stall": results.get("ckpt_stall"),
+            "theory_pipeline": (results.get("comm_model")
+                                or {}).get("pipeline"),
         }
         from benchmarks import comm_model as _cm
         payload["theory_overlap"] = _cm.overlap_rows()

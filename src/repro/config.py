@@ -151,6 +151,16 @@ class ParallelConfig:
     mx: int = 4                      # hecaton grid rows  (token axis)
     my: int = 4                      # hecaton grid cols  (hidden axis)
     pods: int = 1
+    # What the pod axis does when pods > 1 (multi-package systems):
+    #   "data"     — extra data parallelism (batch sharded over the pod axis
+    #                alongside "data"; the pre-PR-5 behaviour).
+    #   "pipeline" — each pod owns one contiguous STAGE of the block stack
+    #                and microbatches stream through a 1F1B schedule
+    #                (parallel/pipeline.py, docs/DESIGN.md §5).  The
+    #                off-package links then only carry one boundary
+    #                activation per microbatch per stage boundary — the
+    #                right tier for the slow inter-package links (§V-B).
+    #                Requires pods > 1 (validated below).
     pod_axis_role: str = "data"      # data | pipeline
     # ZeRO-1: shard optimizer states over the data axis.
     zero1: bool = True
@@ -198,6 +208,32 @@ class ParallelConfig:
             f"('none', 'ring', 'bidir', 'fused')")
         assert self.residual in ("seq", "replicated"), (
             f"residual={self.residual!r} not in ('seq', 'replicated')")
+        if self.pod_axis_role not in ("data", "pipeline"):
+            raise ValueError(
+                f"pod_axis_role={self.pod_axis_role!r} not in "
+                f"('data', 'pipeline')")
+        if self.pods < 1:
+            raise ValueError(f"pods={self.pods} must be >= 1")
+        if self.microbatches < 1:
+            raise ValueError(
+                f"microbatches={self.microbatches} must be >= 1")
+        if self.pod_axis_role == "pipeline" and self.pods < 2:
+            # The old silent no-op: "pipeline" used to be accepted and run
+            # as extra data parallelism.  A 1-pod pipeline is degenerate —
+            # reject it rather than silently doing something else.
+            raise ValueError(
+                "pod_axis_role='pipeline' requires pods > 1 "
+                f"(got pods={self.pods}); use pod_axis_role='data' for "
+                "single-pod meshes")
+
+    @property
+    def pipeline_enabled(self) -> bool:
+        """True when the pod axis runs 1F1B stages (parallel/pipeline.py)."""
+        return self.pod_axis_role == "pipeline" and self.pods > 1
+
+    @property
+    def pipeline_stages(self) -> int:
+        return self.pods if self.pipeline_enabled else 1
 
     @property
     def total_devices(self) -> int:
@@ -307,7 +343,7 @@ def shape_cells_for(cfg: ModelConfig):
     """The (shape -> RunConfig) cells assigned to an arch, honoring skips.
 
     ``long_500k`` runs only for sub-quadratic archs (ssm / hybrid); pure
-    full-attention archs skip it (recorded as an explicit skip, per DESIGN.md).
+    full-attention archs skip it (recorded as an explicit skip, per docs/DESIGN.md §4).
     """
     cells = {}
     for name, rc in SHAPES.items():

@@ -2,7 +2,7 @@
 
 input_specs() supplies precomputed frame embeddings [B, 1500, d_model] (the
 conv1d+log-mel frontend is a stub).  Positional scheme simplified to RoPE
-(backbone-only reproduction, noted in DESIGN.md).
+(backbone-only reproduction, noted in docs/DESIGN.md §4).
 """
 from repro.config import ModelConfig, register
 

@@ -66,11 +66,26 @@ def apply_remat(fn, policy_name: str):
 _REMAT_FACTOR = {"none": 24.0, "fusion": 10.0, "full": 2.5}
 
 
+def min_microbatches_for_bubble(n_stages: int, max_bubble: float) -> int:
+    """Smallest 1F1B microbatch count with bubble fraction <= ``max_bubble``.
+
+    The non-interleaved 1F1B bubble fraction is ``(p-1)/(m+p-1)``
+    (core/theory.pipeline_bubble_fraction, verified against the simulated
+    schedule in parallel/pipeline.py): solving for ``m`` gives
+    ``m >= (p-1)*(1-f)/f``.
+    """
+    if n_stages <= 1:
+        return 1
+    assert 0.0 < max_bubble < 1.0, max_bubble
+    return max(1, math.ceil((n_stages - 1) * (1.0 - max_bubble) / max_bubble))
+
+
 def choose_microbatches(global_batch: int, seq_len: int, d_model: int,
                         n_data_shards: int, n_token_shards: int,
                         *, num_layers: int = 32, vocab: int = 32_000,
                         act_budget_bytes: float = 2e9,
-                        bytes_per_elt: int = 2):
+                        bytes_per_elt: int = 2,
+                        n_stages: int = 1, max_bubble: float = 0.25):
     """Pick (microbatch count, remat policy) so live activations fit the budget.
 
     Live set per token ≈ L * d_model * remat_factor (saved residual stack across
@@ -78,9 +93,22 @@ def choose_microbatches(global_batch: int, seq_len: int, d_model: int,
     divided by the model shards.  Mirrors the paper's §III-B rule: the
     mini-batch is whatever the activation buffer holds; deeper recompute
     (= deeper layer fusion) trades compute for buffer space.
+
+    With ``n_stages > 1`` (inter-pod 1F1B pipeline, parallel/pipeline.py)
+    the choice is additionally *bubble-aware*: the count is raised until the
+    schedule's bubble fraction ``(p-1)/(m+p-1)`` drops to ``max_bubble`` —
+    more microbatches cost nothing under 1F1B (per-stage live activations
+    stay bounded by ``min(p-s, m)``) while directly shrinking the bubble.
     Returns (n_micro, remat_name).
     """
     per_shard_batch = max(1, global_batch // n_data_shards)
+    floor = min(min_microbatches_for_bubble(n_stages, max_bubble),
+                per_shard_batch)
+
+    def divisible(n_micro: int) -> int:
+        while per_shard_batch % n_micro:
+            n_micro += 1
+        return min(n_micro, per_shard_batch)
 
     def per_token(remat):
         layer_term = num_layers * d_model * _REMAT_FACTOR[remat]
@@ -91,8 +119,6 @@ def choose_microbatches(global_batch: int, seq_len: int, d_model: int,
         tokens_budget = act_budget_bytes / per_token(remat)
         mb_samples = int(tokens_budget // seq_len)
         if mb_samples >= 1:
-            n_micro = max(1, math.ceil(per_shard_batch / mb_samples))
-            while per_shard_batch % n_micro:
-                n_micro += 1
-            return min(n_micro, per_shard_batch), remat
+            n_micro = max(1, math.ceil(per_shard_batch / mb_samples), floor)
+            return divisible(n_micro), remat
     return per_shard_batch, "full"      # 1-sample microbatches, max recompute

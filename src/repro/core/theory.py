@@ -198,6 +198,69 @@ def weak_scaling_series(method: str, base: CommParams, ks=(1, 2, 4, 8),
 
 
 # ---------------------------------------------------------------------------
+# Inter-pod pipeline model (PR 5: pod_axis_role="pipeline")
+# ---------------------------------------------------------------------------
+
+def pipeline_bubble_fraction(p: int, m: int) -> float:
+    """Idle fraction of the non-interleaved 1F1B schedule: ``(p-1)/(m+p-1)``.
+
+    ``p`` pipeline stages (pods), ``m`` microbatches; F and B take one tick
+    each, so the makespan is ``2(m+p-1)`` ticks of which every stage idles
+    ``2(p-1)`` — the classic PipeDream-flush / Megatron-LM bubble.  The
+    simulated schedule (parallel/pipeline.schedule_1f1b) reproduces this
+    exactly; benchmarks/comm_model.pipeline_rows asserts the match in the
+    emitted ``theory_pipeline_*`` rows.
+    """
+    if p <= 1:
+        return 0.0
+    return (p - 1) / (m + p - 1)
+
+
+def pipeline_boundary_comm(p: CommParams, n_stages: int, n_micro: int,
+                           pod_beta: float, pod_alpha: float = 1e-6
+                           ) -> Dict[str, float]:
+    """Per-step inter-pod transfer time of the 1F1B stage boundaries.
+
+    Each microbatch crosses each of the ``p-1`` boundaries once forward
+    (one [b/m, s, h] activation) and once backward (its cotangent) over the
+    slow off-package links (``pod_beta`` bytes/s, ``pod_alpha`` latency).
+    The residual stays seq-sharded *within* a pod, but the whole tensor
+    must cross the package boundary, so the per-crossing bytes are the full
+    microbatch activation.
+    """
+    bytes_per_mb = p.b / n_micro * p.s * p.h * p.bytes_per_elt
+    crossings = 2 * (n_stages - 1) * n_micro
+    T = crossings * bytes_per_mb / pod_beta
+    L = crossings * pod_alpha
+    return _cell(L, T)
+
+
+def pipeline_step_time(sp: SystemParams, n_stages: int, n_micro: int,
+                       layers: int, pod_beta: float) -> Dict[str, float]:
+    """Whole-step time decomposition of a ``p``-pod 1F1B pipeline.
+
+    Per-stage compute is ``layers/p`` layer times; the 1F1B bubble inflates
+    the critical path by ``1/(1-bubble)``; boundary transfers hide behind
+    compute when shorter than one stage's per-microbatch work (1F1B sends
+    while the next microbatch computes), otherwise the excess is exposed.
+    """
+    p = sp.comm
+    lt = layer_time("hecaton", sp)
+    stage_layers = layers / n_stages
+    work = lt["total"] * stage_layers * n_micro      # per-stage, all microbatches
+    bubble = pipeline_bubble_fraction(n_stages, n_micro)
+    comm = pipeline_boundary_comm(p, n_stages, n_micro, pod_beta)
+    per_mb_compute = lt["total"] * stage_layers
+    per_crossing = (comm["total"] / max(1, 2 * (n_stages - 1) * n_micro))
+    exposed = max(0.0, per_crossing - per_mb_compute) * 2 * (n_stages - 1) \
+        * n_micro
+    total = work / (1.0 - bubble) + exposed
+    return {"compute": work, "bubble_fraction": bubble,
+            "boundary_comm": comm["total"], "exposed_boundary": exposed,
+            "total": total}
+
+
+# ---------------------------------------------------------------------------
 # SRAM requirement model (paper §V-A b)
 # ---------------------------------------------------------------------------
 

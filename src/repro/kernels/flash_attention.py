@@ -5,7 +5,7 @@ shuffles, the sequential TPU grid carries running (max, sum, acc) statistics in
 VMEM scratch across the KV-block axis; the MXU consumes (q_block x kv_block)
 tiles.  Causal masking skips fully-masked KV blocks via pl.when.  GQA is
 supported by mapping multiple q-heads onto one kv-head index (no KV repeat —
-the memory argument from DESIGN.md §4).
+the memory argument from docs/DESIGN.md §4).
 
 Grid: (batch*q_heads, Sq/bq, Sk/bk), KV axis innermost.
 """

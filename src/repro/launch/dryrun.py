@@ -224,7 +224,7 @@ def main():
         for shape in shapes:
             if shape not in shape_cells_for(cfg):
                 print(f"[SKIP] {arch}.{shape}: long_500k skipped for "
-                      f"full-attention arch (see DESIGN.md)", flush=True)
+                      f"full-attention arch (see docs/DESIGN.md §4)", flush=True)
                 continue
             for mp in meshes:
                 if run_cell(arch, shape, args.strategy, mp, args.out):

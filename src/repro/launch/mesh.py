@@ -54,10 +54,42 @@ def make_mesh_for(strategy: str, *, multi_pod: bool = False, data: int = 16,
     return Mesh(devices[:data * model].reshape(data, model), ("data", "model"))
 
 
-def make_small_mesh(strategy: str, data: int, mx: int, my: int):
-    """Scaled-down mesh for tests / weak-scaling studies on host devices."""
-    n = data * mx * my
+def make_small_mesh(strategy: str, data: int, mx: int, my: int,
+                    pods: int = 1):
+    """Scaled-down mesh for tests / weak-scaling studies on host devices.
+
+    ``pods > 1`` prepends a leading ``"pod"`` axis — the inter-package tier.
+    Whether that axis is extra data parallelism or 1F1B pipeline stages is
+    the *config's* call (``ParallelConfig.pod_axis_role``); the mesh only
+    fixes the placement: pods are contiguous device blocks, so every
+    intra-pod ring stays within a package and only stage-boundary (or
+    batch-gradient) traffic crosses the slow tier.
+    """
+    n = pods * data * mx * my
     devs = np.asarray(jax.devices()[:n])
+    if pods > 1:
+        if strategy == "hecaton":
+            return Mesh(devs.reshape(pods, data, mx, my),
+                        ("pod", "data", "mx", "my"))
+        return Mesh(devs.reshape(pods, data, mx * my),
+                    ("pod", "data", "model"))
     if strategy == "hecaton":
         return Mesh(devs.reshape(data, mx, my), ("data", "mx", "my"))
     return Mesh(devs.reshape(data, mx * my), ("data", "model"))
+
+
+def pod_submeshes(mesh: Mesh):
+    """Split a multi-pod mesh into one single-pod Mesh per pod-axis index.
+
+    Pipeline stages (parallel/pipeline.py) run each stage on its pod's
+    sub-mesh: inside a stage the world looks exactly like a single-pod
+    mesh, so the hecaton/megatron collectives, the overlap lattice and the
+    seq residual compose unchanged.  The pod order of this list defines the
+    stage order (stage ``s`` sends its boundary activation to ``s+1``).
+    """
+    if "pod" not in mesh.axis_names:
+        raise ValueError(f"mesh has no 'pod' axis: {mesh.axis_names}")
+    i = mesh.axis_names.index("pod")
+    names = tuple(a for a in mesh.axis_names if a != "pod")
+    return [Mesh(np.take(mesh.devices, k, axis=i), names)
+            for k in range(mesh.devices.shape[i])]

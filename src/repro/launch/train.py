@@ -22,6 +22,57 @@ def _maybe_respawn(n: int):
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
 
+def _train_pipeline(cfg, pcfg, rc, mesh, args):
+    """1F1B pipeline path: per-pod stage state, host-side schedule executor.
+
+    The step function is NOT jitted (the per-stage closures inside the
+    runner are); train/loop.py drives it unchanged because the state leaves
+    (lists of per-stage trees) are ordinary pytrees.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import make_manager
+    from repro.config import CheckpointConfig
+    from repro.data.synthetic import Prefetcher, SyntheticLM
+    from repro.models import lm
+    from repro.parallel import pipeline as PP
+    from repro.runtime.fault import StepTimer
+    from repro.train import loop as train_loop
+
+    runner, step = PP.build_pipeline_train_step(
+        cfg, pcfg, rc, mesh, total_steps=args.steps,
+        compute_dtype=jnp.bfloat16)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    sparams = runner.place_params(params)
+    sopt = runner.init_opt(sparams)
+    del params
+
+    ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
+                            async_=not args.ckpt_sync)
+    ckpt = make_manager(args.ckpt_dir, ccfg) if args.ckpt_dir else None
+    start = 0
+    if ckpt is not None and ckpt.latest_step() is not None:
+        # per-stage state is an ordinary pytree (lists of stage trees), so
+        # the manager restores it shard-for-shard onto the sub-meshes
+        restored, start = ckpt.restore(
+            {"params": sparams, "opt_state": sopt})
+        sparams, sopt = restored["params"], restored["opt_state"]
+        print(f"restored pipeline checkpoint at step {start}")
+
+    ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
+    it = Prefetcher(iter(ds))
+    state = {"params": sparams, "opt_state": sopt}
+    state = train_loop.train(step, state, it, start_step=start,
+                             num_steps=args.steps, ckpt=ckpt,
+                             ckpt_every=ccfg.every, timer=StepTimer())
+    it.close()
+    if ckpt is not None:
+        ckpt.close()                 # train() already drained in-flight saves
+    h = state["history"]
+    print(f"pipeline[{pcfg.pods} stages x ({pcfg.mx}x{pcfg.my})] "
+          f"final loss {h[-1][1]:.4f} (first {h[0][1]:.4f})")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
@@ -36,6 +87,11 @@ def main():
     ap.add_argument("--data", type=int, default=2)
     ap.add_argument("--mx", type=int, default=2)
     ap.add_argument("--my", type=int, default=2)
+    ap.add_argument("--pods", type=int, default=1,
+                    help="number of packages; with --pod-role pipeline each "
+                         "pod runs one 1F1B stage of the block stack")
+    ap.add_argument("--pod-role", default="data",
+                    choices=("data", "pipeline"))
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -44,7 +100,9 @@ def main():
                     help="blocking saves (default: async double-buffered "
                          "writer that hides the persistence stall)")
     args = ap.parse_args()
-    _maybe_respawn(args.mesh_devices)
+    _maybe_respawn(max(args.mesh_devices,
+                       args.pods * args.data * args.mx * args.my
+                       if args.pods > 1 else args.mesh_devices))
 
     import dataclasses
     import jax
@@ -66,9 +124,15 @@ def main():
     mesh = None
     pcfg = ParallelConfig(strategy=args.strategy, data=args.data,
                           model=args.mx * args.my, mx=args.mx, my=args.my,
+                          pods=args.pods, pod_axis_role=args.pod_role,
                           microbatches=args.microbatches, zero1=True)
-    if args.mesh_devices > 1:
-        mesh = make_small_mesh(args.strategy, args.data, args.mx, args.my)
+    if args.mesh_devices > 1 or args.pods > 1:
+        mesh = make_small_mesh(args.strategy, args.data, args.mx, args.my,
+                               pods=args.pods)
+
+    if pcfg.pipeline_enabled:
+        _train_pipeline(cfg, pcfg, rc, mesh, args)
+        return
 
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     opt_state = adamw.init(params)

@@ -408,39 +408,55 @@ def _loss_mask(cfg, batch):
     return mask
 
 
-def train_loss(pctx, cfg: ModelConfig, params, batch, *, remat: str = "fusion"):
+def head_loss(pctx, cfg: ModelConfig, params, hidden, labels, *, mask=None,
+              compute_dtype=jnp.bfloat16):
+    """Post-final-norm hidden states -> mean masked NLL.
+
+    The LM-head + cross-entropy tail of :func:`train_loss`, factored out so
+    a pipeline's LAST stage (parallel/pipeline.py) can run it on its own
+    sub-mesh.  Routes through the fused chunked losses where the layout
+    allows (hecaton's ``fused_lm_loss``; megatron seq layout's
+    ``fused_lm_loss_seq`` with sharded labels) and otherwise materializes
+    (sharded) logits and runs :func:`xent_loss` — exactly what the
+    pre-refactor ``train_loss`` inlined.  ``params`` needs only the head
+    leaves (``lm_head`` or the tied ``embed`` table)."""
     from repro.parallel import megatron as meg
-    mask = _loss_mask(cfg, batch)
-    use_fused = (pctx.mesh is None or pctx.use_hecaton) and         pctx.pcfg.fused_loss
+    use_fused = (pctx.mesh is None or pctx.use_hecaton) and \
+        pctx.pcfg.fused_loss
     use_meg_fused = (not use_fused and pctx.mesh is not None
                      and pctx.pcfg.fused_loss
-                     and meg.seq_loss_ok(pctx, batch["tokens"].shape[1],
+                     and meg.seq_loss_ok(pctx, hidden.shape[1],
                                          cfg.padded_vocab))
-    if use_fused or use_meg_fused:
-        out = forward(pctx, cfg, params, batch, remat=remat, skip_head=True)
-        compute_dtype = batch.get("_dtype", jnp.bfloat16)
-        head_w = (params["embed"]["table"].T.astype(compute_dtype)
-                  if cfg.tie_embeddings else
-                  params["lm_head"]["w"].astype(compute_dtype))
-        hidden = out.hidden.astype(compute_dtype)
-        if use_meg_fused:
-            # megatron seq layout: labels stay sharded; the head's vocab
-            # chunks ring over the model axis (fused_lm_loss_seq)
-            nll, cnt = meg.fused_lm_loss_seq(pctx, hidden, head_w,
-                                             batch["labels"], mask)
-        else:
-            from repro.core import hecaton as hec
-            a = pctx.ax
-            nll, cnt = hec.fused_lm_loss(
-                hidden, head_w, batch["labels"], mask,
-                mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
-                h_ax=a.h_ax if a else "my",
-                data_axes=a.data_axes if a else ("data",),
-                overlap=pctx.overlap)
-        loss = nll / jnp.maximum(cnt, 1.0)
+    head_w = (params["embed"]["table"].T.astype(compute_dtype)
+              if cfg.tie_embeddings else
+              params["lm_head"]["w"].astype(compute_dtype))
+    hidden = hidden.astype(compute_dtype)
+    if use_meg_fused:
+        # megatron seq layout: labels stay sharded; the head's vocab
+        # chunks ring over the model axis (fused_lm_loss_seq)
+        nll, cnt = meg.fused_lm_loss_seq(pctx, hidden, head_w, labels, mask)
+    elif use_fused:
+        from repro.core import hecaton as hec
+        a = pctx.ax
+        nll, cnt = hec.fused_lm_loss(
+            hidden, head_w, labels, mask,
+            mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
+            h_ax=a.h_ax if a else "my",
+            data_axes=a.data_axes if a else ("data",),
+            overlap=pctx.overlap)
     else:
-        out = forward(pctx, cfg, params, batch, remat=remat)
-        loss = xent_loss(pctx, out.logits, batch["labels"], mask)
+        logits = pctx.lm_head(hidden, head_w)
+        logits = pctx.constraint(logits, pctx.logits_spec())
+        return xent_loss(pctx, logits, labels, mask)
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(pctx, cfg: ModelConfig, params, batch, *, remat: str = "fusion"):
+    mask = _loss_mask(cfg, batch)
+    out = forward(pctx, cfg, params, batch, remat=remat, skip_head=True)
+    loss = head_loss(pctx, cfg, params, out.hidden, batch["labels"],
+                     mask=mask, compute_dtype=batch.get("_dtype",
+                                                        jnp.bfloat16))
     aux_coef = cfg.moe.aux_loss if cfg.moe else 0.0
     total = loss + aux_coef * out.aux
     return total, {"loss": loss, "aux": out.aux}

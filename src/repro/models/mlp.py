@@ -2,7 +2,7 @@
 
 Dense MLPs run the Hecaton fused-FFN dataflow (core/hecaton.ffn_block).
 
-MoE uses an EP×TP hybrid (DESIGN.md §4): experts sharded over the grid's ``mx``
+MoE uses an EP×TP hybrid (docs/DESIGN.md §4): experts sharded over the grid's ``mx``
 axis, each expert's FFN width sharded over ``my``; tokens are dispatched locally by
 an argsort-based capacity router (gather/scatter-add, fully differentiable).  The
 only collectives are an all-gather of the (hidden-sharded) input and a

@@ -34,21 +34,31 @@ def lr_schedule(rc: RunConfig, step, total_steps: int = 10_000):
     return rc.lr * warm * (0.1 + 0.9 * cos)
 
 
-def global_norm(tree) -> jax.Array:
+def global_norm_sq(tree) -> jax.Array:
+    """Sum of squared leaf elements (fp32).  Exposed separately so pipeline
+    stages (parallel/pipeline.py) can combine per-stage partial sums into
+    ONE global norm before clipping — the clip couples all stages."""
     leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
               for x in jax.tree.leaves(tree)]
-    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+    return jnp.sum(jnp.stack(leaves))
 
 
-def clip_by_global_norm(grads, max_norm: float):
-    g = global_norm(grads)
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(global_norm_sq(tree))
+
+
+def clip_by_global_norm(grads, max_norm: float, norm=None):
+    """Clip by global norm; ``norm`` substitutes a precomputed norm (the
+    pipeline's cross-stage combined norm) for the local tree norm."""
+    g = global_norm(grads) if norm is None else norm
     scale = jnp.minimum(1.0, max_norm / (g + 1e-6))
     return jax.tree.map(lambda a: (a * scale).astype(a.dtype), grads), g
 
 
 def update(params, grads, state: AdamState, rc: RunConfig,
-           total_steps: int = 10_000) -> Tuple[Any, AdamState, Dict]:
-    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip)
+           total_steps: int = 10_000, *,
+           grad_norm=None) -> Tuple[Any, AdamState, Dict]:
+    grads, gnorm = clip_by_global_norm(grads, rc.grad_clip, norm=grad_norm)
     step = state.step + 1
     lr = lr_schedule(rc, state.step, total_steps)
     b1, b2, eps = rc.beta1, rc.beta2, 1e-8

@@ -25,7 +25,7 @@ exit scatters ride the same overlap lattice as the hecaton ops.
 
 Decode mode always uses the 1D layout over the *combined* model axes: Alg. 1's
 token-scatter needs >= sqrt(N) tokens per step, and the paper targets training /
-finetuning (DESIGN.md §4).  Decode therefore also forces the replicated
+finetuning (docs/DESIGN.md §4).  Decode therefore also forces the replicated
 residual (S=1 cannot token-scatter).
 """
 

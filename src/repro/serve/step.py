@@ -1,9 +1,10 @@
 """Serving step builders: prefill (build KV/SSM caches from a prompt batch) and
 decode (one token against a filled cache).
 
-Decode runs the 1D-TP layout over the combined model axes (DESIGN.md §4 — the
-paper's Alg. 1 token-scatter needs >= sqrt(N) tokens/step and targets training);
-prefill reuses the full Hecaton dataflow since it is forward-pass-shaped.
+Decode runs the 1D-TP layout over the combined model axes (docs/DESIGN.md §4
+— the paper's Alg. 1 token-scatter needs >= sqrt(N) tokens/step and targets
+training); prefill reuses the full Hecaton dataflow since it is
+forward-pass-shaped.
 """
 
 from __future__ import annotations

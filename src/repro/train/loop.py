@@ -15,6 +15,13 @@ the loop drains in-flight saves (``wait_until_finished``), which also
 surfaces any writer error; on failure the supervisor aborts them instead
 (``run_supervised(ckpt=...)``) so a restart never resumes from a
 half-published step.
+
+The loop is agnostic to HOW the step runs: the single-program jitted step
+(train/step.py) and the 1F1B pipeline orchestrator
+(parallel/pipeline.build_pipeline_train_step) both fold ``(params,
+opt_state, batch) -> (params, opt_state, metrics)``; under the pipeline the
+state leaves are *lists of per-stage trees* (one per pod), which checkpoint
+and restore like any other pytree.
 """
 
 from __future__ import annotations

@@ -41,6 +41,21 @@ def microbatch_split(batch: Dict[str, jax.Array], n_micro: int):
 def build_train_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
                      mesh, *, total_steps: int = 10_000,
                      compute_dtype=jnp.bfloat16):
+    """Single-program train step (grad-accumulation scan over microbatches).
+
+    With ``pcfg.pipeline_enabled`` (pod_axis_role="pipeline") the step is
+    instead the 1F1B orchestrator over per-pod stage sub-meshes — build it
+    with ``parallel/pipeline.build_pipeline_train_step(...)`` (it takes the
+    multi-pod mesh and returns (runner, step_fn); the step_fn must NOT be
+    wrapped in ``jax.jit`` — it is a host-side schedule executor whose
+    per-stage closures are jitted individually).
+    """
+    if pcfg.pipeline_enabled:
+        raise ValueError(
+            "pcfg.pipeline_enabled: use parallel/pipeline."
+            "build_pipeline_train_step for the 1F1B pipeline step "
+            "(state is per-stage; this single-program builder cannot "
+            "express it)")
     pctx = PCtx(mesh, pcfg, "train")
     n_micro = pcfg.microbatches
 

@@ -1,0 +1,227 @@
+"""Subprocess numerics check: inter-pod 1F1B pipeline == single-pod baseline.
+
+Acceptance for ISSUE 5's tentpole: on 2-pod CPU grids — 2x(1x4) and
+2x(2x2), i.e. a "pod" axis of 2 in front of the hecaton (mx, my) grid —
+``pod_axis_role="pipeline"`` must train with 1F1B microbatch scheduling and
+produce loss + grads matching the single-pod baseline (same inner grid, no
+pod axis) to fp32 tolerance, under ``overlap in {none, ring}`` with the
+seq-sharded residual composing inside each stage.
+
+Also checks:
+  * the executed op order per stage matches the pure-Python 1F1B table
+    (warmup/steady/cooldown) and the per-stage activation stash never
+    exceeds the schedule's in-flight bound min(p-s, m);
+  * a full optimizer step (global-norm clip coupled across stages) stays
+    within fp32 tolerance of the single-program train step, for two steps;
+  * grads also match the dense single-device reference;
+  * a 4-stage 4x(1x2) pipeline (mid-stage fwd/bwd paths) with m=4 AND the
+    m=2 < p warmup-clamped schedule.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.config import ModelConfig, ParallelConfig, RunConfig
+from repro.launch import mesh as M
+from repro.models import lm
+from repro.parallel import pipeline as PP
+from repro.parallel import specs as SP
+from repro.parallel import zero
+from repro.parallel.context import PCtx
+from repro.train import step as TS
+
+CFG = ModelConfig(name="pipe-test", family="dense", num_layers=4,
+                  d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                  vocab_size=64, qk_norm=True)
+RC = RunConfig("pipe", "train", seq_len=16, global_batch=8, lr=1e-3,
+               warmup_steps=2)
+N_MICRO = 4
+TOL = dict(rtol=2e-4, atol=2e-5)
+
+
+def make_batch():
+    k = jax.random.PRNGKey(7)
+    tokens = jax.random.randint(k, (RC.global_batch, RC.seq_len), 0,
+                                CFG.vocab_size)
+    return {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+
+
+def pcfg_for(mx, my, *, pods=1, overlap="none", n_micro=N_MICRO):
+    role = "pipeline" if pods > 1 else "data"
+    return ParallelConfig(strategy="hecaton", data=1, model=mx * my,
+                          mx=mx, my=my, pods=pods, pod_axis_role=role,
+                          overlap=overlap, microbatches=n_micro,
+                          grad_reduce_dtype="fp32", remat="none")
+
+
+def accumulated_loss_grads(pctx, pcfg, params, batch):
+    """Replicate train/step.py's microbatch accumulation (python loop)."""
+    mbs = TS.microbatch_split(batch, N_MICRO)
+
+    def loss_fn(p, mb):
+        mb = dict(mb)
+        mb["_dtype"] = jnp.float32
+        return lm.train_loss(pctx, CFG, p, mb, remat=pcfg.remat)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+    gsum = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    lsum = 0.0
+    for i in range(N_MICRO):
+        mb = {k: v[i] for k, v in mbs.items()}
+        (_, metrics), g = grad_fn(params, mb)
+        g = zero.compress_grads(g, pcfg.grad_reduce_dtype)
+        gsum = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gsum, g)
+        lsum += float(metrics["loss"])
+    grads = jax.tree.map(lambda g: g / N_MICRO, gsum)
+    return lsum / N_MICRO, grads
+
+
+def check_grid(mx, my, overlap, params, batch, ref_loss, ref_grads):
+    tag = f"2x({mx}x{my})/{overlap}"
+    # ---- single-pod baseline on the inner grid --------------------------
+    bmesh = M.make_small_mesh("hecaton", 1, mx, my)
+    bpcfg = pcfg_for(mx, my, overlap=overlap)
+    bspecs = SP.param_specs(params, bmesh, bpcfg)
+    bparams = jax.device_put(params, SP.sharding_tree(bspecs, bmesh))
+    bsp = SP.batch_specs(bmesh, bpcfg, microbatched=False,
+                         seq_len=RC.seq_len)
+    bbatch = {k: jax.device_put(batch[k], NamedSharding(bmesh, bsp[k]))
+              for k in batch}
+    base_loss, base_grads = accumulated_loss_grads(
+        PCtx(bmesh, bpcfg, "train"), bpcfg, bparams, bbatch)
+    np.testing.assert_allclose(base_loss, ref_loss, rtol=1e-4,
+                               err_msg=f"{tag} baseline vs dense ref")
+
+    # ---- 2-pod 1F1B pipeline -------------------------------------------
+    pmesh = M.make_small_mesh("hecaton", 1, mx, my, pods=2)
+    ppcfg = pcfg_for(mx, my, pods=2, overlap=overlap)
+    runner = PP.PipelineRunner(CFG, ppcfg, RC, pmesh,
+                               compute_dtype=jnp.float32)
+    sparams = runner.place_params(params)
+    loss, sgrads, metrics = runner.loss_and_grads(sparams, batch)
+
+    np.testing.assert_allclose(float(loss), base_loss, rtol=1e-5,
+                               err_msg=f"{tag} pipeline loss")
+    merged = PP.merge_stage_grads(sgrads, CFG)
+    flat_base = dict(jax.tree_util.tree_flatten_with_path(base_grads)[0])
+    flat_pipe = dict(jax.tree_util.tree_flatten_with_path(merged)[0])
+    assert flat_base.keys() == flat_pipe.keys()
+    for kp, want in flat_base.items():
+        np.testing.assert_allclose(np.asarray(flat_pipe[kp]),
+                                   np.asarray(want),
+                                   err_msg=f"{tag} grad {kp}", **TOL)
+    for kp, want in dict(
+            jax.tree_util.tree_flatten_with_path(ref_grads)[0]).items():
+        np.testing.assert_allclose(np.asarray(flat_pipe[kp]),
+                                   np.asarray(want),
+                                   err_msg=f"{tag} grad-vs-dense {kp}", **TOL)
+
+    # ---- schedule conformance ------------------------------------------
+    p = runner.n_stages
+    for s in range(p):
+        want_order = PP.stage_order(s, p, N_MICRO)
+        assert runner.executed[s] == want_order, (tag, s)
+        bound = min(p - s, N_MICRO)
+        assert runner.max_stash[s] <= bound, (tag, s, runner.max_stash)
+    print(f"{tag}: 1F1B loss+grads match baseline + dense ref, "
+          f"schedule conformant")
+    return bmesh, bpcfg, pmesh, ppcfg, runner, sparams
+
+
+def check_four_stage(params, batch, ref_loss, ref_grads):
+    """4 pods x (1x2) grid (one layer per stage — mid-stage fwd/bwd paths),
+    with m=4 (steady 1F1B) AND m=2 < p (warmup-clamped schedule)."""
+    for n_micro in (4, 2):
+        tag = f"4x(1x2)/m{n_micro}"
+        pmesh = M.make_small_mesh("hecaton", 1, 1, 2, pods=4)
+        ppcfg = pcfg_for(1, 2, pods=4, n_micro=n_micro)
+        runner = PP.PipelineRunner(CFG, ppcfg, RC, pmesh,
+                                   compute_dtype=jnp.float32)
+        sparams = runner.place_params(params)
+        loss, sgrads, _ = runner.loss_and_grads(sparams, batch)
+        np.testing.assert_allclose(float(loss), ref_loss, rtol=1e-4,
+                                   err_msg=f"{tag} loss")
+        merged = PP.merge_stage_grads(sgrads, CFG)
+        for kp, want in dict(
+                jax.tree_util.tree_flatten_with_path(ref_grads)[0]).items():
+            got = dict(jax.tree_util.tree_flatten_with_path(merged)[0])[kp]
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       err_msg=f"{tag} grad {kp}", **TOL)
+        for s in range(4):
+            assert runner.executed[s] == PP.stage_order(s, 4, n_micro), \
+                (tag, s)
+            assert runner.max_stash[s] <= min(4 - s, n_micro), \
+                (tag, s, runner.max_stash)
+        print(f"{tag}: 4-stage 1F1B loss+grads match dense ref, "
+              f"schedule conformant")
+
+
+def check_train_step_parity(mx, my, params, batch):
+    """Two full optimizer steps: pipeline == single-program, fp32 tol."""
+    tag = f"2x({mx}x{my})/train-step"
+    from repro.optim import adamw
+    bmesh = M.make_small_mesh("hecaton", 1, mx, my)
+    bpcfg = pcfg_for(mx, my)
+    bspecs = SP.param_specs(params, bmesh, bpcfg)
+    bparams = jax.device_put(params, SP.sharding_tree(bspecs, bmesh))
+    bopt = adamw.init(bparams)
+    ospecs = SP.opt_state_specs(bspecs, bparams, bmesh, bpcfg)
+    bopt = jax.device_put(bopt, SP.sharding_tree(ospecs, bmesh))
+    bstep = jax.jit(TS.build_train_step(CFG, bpcfg, RC, bmesh,
+                                        compute_dtype=jnp.float32))
+    bsp = SP.batch_specs(bmesh, bpcfg, microbatched=False,
+                         seq_len=RC.seq_len)
+    bbatch = {k: jax.device_put(batch[k], NamedSharding(bmesh, bsp[k]))
+              for k in batch}
+
+    pmesh = M.make_small_mesh("hecaton", 1, mx, my, pods=2)
+    ppcfg = pcfg_for(mx, my, pods=2)
+    runner, pstep = PP.build_pipeline_train_step(CFG, ppcfg, RC, pmesh,
+                                                 compute_dtype=jnp.float32)
+    sparams = runner.place_params(params)
+    sopt = runner.init_opt(sparams)
+
+    for step in range(2):
+        bparams, bopt, bm = bstep(bparams, bopt, bbatch)
+        sparams, sopt, pm = pstep(sparams, sopt, batch)
+        np.testing.assert_allclose(float(pm["loss"]), float(bm["loss"]),
+                                   rtol=1e-5, err_msg=f"{tag} step{step}")
+        np.testing.assert_allclose(float(pm["grad_norm"]),
+                                   float(bm["grad_norm"]), rtol=1e-4,
+                                   err_msg=f"{tag} gnorm step{step}")
+    merged = PP.merge_stage_grads(sparams, CFG)
+    for kp, want in dict(
+            jax.tree_util.tree_flatten_with_path(bparams)[0]).items():
+        got = dict(jax.tree_util.tree_flatten_with_path(merged)[0])[kp]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   err_msg=f"{tag} params {kp}", **TOL)
+    print(f"{tag}: 2 optimizer steps bit-comparable (fp32 tol) OK")
+
+
+def main():
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    batch = make_batch()
+    # dense single-device reference
+    dense_pctx = PCtx(None, ParallelConfig(data=1, model=1, mx=1, my=1,
+                                           microbatches=N_MICRO,
+                                           grad_reduce_dtype="fp32",
+                                           remat="none"))
+    ref_loss, ref_grads = accumulated_loss_grads(
+        dense_pctx, dense_pctx.pcfg, params, batch)
+
+    for mx, my in ((1, 4), (2, 2)):
+        for overlap in ("none", "ring"):
+            check_grid(mx, my, overlap, params, batch, ref_loss, ref_grads)
+    check_four_stage(params, batch, ref_loss, ref_grads)
+    check_train_step_parity(1, 4, params, batch)
+    print("ALL PIPELINE CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

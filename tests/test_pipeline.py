@@ -1,0 +1,227 @@
+"""Inter-pod 1F1B pipeline (ISSUE 5): pure-Python schedule properties,
+config validation, bubble-aware microbatch choice, stage partitioning.
+
+Device numerics (2-pod CPU grids vs single-pod baseline) run in a
+subprocess: tests/_mp/check_pipeline.py.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.core import schedule as SCH
+from repro.core import theory as TH
+from repro.parallel import pipeline as PP
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# schedule properties (no devices)
+# ---------------------------------------------------------------------------
+
+GRID = [(2, 2), (2, 4), (2, 8), (3, 3), (4, 2), (4, 8), (4, 16), (8, 8)]
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_makespan_and_bubble_count(p, m):
+    s = PP.schedule_1f1b(p, m)
+    assert s.makespan == 2 * (m + p - 1)
+    for stage in range(p):
+        assert s.bubble_ticks(stage) == 2 * (p - 1)
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_bubble_fraction_matches_theory(p, m):
+    """Acceptance: simulated bubble == (p-1)/(m+p-1) (core/theory.py)."""
+    s = PP.schedule_1f1b(p, m)
+    assert abs(s.bubble_fraction - TH.pipeline_bubble_fraction(p, m)) < 1e-12
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_stage_order_warmup_steady_cooldown(p, m):
+    for stage in range(p):
+        order = PP.stage_order(stage, p, m)
+        kinds = [t.kind for t in order]
+        assert len(order) == 2 * m
+        w = min(p - 1 - stage, m)
+        # warmup: w forwards
+        assert kinds[:w] == ["F"] * w
+        # steady: strict F,B alternation
+        steady = kinds[w:w + 2 * (m - w)]
+        assert steady == ["F", "B"] * (m - w)
+        # cooldown: drain the warmed-up backwards
+        assert kinds[w + 2 * (m - w):] == ["B"] * w
+        # each microbatch exactly once per direction, F before its B
+        fs = [t.mb for t in order if t.kind == "F"]
+        bs = [t.mb for t in order if t.kind == "B"]
+        assert fs == list(range(m)) and bs == list(range(m))
+        for i in range(m):
+            assert order.index(PP.PipeTask("F", i)) < \
+                order.index(PP.PipeTask("B", i))
+
+
+@pytest.mark.parametrize("p,m", GRID)
+def test_schedule_dependencies_and_in_flight(p, m):
+    s = PP.schedule_1f1b(p, m)
+    done = {}
+    for t, row in enumerate(s.ticks):
+        for stage, task in enumerate(row):
+            if task is None:
+                continue
+            if task.kind == "F" and stage > 0:
+                assert done[("F", stage - 1, task.mb)] < t
+            if task.kind == "B" and stage < p - 1:
+                assert done[("B", stage + 1, task.mb)] < t
+            if task.kind == "B":
+                assert done[("F", stage, task.mb)] < t or p == 1
+            done[(task.kind, stage, task.mb)] = t
+    # every op executed exactly once
+    assert len(done) == 2 * p * m
+    # 1F1B memory bound: min(p - s, m) in-flight microbatches at stage s
+    for stage in range(p):
+        assert s.peak_in_flight(stage) == min(p - stage, m)
+
+
+def test_schedule_degenerate():
+    s = PP.schedule_1f1b(1, 3)
+    assert s.makespan == 6 and s.bubble_fraction == 0.0
+    assert PP.schedule_1f1b(1, 1).makespan == 2
+
+
+# ---------------------------------------------------------------------------
+# config validation (the old silent no-op)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_role_requires_multiple_pods():
+    with pytest.raises(ValueError, match="pods > 1"):
+        ParallelConfig(data=1, model=1, mx=1, my=1,
+                       pod_axis_role="pipeline", pods=1)
+
+
+def test_bad_pod_axis_role_rejected():
+    with pytest.raises(ValueError, match="pod_axis_role"):
+        ParallelConfig(data=1, model=1, mx=1, my=1, pod_axis_role="bogus")
+
+
+def test_pipeline_enabled_properties():
+    p = ParallelConfig(data=1, model=1, mx=1, my=1, pods=2,
+                       pod_axis_role="pipeline")
+    assert p.pipeline_enabled and p.pipeline_stages == 2
+    d = ParallelConfig(data=1, model=1, mx=1, my=1, pods=2)
+    assert not d.pipeline_enabled and d.pipeline_stages == 1
+
+
+def test_build_train_step_rejects_pipeline_config():
+    from repro.config import RunConfig
+    from repro.train import step as TS
+    pcfg = ParallelConfig(data=1, model=1, mx=1, my=1, pods=2,
+                          pod_axis_role="pipeline")
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=8,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32)
+    rc = RunConfig("t", "train", 8, 4)
+    with pytest.raises(ValueError, match="pipeline"):
+        TS.build_train_step(cfg, pcfg, rc, None)
+
+
+def test_validate_pipeline_unsupported_models():
+    pcfg = ParallelConfig(data=1, model=1, mx=1, my=1, pods=2,
+                          pod_axis_role="pipeline")
+    tied = ModelConfig(name="t", family="dense", num_layers=4, d_model=8,
+                       num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32,
+                       tie_embeddings=True)
+    with pytest.raises(ValueError, match="tie_embeddings"):
+        PP.validate_pipeline(tied, pcfg)
+    ssm = ModelConfig(name="t", family="ssm", num_layers=4, d_model=8,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32,
+                      block_pattern=("mamba",) * 4)
+    with pytest.raises(ValueError, match="attention"):
+        PP.validate_pipeline(ssm, pcfg)
+    odd = ModelConfig(name="t", family="dense", num_layers=5, d_model=8,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32)
+    with pytest.raises(ValueError, match="divide"):
+        PP.validate_pipeline(odd, pcfg)
+    # vlm passes the pattern check but needs patch injection + prefix loss
+    # mask the stage runner doesn't do — must raise, not silently mistrain
+    vlm = ModelConfig(name="t", family="vlm", num_layers=4, d_model=8,
+                      num_heads=2, num_kv_heads=2, d_ff=16, vocab_size=32,
+                      frontend_stub_len=4)
+    with pytest.raises(ValueError, match="token-only"):
+        PP.validate_pipeline(vlm, pcfg)
+
+
+def test_split_stage_layers():
+    assert [list(r) for r in PP.split_stage_layers(8, 2)] == \
+        [[0, 1, 2, 3], [4, 5, 6, 7]]
+    with pytest.raises(ValueError):
+        PP.split_stage_layers(6, 4)
+
+
+# ---------------------------------------------------------------------------
+# bubble-aware microbatch choice
+# ---------------------------------------------------------------------------
+
+def test_min_microbatches_for_bubble():
+    # (p-1)/(m+p-1) <= f  <=>  m >= (p-1)(1-f)/f
+    assert SCH.min_microbatches_for_bubble(1, 0.25) == 1
+    for p in (2, 4, 8):
+        m = SCH.min_microbatches_for_bubble(p, 0.25)
+        assert TH.pipeline_bubble_fraction(p, m) <= 0.25
+        assert TH.pipeline_bubble_fraction(p, m - 1) > 0.25 or m == 1
+
+
+def test_choose_microbatches_bubble_aware():
+    kw = dict(seq_len=128, d_model=256, n_data_shards=1, n_token_shards=4,
+              num_layers=4, vocab=1024, act_budget_bytes=1e9)
+    n1, r1 = SCH.choose_microbatches(64, n_stages=1, **kw)
+    n4, r4 = SCH.choose_microbatches(64, n_stages=4, max_bubble=0.2, **kw)
+    assert r1 == r4
+    assert n4 >= n1
+    assert TH.pipeline_bubble_fraction(4, n4) <= 0.2
+    assert 64 % n4 == 0          # still divides the per-shard batch
+    # the floor cannot exceed the per-shard batch
+    n_small, _ = SCH.choose_microbatches(2, n_stages=8, max_bubble=0.05,
+                                         **kw)
+    assert n_small <= 2
+
+
+# ---------------------------------------------------------------------------
+# stage partitioning
+# ---------------------------------------------------------------------------
+
+def test_stage_params_roundtrip():
+    import jax
+    import numpy as np
+    from repro.models import lm
+    cfg = ModelConfig(name="t", family="dense", num_layers=4, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    stages = [PP.stage_params(params, cfg, s, 2) for s in range(2)]
+    assert "embed" in stages[0] and "embed" not in stages[1]
+    assert "lm_head" in stages[1] and "lm_head" not in stages[0]
+    assert "final_norm" in stages[1]
+    merged = PP.merge_stage_grads(stages, cfg)
+    for (kp, want), (kp2, got) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(merged)[0]):
+        assert kp == kp2
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# device numerics (subprocess, fake 8-device topology)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_numerics():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, os.path.join(ROOT, "tests", "_mp",
+                                                     "check_pipeline.py")],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, \
+        f"\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    assert "ALL PIPELINE CHECKS PASSED" in r.stdout

@@ -101,7 +101,7 @@ def test_full_config_matches_assignment(arch):
 
 
 def test_long_500k_skip_policy():
-    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    """long_500k runs only for sub-quadratic archs (docs/DESIGN.md §4)."""
     for arch in ARCHS:
         cfg = get_config(arch)
         cells = shape_cells_for(cfg)

@@ -1,0 +1,163 @@
+"""Markdown link-and-anchor checker (ISSUE 5 satellite).
+
+Fails (exit 1) on dangling *intra-repo* references, the class of rot that
+left ``serve/step.py`` citing a ``DESIGN.md §4`` that did not exist for
+four PRs:
+
+1. **Markdown links** ``[text](target)`` in every tracked ``*.md`` file:
+   the target path must exist (relative to the containing file), and a
+   ``#anchor`` fragment must match a heading of the target file under
+   GitHub's slugification.  External schemes (http/https/mailto) are
+   ignored; fenced code blocks are skipped.
+
+2. **Section citations** ``docs/DESIGN.md §N`` appearing anywhere in the
+   repo's ``*.py`` and ``*.md`` files: ``docs/DESIGN.md`` must contain a
+   numbered ``## N.`` heading.  Bare ``DESIGN.md`` mentions require the
+   file to exist at ``docs/DESIGN.md``.
+
+Run from anywhere:  ``python tools/check_links.py [repo_root]``
+Used by CI and by ``tests/test_docs.py``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+SKIP_DIRS = {".git", ".github", ".pytest_cache", ".claude", "__pycache__",
+             ".hypothesis"}
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+SECTION_CITE_RE = re.compile(r"DESIGN\.md\s*§\s*(\d+)")
+NUMBERED_HEADING_RE = re.compile(r"^##\s+(\d+)[.·]\s")
+EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def _walk(root: str, exts):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(exts):
+                yield os.path.join(dirpath, f)
+
+
+def _strip_code_fences(text: str) -> str:
+    """Blank out fenced code blocks so code snippets aren't parsed as links."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            out.append("")
+            continue
+        out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slugification: lowercase, drop non [word/space/-],
+    spaces -> hyphens (inline code/emphasis markers removed first; in-word
+    underscores are KEPT — they are word characters, not emphasis)."""
+    h = re.sub(r"[`*]", "", heading).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def md_anchors(path: str):
+    anchors = set()
+    with open(path, encoding="utf-8") as f:
+        text = _strip_code_fences(f.read())
+    for line in text.splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            anchors.add(github_slug(m.group(2)))
+    return anchors
+
+
+def design_sections(design_path: str):
+    if not os.path.exists(design_path):
+        return None
+    sections = set()
+    with open(design_path, encoding="utf-8") as f:
+        for line in f:
+            m = NUMBERED_HEADING_RE.match(line)
+            if m:
+                sections.add(int(m.group(1)))
+    return sections
+
+
+def check(root: str):
+    errors = []
+    anchor_cache = {}
+
+    def anchors_of(path):
+        if path not in anchor_cache:
+            anchor_cache[path] = md_anchors(path)
+        return anchor_cache[path]
+
+    # 1. markdown links
+    for md in sorted(_walk(root, (".md",))):
+        rel = os.path.relpath(md, root)
+        with open(md, encoding="utf-8") as f:
+            text = _strip_code_fences(f.read())
+        for n, line in enumerate(text.splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL):
+                    continue
+                path_part, _, frag = target.partition("#")
+                base = (md if not path_part else
+                        os.path.normpath(os.path.join(os.path.dirname(md),
+                                                      path_part)))
+                if not os.path.exists(base):
+                    errors.append(f"{rel}:{n}: dangling link target "
+                                  f"{target!r} (no such file {path_part!r})")
+                    continue
+                if frag and base.endswith(".md"):
+                    if frag.lower() not in anchors_of(base):
+                        errors.append(
+                            f"{rel}:{n}: dangling anchor {target!r} "
+                            f"(#{frag} not a heading of "
+                            f"{os.path.relpath(base, root)})")
+
+    # 2. DESIGN.md § citations (in .py and .md alike)
+    design = os.path.join(root, "docs", "DESIGN.md")
+    sections = design_sections(design)
+    for src in sorted(_walk(root, (".py", ".md"))):
+        rel = os.path.relpath(src, root)
+        if rel == "ISSUE.md":        # task spec may cite by intent
+            continue
+        with open(src, encoding="utf-8", errors="replace") as f:
+            for n, line in enumerate(f, 1):
+                if "DESIGN.md" not in line:
+                    continue
+                if sections is None:
+                    errors.append(f"{rel}:{n}: cites DESIGN.md but "
+                                  f"docs/DESIGN.md does not exist")
+                    continue
+                for m in SECTION_CITE_RE.finditer(line):
+                    sec = int(m.group(1))
+                    if sec not in sections:
+                        errors.append(
+                            f"{rel}:{n}: cites DESIGN.md §{sec} but "
+                            f"docs/DESIGN.md has sections "
+                            f"{sorted(sections)}")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = os.path.abspath(argv[0] if argv else
+                           os.path.join(os.path.dirname(
+                               os.path.abspath(__file__)), ".."))
+    errors = check(root)
+    if errors:
+        print(f"check_links: {len(errors)} dangling reference(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print("check_links: all intra-repo links and section citations resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
