@@ -24,12 +24,22 @@ Rows (also persisted as ``checkpoint_stall`` in BENCH_overlap.json):
 The step function donates its buffers, so the async boundary still pays the
 device→host snapshot (it must — the next step reuses the device memory); what
 the writer thread hides is everything after it.
+
+Multi-writer sweep (ISSUE 6; persisted as ``checkpoint_multiwriter``):
+blocking wall-clock write time of the same ~65MB state under a writer group
+of 1 / 2 / 4 writers (``ckpt_multiwriter_wN_us``, median of several saves,
+non-durable so the measurement is serialize+write parallelism rather than
+fsync latency).  Acceptance (CI): the 4-writer save is no slower than the
+1-writer save — the writer group removes the single-writer bandwidth
+ceiling, it must not add a coordination penalty.
 """
 import time
 
 STEPS = 14
 EVERY = 4          # boundaries at local steps 3, 7, 11 (published 4, 8, 12)
 WARMUP = 2
+WRITER_SWEEP = (1, 2, 4)
+MW_REPS = 5
 
 
 def _build():
@@ -81,13 +91,39 @@ def _run(mgr, ts, batches, init_state):
     return boundary, base
 
 
+def _multiwriter(emit, state, state_mb):
+    """Blocking save wall time vs writer-group size, same state each time."""
+    import tempfile
+
+    import numpy as np
+    from repro.checkpoint.manager import make_manager
+    from repro.config import CheckpointConfig
+
+    rows = {}
+    for w in WRITER_SWEEP:
+        mgr = make_manager(tempfile.mkdtemp(),
+                           CheckpointConfig(async_=False, keep=2, writers=w))
+        times = []
+        for rep in range(MW_REPS):
+            t0 = time.perf_counter()
+            mgr.save(rep + 1, state)
+            times.append(time.perf_counter() - t0)
+        rows[f"w{w}_us"] = float(np.median(times)) * 1e6
+        emit(f"ckpt_multiwriter_w{w}_us", rows[f"w{w}_us"],
+             f"{w}-writers-{state_mb:.0f}MB")
+    rows["x4v1"] = rows["w4_us"] / rows["w1_us"]
+    emit("ckpt_multiwriter_x4v1", 0.0,
+         f"{rows['x4v1']:.2f}(acceptance<=1)")
+    return rows
+
+
 def main(emit):
     import tempfile
 
     import jax
     import numpy as np
-    from repro.checkpoint.manager import AsyncCheckpointManager, \
-        CheckpointManager
+    from repro.checkpoint.manager import make_manager
+    from repro.config import CheckpointConfig
     from repro.models import lm
     from repro.optim import adamw
 
@@ -100,16 +136,20 @@ def main(emit):
     p, o = init_state()
     state_mb = sum(np.asarray(x).nbytes for x in
                    jax.tree_util.tree_leaves({"p": p, "o": o})) / 1e6
+    # host-side copy for the multi-writer sweep: the snapshot cost is then a
+    # no-op memcpy and the sweep isolates the serialize+write fan-out
+    host_state = jax.device_get({"params": p, "opt_state": o})
     del p, o
 
     # durable=True on BOTH paths: the comparison is fair (identical bytes,
     # identical fsync barrier) and realistic — a checkpoint you cannot
     # trust after power loss hides its cost by not paying it
     sync_b, sync_base = _run(
-        CheckpointManager(tempfile.mkdtemp(), durable=True),
+        make_manager(tempfile.mkdtemp(),
+                     CheckpointConfig(async_=False, durable=True)),
         ts, batches, init_state)
     async_b, async_base = _run(
-        AsyncCheckpointManager(tempfile.mkdtemp(), durable=True),
+        make_manager(tempfile.mkdtemp(), CheckpointConfig(durable=True)),
         ts, batches, init_state)
     # baseline from the SYNC run only: in the async run the writer thread
     # serializes during the non-boundary steps and inflates them — pooling
@@ -133,6 +173,7 @@ def main(emit):
     emit("ckpt_stall_sync_x", 0.0, f"{rows['sync_x']:.2f}")
     emit("ckpt_stall_async_x", 0.0,
          f"{rows['async_x']:.2f}(acceptance<=1.5)")
+    rows["multiwriter"] = _multiwriter(emit, host_state, state_mb)
     return rows
 
 

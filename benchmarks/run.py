@@ -18,7 +18,9 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   overlap       — wall time bulk vs ring vs bidir vs fused collective matmuls
                   (CPU mesh; fused runs the interpret-emulated kernel path)
   ckpt_stall    — checkpoint-boundary step-time stall, blocking vs async
-                  double-buffered saves (ISSUE 4 acceptance rows)
+                  double-buffered saves (ISSUE 4 acceptance rows), plus the
+                  multi-writer save-time sweep over writers in {1, 2, 4}
+                  (``ckpt_multiwriter_*`` rows, ISSUE 6)
 
 Besides the CSV, the harness persists ``BENCH_overlap.json`` next to the repo
 root: per-mode step times from ``benchmarks/overlap.py``, the micro matmul
@@ -105,6 +107,8 @@ def main() -> None:
             "residual_layouts": (results.get("hlo_compare")
                                  or {}).get("residual"),
             "checkpoint_stall": results.get("ckpt_stall"),
+            "checkpoint_multiwriter": (results.get("ckpt_stall")
+                                       or {}).get("multiwriter"),
             "theory_pipeline": (results.get("comm_model")
                                 or {}).get("pipeline"),
         }

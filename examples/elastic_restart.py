@@ -2,11 +2,14 @@
 the latest atomic checkpoint, and the resumed trajectory is BIT-EXACT against
 an uninterrupted baseline run (the crash-resume divergence check CI enforces).
 
-Checkpointing runs through the ASYNC double-buffered manager: boundary steps
-only snapshot into the host staging arena; serialization + the atomic publish
-happen on the writer thread, and the supervisor's ``ckpt=`` fence aborts any
+Checkpointing runs through the ASYNC double-buffered manager with a 2-writer
+group: boundary steps only snapshot into the host staging arena;
+serialization + the two-phase quorum publish (per-writer shard dirs +
+checksummed partial manifests, then the atomic global manifest) happen off
+the training thread, and the supervisor's ``ckpt=`` fence aborts any
 in-flight save from a dead incarnation so a restart only ever restores a
-fully-published step.
+fully-published step — every restored shard crc32-verified against its
+manifest entry (docs/DESIGN.md §7).
 
     PYTHONPATH=src python examples/elastic_restart.py
 """
@@ -34,7 +37,8 @@ cfg = ModelConfig(name="elastic-demo", family="dense", num_layers=2,
 rc = RunConfig("e", "train", 32, 8, lr=1e-3)
 pcfg = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1)
 TOTAL = 60
-ckpt = make_manager(CKPT, CheckpointConfig(every=10, keep=3, async_=True))
+ckpt = make_manager(CKPT, CheckpointConfig(every=10, keep=3, async_=True,
+                                           writers=2, verify=True))
 injector = FailureInjector({17: "chip down", 38: "host unreachable"})
 ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
                                  compute_dtype=jnp.float32),

@@ -1,46 +1,78 @@
-"""Fault-tolerant sharded checkpointing — synchronous and asynchronous.
+"""Fault-tolerant sharded checkpointing — multi-writer, quorum-published.
 
 Design (no orbax in this environment — built from scratch, mirroring its
 ``save / wait_until_finished / check_error`` surface):
 
-  * **Atomic**: writes go to ``step_K.tmp/`` then ``os.replace`` to ``step_K/``;
-    a crash or kill mid-write never corrupts the latest checkpoint.  Stale
-    ``.tmp`` directories left by a dead incarnation are invisible to
-    :meth:`CheckpointManager.all_steps` and are swept on manager construction
-    (and by :meth:`AsyncCheckpointManager.abort`), so a restart can never
-    resume from a half-published step.
-  * **Sharded**: each leaf is saved as one ``.npy`` per *data-axis shard owner*
-    — on a real multi-host pod each host writes only its addressable shards
-    (here: single host writes all, layout identical).
-  * **Elastic restore**: leaves are saved UNSHARDED logically (global arrays),
-    so a checkpoint written on a (16,16) mesh restores onto (2,16,16), a
-    different microbatch count, or a rescaled data axis — re-sharding happens
-    at ``device_put`` with the *target* sharding (elastic scaling / node-failure
-    recovery path used by runtime/fault.py).
-  * **Self-describing**: ``meta.json`` records step, tree structure, and the
-    logical dtype of every leaf.  Leaf files are numbered (``leaf_00000.npy``)
-    and mapped through the manifest, so pytree key names can contain any
-    character (``__``, ``/``, ``%``) without filename collisions; path
-    segments are %-escaped in the manifest so ``{"a/b": x}`` and
-    ``{"a": {"b": x}}`` stay distinct.  Dtypes ``.npy`` cannot round-trip
-    (``bfloat16`` and the other ml_dtypes extension types load back as raw
-    void) are stored as raw bytes with the logical dtype in the manifest.
+  * **Writer group** (the ISSUE 6 tentpole): a save fans out over ``writers``
+    logical writers.  Each writer persists only its addressable shards into a
+    per-writer subdirectory (``writer_KK/``) and then atomically publishes a
+    *partial manifest* (``writer_KK/manifest.json``) recording, per shard, the
+    file, shape, logical dtype, byte length, and a crc32 checksum of the
+    on-disk bytes, plus a self-checksum over the shard table.  On a real pod
+    each writer is one host (for pipeline state: one writer per stage/pod via
+    ``parallel/pipeline.stage_writer_map``); here the writers are threads with
+    the identical on-disk protocol.  Shards with no explicit writer mapping
+    are byte-balanced across the group (:func:`partition_shards`).
+  * **Two-phase quorum publish**: a coordinator waits for the writer group,
+    re-reads every partial manifest from disk, verifies its self-checksum and
+    that every listed shard file is present with the recorded length, and
+    only then writes the step's global ``MANIFEST.json`` (via ``.tmp`` +
+    ``os.replace``) and atomically publishes the step directory
+    (``step_K.tmp/`` → ``step_K/``).  Publication requires at least
+    ``quorum`` verified partial manifests AND complete shard coverage; a
+    writer that dies between its shard writes and its manifest publish
+    (``writer_fault`` injection window, ``FailureInjector.check_writer``)
+    therefore leaves torn debris that is swept and never listed by
+    :meth:`CheckpointManager.all_steps` — a restart can never resume from a
+    half-written step.  ``quorum < writers`` only changes the outcome when
+    the dead writers owned zero shards (coverage stays complete), the
+    single-filesystem analogue of publishing with a replication quorum.
+  * **End-to-end integrity**: restore is *quorum reassembly* — it selects the
+    newest step whose global manifest is complete, and (``verify=True``)
+    checks every shard's byte length and crc32 against the manifest before
+    ``device_put``.  A bit-flipped or truncated shard file raises
+    :class:`CheckpointCorruptionError` naming the file, instead of silently
+    loading garbage into the optimizer state.
+  * **Elastic restore**: leaves are saved UNSHARDED logically (global
+    arrays), so a checkpoint written by N writers on one grid restores onto
+    any other grid — or writer count — with *target* shardings applied at
+    ``device_put`` (the elastic-scaling / node-failure path of
+    runtime/fault.py).  The writer partition is a persistence layout, not a
+    numerics layout.
+  * **Self-describing**: the global manifest records step, tree structure,
+    the committed writer set, and the logical dtype of every leaf.  Leaf
+    files are numbered per writer (``writer_00/leaf_00000.npy``) and mapped
+    through the manifest, so pytree key names can contain any character
+    (``__``, ``/``, ``%``) without filename collisions; path segments are
+    %-escaped so ``{"a/b": x}`` and ``{"a": {"b": x}}`` stay distinct.
+    Dtypes ``.npy`` cannot round-trip (``bfloat16`` and the other ml_dtypes
+    extension types load back as raw void) are stored as raw bytes with the
+    logical dtype in the manifest.
+  * **Tolerant listing**: ``all_steps`` ignores foreign files, ``.tmp``
+    debris, and half-deleted step directories (a GC interrupted mid-rmtree,
+    a torn multi-writer publish) — these states are reachable with
+    concurrent writers and must not crash step listing.  GC renames a step
+    out of the namespace (``step_K`` → ``step_K.gc.tmp``) before deleting
+    it, so an interrupted GC leaves ``.tmp`` debris, never a listable
+    half-step.
 
-Asynchronous path (:class:`AsyncCheckpointManager`, the ISSUE 4 tentpole):
-``save_async`` runs only the device→host snapshot on the caller (train-loop)
-thread — a ``jax.device_get`` into a *reusable host staging arena* — and hands
-serialization + the atomic publish to a background writer thread.  The arena
-copy is required for correctness, not just speed: on the CPU backend
-``device_get`` can alias the device buffer, and with ``donate_argnums`` the
-next train step reuses that memory; the arena gives the writer stable storage
-while the step ahead runs.  The arena is double-buffered (``max_inflight``
-slots): acquiring a slot blocks only when every slot still has an unwritten
-snapshot, which bounds host memory and applies natural backpressure instead
-of dropping checkpoints.  Writer failures are sticky and surface on the next
-``save_async`` / ``check_error`` / ``wait_until_finished``; ``abort`` (called
-by ``runtime/fault.run_supervised`` when an incarnation dies) discards queued
-snapshots, interrupts a mid-write publish between leaves, and sweeps ``.tmp``
-debris so the restart sees only fully-published steps.
+Asynchronous path (:class:`AsyncCheckpointManager`): ``save_async`` runs only
+the device→host snapshot on the caller (train-loop) thread — a
+``jax.device_get`` into a *reusable host staging arena* — and hands the
+writer-group fan-out + quorum publish to a background coordinator thread.
+The arena copy is required for correctness, not just speed: on the CPU
+backend ``device_get`` can alias the device buffer, and with
+``donate_argnums`` the next train step reuses that memory; the arena gives
+the writers stable storage while the step ahead runs.  The arena is
+double-buffered (``max_inflight`` slots): acquiring a slot blocks only when
+every slot still has an unwritten snapshot, which bounds host memory and
+applies natural backpressure instead of dropping checkpoints.  Writer-group
+failures are sticky and surface on the next ``save_async`` / ``check_error``
+/ ``wait_until_finished``; ``abort`` (called by
+``runtime/fault.run_supervised`` when an incarnation dies) fences the WHOLE
+writer group: queued snapshots are discarded, every in-flight writer is
+interrupted between shards, ``.tmp`` debris is swept, and the sticky error
+is cleared, so the restart sees only fully-published steps.
 """
 
 from __future__ import annotations
@@ -48,16 +80,23 @@ from __future__ import annotations
 import json
 import os
 import queue
+import re
 import shutil
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 _COPY_POOL: Optional[ThreadPoolExecutor] = None
-_COPY_POOL_LOCK = threading.Lock()
+_WRITE_POOL: Optional[ThreadPoolExecutor] = None
+_POOL_LOCK = threading.Lock()
+
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+MANIFEST = "MANIFEST.json"          # global (coordinator-published) manifest
+PARTIAL_MANIFEST = "manifest.json"  # per-writer partial manifest
 
 
 def _copy_pool() -> ThreadPoolExecutor:
@@ -66,12 +105,26 @@ def _copy_pool() -> ThreadPoolExecutor:
     stall the async path is supposed to minimize — copying the leaves
     concurrently overlaps page faults and uses the full memory bandwidth."""
     global _COPY_POOL
-    with _COPY_POOL_LOCK:
+    with _POOL_LOCK:
         if _COPY_POOL is None:
             _COPY_POOL = ThreadPoolExecutor(
                 max_workers=min(8, 2 * (os.cpu_count() or 2)),
                 thread_name_prefix="ckpt-stage")
         return _COPY_POOL
+
+
+def _write_pool() -> ThreadPoolExecutor:
+    """Shared pool the writer group runs on.  ``np.save`` on a file object,
+    the crc read-back, and ``os.write`` all release the GIL, so N writers
+    genuinely parallelize the serialize+persist wall time (the
+    ``checkpoint_multiwriter`` bench rows assert 4 writers ≤ 1)."""
+    global _WRITE_POOL
+    with _POOL_LOCK:
+        if _WRITE_POOL is None:
+            _WRITE_POOL = ThreadPoolExecutor(
+                max_workers=min(8, (os.cpu_count() or 2)),
+                thread_name_prefix="ckpt-write")
+        return _WRITE_POOL
 
 
 def _fsync_path(path: str):
@@ -104,39 +157,128 @@ def _npy_safe(dtype: np.dtype) -> bool:
     return np.dtype(dtype).isbuiltin == 1
 
 
+def _crc(data: bytes) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def _shards_crc(shards: Dict[str, Dict]) -> int:
+    """Self-checksum of a partial manifest's shard table (canonical json) —
+    a torn/garbled manifest write fails this instead of passing coordinator
+    verification by accident."""
+    return _crc(json.dumps(shards, sort_keys=True).encode())
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A shard file or manifest failed integrity verification on restore —
+    the error message names the offending file so the operator can map it to
+    a disk/host (restore refuses to load garbage silently)."""
+
+
+class QuorumError(RuntimeError):
+    """The coordinator could not assemble a publishable step: fewer than
+    ``quorum`` partial manifests verified, or shard coverage is incomplete
+    (a writer died between shard-write and manifest-publish)."""
+
+
 class _Aborted(Exception):
     """Internal: a mid-write save was interrupted by :meth:`abort`."""
 
 
-class CheckpointManager:
-    """Synchronous atomic checkpointing (the blocking baseline path).
+def partition_shards(sizes: Dict[str, int], n_writers: int,
+                     writer_map: Optional[Callable[[str], Optional[int]]]
+                     = None) -> Dict[str, int]:
+    """Deterministic shard→writer assignment.
 
-    ``durable=True`` fsyncs every leaf file, the metadata and the directory
-    before the atomic publish (and the parent after), so a published step
-    survives power loss, not just process death.  Off by default — on
-    network/9p filesystems fsync costs seconds, and the tests/examples only
-    need crash-consistency against process kills."""
+    ``writer_map(name)`` pins a shard to a writer (the pipeline stage→writer
+    mapping, ``parallel/pipeline.stage_writer_map``); unpinned shards are
+    greedily byte-balanced (largest first) so no writer becomes the
+    bandwidth ceiling.  Pure function of (names, sizes) — sync and async
+    saves of the same state produce identical layouts."""
+    assert n_writers >= 1
+    owner: Dict[str, int] = {}
+    load = [0] * n_writers
+    free: List[str] = []
+    for name in sorted(sizes):
+        w = writer_map(name) if writer_map is not None else None
+        if w is not None and 0 <= int(w) < n_writers:
+            owner[name] = int(w)
+            load[int(w)] += sizes[name]
+        else:
+            free.append(name)
+    for name in sorted(free, key=lambda n: (-sizes[n], n)):
+        w = min(range(n_writers), key=lambda i: (load[i], i))
+        owner[name] = w
+        load[w] += sizes[name]
+    return owner
+
+
+class CheckpointManager:
+    """Synchronous multi-writer checkpointing (the blocking baseline path).
+
+    ``writers`` logical writers persist disjoint shard sets in parallel;
+    ``quorum`` (default: all writers) partial manifests must verify before
+    the coordinator publishes (module docstring).  ``verify=True`` checks
+    every shard's length+crc32 on restore.  ``writer_map`` pins shards to
+    writers (pipeline stage→writer); ``writer_fault(step, writer)`` is a
+    fault-injection hook invoked between a writer's shard writes and its
+    partial-manifest publish (``FailureInjector.check_writer``).
+
+    ``durable=True`` fsyncs every shard file, both manifest tiers and the
+    directories around the atomic publish (and the parent after), so a
+    published step survives power loss, not just process death.  Off by
+    default — on network/9p filesystems fsync costs seconds, and the
+    tests/examples only need crash-consistency against process kills."""
 
     def __init__(self, directory: str, keep: int = 3, *,
-                 durable: bool = False):
+                 durable: bool = False, writers: int = 1,
+                 quorum: Optional[int] = None, verify: bool = True,
+                 writer_map: Optional[Callable[[str], Optional[int]]] = None,
+                 writer_fault: Optional[Callable[[int, int], None]] = None):
+        assert writers >= 1, f"writers={writers} must be >= 1"
         self.dir = directory
         self.keep = keep
         self.durable = durable
+        self.writers = writers
+        self.quorum = writers if quorum is None else quorum
+        assert 1 <= self.quorum <= writers, (
+            f"quorum={self.quorum} must be in [1, writers={writers}]")
+        self.verify = verify
+        self.writer_map = writer_map
+        self.writer_fault = writer_fault
         os.makedirs(directory, exist_ok=True)
         self._clean_stale_tmp()
 
     def _clean_stale_tmp(self):
-        """Sweep half-written ``step_K.tmp/`` debris from a dead incarnation.
-        Safe only when no writer is active against this directory (true at
-        construction and after an abort drain)."""
+        """Sweep torn debris from a dead incarnation: ``step_K.tmp/``
+        (in-flight or crashed writes, interrupted GC renames) and published
+        -namespace step directories whose global manifest is absent or
+        unparseable (a half-deleted step, a foreign dir squatting on the
+        name).  Safe only when no writer is active against this directory
+        (true at construction and after an abort drain)."""
         for d in os.listdir(self.dir):
+            p = os.path.join(self.dir, d)
             if d.startswith("step_") and d.endswith(".tmp"):
-                shutil.rmtree(os.path.join(self.dir, d), ignore_errors=True)
+                shutil.rmtree(p, ignore_errors=True)
+            elif _STEP_RE.match(d) and os.path.isdir(p) \
+                    and not self._manifest_complete(p):
+                shutil.rmtree(p, ignore_errors=True)
+
+    @staticmethod
+    def _manifest_complete(step_dir: str) -> bool:
+        """Does ``step_dir`` hold a parseable, complete global manifest?
+        Never raises — torn json / missing file / permission errors all mean
+        "not a restorable step" (the tolerant-listing contract)."""
+        try:
+            with open(os.path.join(step_dir, MANIFEST)) as f:
+                return bool(json.load(f).get("complete"))
+        except (OSError, ValueError):
+            return False
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any],
              extra_meta: Optional[Dict] = None) -> str:
-        """Blocking save: snapshot, serialize and publish on this thread."""
+        """Blocking save: snapshot, fan out the writer group and publish on
+        this thread (the writers still run on the shared write pool)."""
         return self._write(step, self._snapshot_host(state), extra_meta)
 
     def _snapshot_host(self, state, slot: Optional[Dict] = None):
@@ -163,56 +305,199 @@ class CheckpointManager:
         list(_copy_pool().map(lambda ba: np.copyto(ba[0], ba[1]), jobs))
         return snap
 
+    # -- writer side (phase 1: shards + partial manifest) ---------------
+    def _write_leaf(self, path: str, arr: np.ndarray) -> Dict:
+        info: Dict[str, Any] = {"shape": list(arr.shape),
+                                "dtype": str(arr.dtype)}
+        if not _npy_safe(arr.dtype):   # bf16 etc: raw bytes + logical dtype
+            info["raw"] = True
+            arr = np.frombuffer(arr.tobytes(), np.uint8)
+        np.save(path, arr)
+        with open(path, "rb") as f:    # checksum the on-disk container bytes
+            data = f.read()
+        info["bytes"] = len(data)
+        info["crc32"] = _crc(data)
+        if self.durable:
+            _fsync_path(path)
+        return info
+
+    def _run_writer(self, tmp: str, step: int, writer: int,
+                    names: List[str], snap: Dict[str, np.ndarray],
+                    abort_check) -> Dict[str, Dict]:
+        """One logical writer: persist ``names`` into ``writer_KK/``, then
+        atomically publish the partial manifest.  The gap between the last
+        shard write and the manifest publish is the torn-step window the
+        quorum gate exists for — ``writer_fault`` injects death there."""
+        wtag = f"writer_{writer:02d}"
+        wdir = os.path.join(tmp, wtag)
+        os.makedirs(wdir, exist_ok=True)
+        shards: Dict[str, Dict] = {}
+        for i, name in enumerate(names):
+            if abort_check is not None and abort_check():
+                raise _Aborted(step)
+            info = self._write_leaf(
+                os.path.join(wdir, f"leaf_{i:05d}.npy"), snap[name])
+            info["file"] = f"{wtag}/leaf_{i:05d}.npy"
+            info["writer"] = writer
+            shards[name] = info
+        # >>> shards on disk; partial manifest NOT yet published <<<
+        if self.writer_fault is not None:
+            self.writer_fault(step, writer)
+        if abort_check is not None and abort_check():
+            raise _Aborted(step)
+        partial = {"writer": writer, "step": step, "shards": shards,
+                   "crc32": _shards_crc(shards)}
+        mtmp = os.path.join(wdir, PARTIAL_MANIFEST + ".tmp")
+        with open(mtmp, "w") as f:
+            json.dump(partial, f, sort_keys=True)
+            if self.durable:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(mtmp, os.path.join(wdir, PARTIAL_MANIFEST))
+        if self.durable:
+            _fsync_path(wdir)
+        return shards
+
+    # -- coordinator side (phase 2: verify quorum, publish) --------------
+    def _verify_partial(self, tmp: str, step: int,
+                        writer: int) -> Dict[str, Dict]:
+        """Re-read one partial manifest FROM DISK and verify it: parseable
+        json, self-checksum over the shard table, correct (step, writer)
+        identity, and every listed shard file present with the recorded
+        byte length.  This is the "durably present and checksum-verified"
+        gate the global publish waits on; full per-shard crc verification
+        is the restore side's job (end-to-end, where it matters)."""
+        path = os.path.join(tmp, f"writer_{writer:02d}", PARTIAL_MANIFEST)
+        try:
+            with open(path) as f:
+                partial = json.load(f)
+        except (OSError, ValueError) as e:
+            raise QuorumError(
+                f"writer {writer} partial manifest {path} unreadable: "
+                f"{type(e).__name__}: {e}") from e
+        shards = partial.get("shards", {})
+        if partial.get("crc32") != _shards_crc(shards):
+            raise QuorumError(
+                f"writer {writer} partial manifest {path} failed its "
+                f"self-checksum — torn manifest write")
+        if partial.get("step") != step or partial.get("writer") != writer:
+            raise QuorumError(
+                f"{path} identifies as step {partial.get('step')} writer "
+                f"{partial.get('writer')}, expected step {step} writer "
+                f"{writer}")
+        for name, info in shards.items():
+            fpath = os.path.join(tmp, info["file"])
+            try:
+                size = os.stat(fpath).st_size
+            except OSError as e:
+                raise QuorumError(
+                    f"shard {fpath} (leaf {name!r}) listed by writer "
+                    f"{writer} is missing: {e}") from e
+            if size != info["bytes"]:
+                raise QuorumError(
+                    f"shard {fpath} (leaf {name!r}) is {size}B on disk, "
+                    f"writer {writer} manifest records {info['bytes']}B")
+        return shards
+
     def _write(self, step: int, snap: Dict[str, np.ndarray],
                extra_meta: Optional[Dict] = None, abort_check=None) -> str:
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
         final = os.path.join(self.dir, f"step_{step:08d}")
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        manifest = {}
-        for i, name in enumerate(sorted(snap)):
-            if abort_check is not None and abort_check():
+        try:
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            names = sorted(snap)
+            owner = partition_shards({n: snap[n].nbytes for n in names},
+                                     self.writers, self.writer_map)
+            groups = [[n for n in names if owner[n] == w]
+                      for w in range(self.writers)]
+            futs = [_write_pool().submit(self._run_writer, tmp, step, w,
+                                         groups[w], snap, abort_check)
+                    for w in range(self.writers)]
+            failures: Dict[int, BaseException] = {}
+            for w, fut in enumerate(futs):
+                try:
+                    fut.result()
+                except BaseException as e:
+                    failures[w] = e
+            if any(isinstance(e, _Aborted) for e in failures.values()):
                 raise _Aborted(step)
-            arr = snap[name]
-            fn = f"leaf_{i:05d}.npy"
-            info = {"file": fn, "shape": list(arr.shape),
-                    "dtype": str(arr.dtype)}
-            if _npy_safe(arr.dtype):
-                np.save(os.path.join(tmp, fn), arr)
-            else:                      # bf16 etc: raw bytes + logical dtype
-                info["raw"] = True
-                np.save(os.path.join(tmp, fn),
-                        np.frombuffer(arr.tobytes(), np.uint8))
-            manifest[name] = info
-        meta = {"step": step, "manifest": manifest, **(extra_meta or {})}
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
+            # phase 2: quorum gate — verify every committed partial from
+            # disk, then publish iff quorum met AND coverage complete
+            verified: Dict[int, Dict[str, Dict]] = {}
+            for w in range(self.writers):
+                if w not in failures:
+                    verified[w] = self._verify_partial(tmp, step, w)
+            covered = set()
+            for shards in verified.values():
+                covered.update(shards)
+            missing = [n for n in names if n not in covered]
+            if len(verified) < self.quorum or missing:
+                why = "; ".join(
+                    f"writer {w}: {type(e).__name__}: {e}"
+                    for w, e in sorted(failures.items())) or "no writer died"
+                raise QuorumError(
+                    f"step {step} torn: {len(verified)}/{self.writers} "
+                    f"partial manifests verified (quorum {self.quorum}), "
+                    f"{len(missing)} shards uncovered — {why}")
+            manifest: Dict[str, Dict] = {}
+            for w in sorted(verified):
+                manifest.update(verified[w])
+            meta = {"step": step, "writers": self.writers,
+                    "quorum": self.quorum, "committed": sorted(verified),
+                    "failed_writers": sorted(failures), "complete": True,
+                    "manifest": manifest, **(extra_meta or {})}
+            gtmp = os.path.join(tmp, MANIFEST + ".tmp")
+            with open(gtmp, "w") as f:
+                json.dump(meta, f, sort_keys=True)
+                if self.durable:
+                    f.flush()
+                    os.fsync(f.fileno())
+            os.replace(gtmp, os.path.join(tmp, MANIFEST))
+            if self.durable:               # data durable BEFORE the publish
+                _fsync_path(tmp)
+            os.replace(tmp, final)                      # atomic publish
             if self.durable:
-                f.flush()
-                os.fsync(f.fileno())
-        if self.durable:                 # data durable BEFORE the publish
-            for info in manifest.values():
-                _fsync_path(os.path.join(tmp, info["file"]))
-            _fsync_path(tmp)
-        os.replace(tmp, final)                      # atomic publish
-        if self.durable:
-            _fsync_path(self.dir)        # the rename itself
+                _fsync_path(self.dir)        # the rename itself
+        except BaseException:
+            # any failure — writer death, quorum miss, abort — leaves only
+            # swept ground: the torn step must never be observable
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
         self._gc()
         return final
 
     def _gc(self):
-        steps = self.all_steps()
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        """Retire steps beyond ``keep``.  The step is renamed OUT of the
+        published namespace first (``.gc.tmp`` — invisible to
+        :meth:`all_steps`), so a kill mid-rmtree leaves sweepable debris,
+        never a half-deleted listable step."""
+        for s in self.all_steps()[:-self.keep]:
+            src = os.path.join(self.dir, f"step_{s:08d}")
+            dst = src + ".gc.tmp"
+            try:
+                os.replace(src, dst)
+            except OSError:        # e.g. a concurrent GC won the rename
+                dst = src
+            shutil.rmtree(dst, ignore_errors=True)
 
     def all_steps(self):
-        """Published steps only — ``.tmp`` (in-flight or crashed) never listed."""
+        """Restorable steps only: published (never ``.tmp``) AND carrying a
+        complete global manifest.  Foreign files, half-deleted directories
+        and torn publishes in the checkpoint root are skipped, not fatal."""
+        try:
+            entries = os.listdir(self.dir)
+        except FileNotFoundError:
+            return []
         out = []
-        for d in os.listdir(self.dir):
-            if d.startswith("step_") and not d.endswith(".tmp"):
-                out.append(int(d.split("_")[1]))
+        for d in entries:
+            m = _STEP_RE.match(d)
+            if not m:
+                continue
+            p = os.path.join(self.dir, d)
+            if os.path.isdir(p) and self._manifest_complete(p):
+                out.append(int(m.group(1)))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -243,21 +528,57 @@ class CheckpointManager:
     # ------------------------------------------------------------------
     def restore(self, template, step: Optional[int] = None,
                 shardings=None) -> Tuple[Any, int]:
-        """Restore into the structure of ``template`` (a pytree of arrays or
-        ShapeDtypeStructs).  ``shardings`` (optional matching tree) re-shards
-        for the *current* mesh — the elastic-scaling path."""
+        """Quorum reassembly: restore into the structure of ``template`` (a
+        pytree of arrays or ShapeDtypeStructs) from the newest step whose
+        global manifest is complete (``all_steps`` already filters torn and
+        half-deleted steps out).  With ``verify=True`` every shard's byte
+        length and crc32 are checked against the manifest BEFORE the bytes
+        reach ``device_put`` — corruption fails loudly, naming the file.
+        ``shardings`` (optional matching tree) re-shards for the *current*
+        mesh — the elastic-scaling path; the writer partition a step was
+        saved with is irrelevant on restore (leaves are global arrays)."""
+        import io
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
+        try:
+            with open(os.path.join(d, MANIFEST)) as f:
+                meta = json.load(f)
+        except FileNotFoundError as e:
+            raise FileNotFoundError(
+                f"step {step} in {self.dir} has no global manifest — torn "
+                f"or half-deleted step") from e
+        except ValueError as e:
+            raise CheckpointCorruptionError(
+                f"global manifest {os.path.join(d, MANIFEST)} is not valid "
+                f"JSON: {e}") from e
+        if not meta.get("complete"):
+            raise CheckpointCorruptionError(
+                f"global manifest of step {step} is not marked complete — "
+                f"refusing a sub-quorum restore")
         leaves = _leaf_paths(template)
         shard_leaves = _leaf_paths(shardings) if shardings is not None else {}
         out = {}
         for name, leaf in leaves.items():
             info = meta["manifest"][name]
-            arr = np.load(os.path.join(d, info["file"]))
+            path = os.path.join(d, info["file"])
+            with open(path, "rb") as f:
+                data = f.read()
+            if self.verify:
+                if len(data) != info["bytes"]:
+                    raise CheckpointCorruptionError(
+                        f"checkpoint shard {path} (leaf {name!r}) is "
+                        f"truncated: {len(data)}B on disk, manifest records "
+                        f"{info['bytes']}B — refusing to load")
+                got = _crc(data)
+                if got != info["crc32"]:
+                    raise CheckpointCorruptionError(
+                        f"checkpoint shard {path} (leaf {name!r}) failed "
+                        f"crc32 verification: file 0x{got:08x} != manifest "
+                        f"0x{info['crc32']:08x} — refusing to load a "
+                        f"corrupted shard")
+            arr = np.load(io.BytesIO(data), allow_pickle=False)
             if info.get("raw"):
                 arr = np.frombuffer(arr.tobytes(),
                                     dtype=np.dtype(info["dtype"])
@@ -279,13 +600,19 @@ class CheckpointManager:
 
 
 class AsyncCheckpointManager(CheckpointManager):
-    """Non-blocking checkpointing: snapshot on the step boundary, serialize +
-    atomically publish on a background writer thread (module docstring)."""
+    """Non-blocking checkpointing: snapshot on the step boundary, writer-group
+    fan-out + quorum publish on a background coordinator thread (module
+    docstring)."""
 
     def __init__(self, directory: str, keep: int = 3, *,
                  max_inflight: int = 2, staging: str = "host",
-                 durable: bool = False):
-        super().__init__(directory, keep, durable=durable)
+                 durable: bool = False, writers: int = 1,
+                 quorum: Optional[int] = None, verify: bool = True,
+                 writer_map: Optional[Callable[[str], Optional[int]]] = None,
+                 writer_fault: Optional[Callable[[int, int], None]] = None):
+        super().__init__(directory, keep, durable=durable, writers=writers,
+                         quorum=quorum, verify=verify, writer_map=writer_map,
+                         writer_fault=writer_fault)
         assert staging in ("host", "sync"), staging
         assert max_inflight >= 1, max_inflight
         self.staging = staging
@@ -305,10 +632,11 @@ class AsyncCheckpointManager(CheckpointManager):
     # ------------------------------------------------------------------
     def save_async(self, step: int, state: Dict[str, Any],
                    extra_meta: Optional[Dict] = None) -> None:
-        """Snapshot ``state`` to a host staging slot and return; the writer
-        thread serializes and publishes.  Blocks only for the device→host
-        copy, or when all ``max_inflight`` slots still hold unwritten
-        snapshots (backpressure).  Raises a prior writer error, if any."""
+        """Snapshot ``state`` to a host staging slot and return; the
+        coordinator thread fans out the writer group and publishes.  Blocks
+        only for the device→host copy, or when all ``max_inflight`` slots
+        still hold unwritten snapshots (backpressure).  Raises a prior
+        writer-group error, if any."""
         self.check_error()
         if self.staging == "sync" or self._closed:
             self.save(step, state, extra_meta)
@@ -334,13 +662,10 @@ class AsyncCheckpointManager(CheckpointManager):
                     self._write(step, snap, extra_meta,
                                 abort_check=self._abort.is_set)
             except _Aborted:
-                shutil.rmtree(os.path.join(self.dir, f"step_{step:08d}.tmp"),
-                              ignore_errors=True)
+                pass                             # _write swept its debris
             except BaseException as e:           # sticky: surfaced to caller
                 if self._error is None:
                     self._error = e
-                shutil.rmtree(os.path.join(self.dir, f"step_{step:08d}.tmp"),
-                              ignore_errors=True)
             finally:
                 self._free.put(slot)
                 with self._cv:
@@ -356,21 +681,23 @@ class AsyncCheckpointManager(CheckpointManager):
         self.check_error()
 
     def check_error(self):
-        """Re-raise the first writer failure (sticky, orbax semantics)."""
+        """Re-raise the first writer-group failure (sticky, orbax
+        semantics)."""
         if self._error is not None:
             raise RuntimeError(
                 f"async checkpoint writer failed: {self._error!r}"
             ) from self._error
 
     def abort(self):
-        """Discard queued snapshots and interrupt any mid-write publish —
-        called by the fault supervisor when this incarnation is dead, so a
-        restart can never observe a save issued after the failure point.
-        Published checkpoints are untouched; ``.tmp`` debris is swept, and a
-        sticky writer error is cleared with it: the dead incarnation's
-        persistence failure is fenced exactly like its in-flight saves, so
-        the NEXT incarnation starts clean instead of dying at its first
-        checkpoint boundary on a stale error (e.g. a recovered ENOSPC)."""
+        """Fence the whole writer group: discard queued snapshots and
+        interrupt every in-flight writer between shards — called by the
+        fault supervisor when this incarnation is dead, so a restart can
+        never observe a save issued after the failure point.  Published
+        checkpoints are untouched; ``.tmp`` debris is swept, and a sticky
+        writer error is cleared with it: the dead incarnation's persistence
+        failure is fenced exactly like its in-flight saves, so the NEXT
+        incarnation starts clean instead of dying at its first checkpoint
+        boundary on a stale error (e.g. a recovered ENOSPC)."""
         self._abort.set()
         with self._cv:
             while self._inflight > 0:
@@ -380,7 +707,7 @@ class AsyncCheckpointManager(CheckpointManager):
         self._clean_stale_tmp()
 
     def close(self):
-        """Drain (without raising) and stop the writer thread."""
+        """Drain (without raising) and stop the coordinator thread."""
         if self._closed:
             return
         with self._cv:
@@ -391,14 +718,24 @@ class AsyncCheckpointManager(CheckpointManager):
         self._thread.join(timeout=60)
 
 
-def make_manager(directory: str, ccfg=None) -> CheckpointManager:
+def make_manager(directory: str, ccfg=None, *,
+                 writer_map: Optional[Callable[[str], Optional[int]]] = None,
+                 writer_fault: Optional[Callable[[int, int], None]] = None
+                 ) -> CheckpointManager:
     """Build the manager a :class:`repro.config.CheckpointConfig` describes
-    (``None`` → the synchronous default)."""
+    (``None`` → the synchronous single-writer default).  ``writer_map`` pins
+    shards to writers (e.g. ``parallel/pipeline.stage_writer_map``);
+    ``writer_fault`` is the injection hook (``FailureInjector.check_writer``,
+    also wired automatically by ``train/loop.py`` when an injector is
+    active)."""
     if ccfg is None:
-        return CheckpointManager(directory)
+        return CheckpointManager(directory, writer_map=writer_map,
+                                 writer_fault=writer_fault)
+    kw = dict(keep=ccfg.keep, durable=ccfg.durable, writers=ccfg.writers,
+              quorum=ccfg.quorum, verify=ccfg.verify,
+              writer_map=writer_map, writer_fault=writer_fault)
     if ccfg.async_:
-        return AsyncCheckpointManager(directory, keep=ccfg.keep,
+        return AsyncCheckpointManager(directory,
                                       max_inflight=ccfg.max_inflight,
-                                      staging=ccfg.staging,
-                                      durable=ccfg.durable)
-    return CheckpointManager(directory, keep=ccfg.keep, durable=ccfg.durable)
+                                      staging=ccfg.staging, **kw)
+    return CheckpointManager(directory, **kw)

@@ -259,6 +259,18 @@ class CheckpointConfig:
     the blocking path ("sync") without changing the manager type — useful for
     A/B-ing the stall.  ``max_inflight`` bounds the arena (and therefore host
     memory): acquiring a slot blocks when that many snapshots are unwritten.
+
+    ``writers`` fans each save out over a writer group (ISSUE 6): N logical
+    writers persist disjoint shard sets into per-writer subdirectories with
+    per-shard checksums, and a coordinator publishes the step's global
+    manifest only after ``quorum`` partial manifests verified AND every
+    shard is covered (two-phase quorum publish, docs/DESIGN.md §7).  On
+    pipeline meshes the natural choice is one writer per stage/pod
+    (``parallel/pipeline.stage_writer_map``); otherwise shards are
+    byte-balanced across the group.  ``quorum=None`` means all writers;
+    ``quorum < writers`` only lets a save survive dead writers that owned
+    zero shards.  ``verify`` re-checks every shard's byte length + crc32 on
+    restore, failing loudly (naming the file) on corruption.
     """
     every: int = 50                  # save cadence in steps
     keep: int = 3                    # published checkpoints retained by GC
@@ -266,6 +278,9 @@ class CheckpointConfig:
     staging: str = "host"            # "host" (staged async) | "sync"
     max_inflight: int = 2            # double-buffered staging arena slots
     durable: bool = False            # fsync data + dirs around the publish
+    writers: int = 1                 # logical writer-group size
+    quorum: Optional[int] = None     # partial manifests required (None: all)
+    verify: bool = True              # checksum-verify shards on restore
 
     def __post_init__(self):
         assert self.every >= 1, f"ckpt every={self.every} must be >= 1"
@@ -273,6 +288,11 @@ class CheckpointConfig:
         assert self.max_inflight >= 1, self.max_inflight
         assert self.staging in ("host", "sync"), (
             f"staging={self.staging!r} not in ('host', 'sync')")
+        assert self.writers >= 1, f"writers={self.writers} must be >= 1"
+        if self.quorum is not None:
+            assert 1 <= self.quorum <= self.writers, (
+                f"quorum={self.quorum} must be in [1, writers="
+                f"{self.writers}]")
 
 
 # ---------------------------------------------------------------------------

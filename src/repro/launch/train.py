@@ -47,9 +47,16 @@ def _train_pipeline(cfg, pcfg, rc, mesh, args):
     sopt = runner.init_opt(sparams)
     del params
 
+    # one checkpoint writer per pipeline stage/pod — each pod persists the
+    # stage it already holds — unless --ckpt-writers overrides
+    writers = args.ckpt_writers or pcfg.pipeline_stages
     ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
-                            async_=not args.ckpt_sync)
-    ckpt = make_manager(args.ckpt_dir, ccfg) if args.ckpt_dir else None
+                            async_=not args.ckpt_sync, writers=writers,
+                            quorum=args.ckpt_quorum or None,
+                            verify=not args.ckpt_no_verify)
+    ckpt = (make_manager(args.ckpt_dir, ccfg,
+                         writer_map=PP.stage_writer_map(writers))
+            if args.ckpt_dir else None)
     start = 0
     if ckpt is not None and ckpt.latest_step() is not None:
         # per-stage state is an ordinary pytree (lists of stage trees), so
@@ -99,6 +106,14 @@ def main():
     ap.add_argument("--ckpt-sync", action="store_true",
                     help="blocking saves (default: async double-buffered "
                          "writer that hides the persistence stall)")
+    ap.add_argument("--ckpt-writers", type=int, default=0,
+                    help="logical checkpoint writers (0 = auto: one per "
+                         "pipeline stage, else 1)")
+    ap.add_argument("--ckpt-quorum", type=int, default=0,
+                    help="partial manifests required before a step "
+                         "publishes (0 = all writers)")
+    ap.add_argument("--ckpt-no-verify", action="store_true",
+                    help="skip per-shard checksum verification on restore")
     args = ap.parse_args()
     _maybe_respawn(max(args.mesh_devices,
                        args.pods * args.data * args.mx * args.my
@@ -157,7 +172,10 @@ def main():
     it = Prefetcher(iter(ds))
 
     ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
-                            async_=not args.ckpt_sync)
+                            async_=not args.ckpt_sync,
+                            writers=args.ckpt_writers or 1,
+                            quorum=args.ckpt_quorum or None,
+                            verify=not args.ckpt_no_verify)
     ckpt = make_manager(args.ckpt_dir, ccfg) if args.ckpt_dir else None
     start = 0
     if ckpt is not None and ckpt.latest_step() is not None:

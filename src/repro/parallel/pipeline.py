@@ -242,6 +242,29 @@ def merge_stage_grads(stage_trees: Sequence[Any], cfg: ModelConfig):
     return out
 
 
+def stage_writer_map(n_writers: int):
+    """Checkpoint shard→writer mapping for pipeline state (ISSUE 6).
+
+    Pipeline train state is ``{"params": [per-stage trees], "opt_state":
+    [...]}``, so a checkpoint leaf path's second segment is the stage index
+    — the pod that already holds those shards in HBM.  Mapping ``stage %
+    n_writers`` makes each pod persist its own stage (the natural failure
+    domain: a pod death costs one writer, not the whole save), with the
+    modulo covering ``n_writers < stages``.  Returns ``None`` for non-stage
+    leaves (e.g. scalars at the tree root), which fall back to the
+    manager's byte-balanced partition (checkpoint/manager.partition_shards).
+    """
+    def _map(name: str):
+        parts = name.split("/")
+        if len(parts) >= 2:
+            try:
+                return int(parts[1]) % n_writers
+            except ValueError:
+                return None
+        return None
+    return _map
+
+
 # ---------------------------------------------------------------------------
 # Runner
 # ---------------------------------------------------------------------------

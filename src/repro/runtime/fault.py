@@ -8,13 +8,20 @@ implemented (all exercised by tests/test_fault.py and examples/elastic_restart.p
    (state, step), and the data pipeline is seekable (data/synthetic.batch_at),
    so a restart resumes bit-exact from the last checkpoint.  Saves are
    *asynchronous* by default (AsyncCheckpointManager: host-arena snapshot on
-   the step boundary, serialization + atomic publish on a writer thread), so
-   the supervisor must fence them on failure: ``run_supervised(ckpt=...)``
-   calls ``ckpt.abort()`` when an incarnation dies, which discards queued
-   snapshots from the dead incarnation, interrupts any mid-write publish, and
-   sweeps ``step_K.tmp`` debris — a restart therefore only ever restores a
-   fully-published step (``all_steps`` never lists ``.tmp``).  Restore keeps
-   the elastic re-sharding path (point 3) untouched.
+   the step boundary, persistence on background threads) and *multi-writer*
+   (a writer group of N logical writers — one per pipeline stage/pod —
+   persists disjoint shard sets with per-shard checksums; a coordinator
+   publishes the step's global manifest only after a quorum of partial
+   manifests verified with full shard coverage, docs/DESIGN.md §7).  The
+   supervisor must therefore fence the WHOLE writer group on failure:
+   ``run_supervised(ckpt=...)`` calls ``ckpt.abort()`` when an incarnation
+   dies, which discards queued snapshots from the dead incarnation,
+   interrupts every in-flight writer between shards, and sweeps torn-step
+   debris (``step_K.tmp``, sub-quorum step dirs) — a restart only ever
+   restores a quorum-published step, and restore checksum-verifies every
+   shard before ``device_put`` (``FailureInjector.check_writer`` injects a
+   single-writer death inside the torn window to prove this).  Restore
+   keeps the elastic re-sharding path (point 3) untouched.
 
 2. **Failure detection** — a heartbeat watchdog wraps the step function; a step
    exceeding ``hang_timeout`` or raising marks the incarnation dead, and the
@@ -43,10 +50,22 @@ from typing import Callable, Dict, List, Optional
 
 
 class FailureInjector:
-    """Deterministically fail at given steps (simulated node failures)."""
+    """Deterministically fail at given steps (simulated node failures).
 
-    def __init__(self, fail_at: Dict[int, str]):
-        self.fail_at = dict(fail_at)
+    ``fail_at`` maps step -> failure kind and kills the whole incarnation at
+    the top of that step (:meth:`check`, called by the train loop).
+
+    ``writer_fail_at`` maps step -> writer index and kills ONE logical
+    checkpoint writer (:meth:`check_writer`) — the train loop wires this as
+    the manager's ``writer_fault`` hook, which fires between a writer's
+    shard writes and its partial-manifest publish: the torn-step window the
+    quorum publish protocol exists for (checkpoint/manager.py).
+    """
+
+    def __init__(self, fail_at: Optional[Dict[int, str]] = None,
+                 writer_fail_at: Optional[Dict[int, int]] = None):
+        self.fail_at = dict(fail_at or {})
+        self.writer_fail_at = dict(writer_fail_at or {})
         self.log: List[str] = []
 
     def check(self, step: int):
@@ -54,6 +73,17 @@ class FailureInjector:
             kind = self.fail_at.pop(step)
             self.log.append(f"step {step}: injected {kind}")
             raise RuntimeError(f"injected failure: {kind} at step {step}")
+
+    def check_writer(self, step: int, writer: int):
+        """Writer-fault hook: raises inside writer ``writer`` of the save of
+        ``step``, after its shards are on disk but before its partial
+        manifest publishes.  One-shot per step (like :meth:`check`)."""
+        if self.writer_fail_at.get(step) == writer:
+            del self.writer_fail_at[step]
+            self.log.append(f"step {step}: injected writer {writer} death")
+            raise RuntimeError(
+                f"injected failure: checkpoint writer {writer} died at step "
+                f"{step} (post shard-write, pre manifest-publish)")
 
 
 @dataclass
@@ -91,23 +121,41 @@ class Incarnation:
     start_step: int
 
 
+NON_RETRYABLE = (KeyboardInterrupt, AssertionError)
+
+
 def run_supervised(make_state: Callable[[Optional[int]], tuple],
                    run_steps: Callable,
                    *, max_restarts: int = 5,
                    on_restart: Optional[Callable[[Incarnation], None]] = None,
-                   ckpt=None):
+                   ckpt=None,
+                   backoff_base: float = 0.5, backoff_cap: float = 30.0,
+                   sleep_fn: Callable[[float], None] = time.sleep):
     """Supervisor loop: (re)build state from the latest checkpoint and run.
 
     ``make_state(step|None) -> (state, start_step)`` restores or cold-starts.
     ``run_steps(state, start_step, incarnation) -> final_state`` raises on
     failure (real or injected).  Returns (final_state, incarnations_used).
 
+    **What is supervised**: any ``Exception`` — not just ``RuntimeError``
+    (injected/jax runtime faults) but also ``OSError`` from a dead
+    filesystem under the checkpoint directory; at 1000-node scale those are
+    routine incarnation deaths, not operator bugs.  ``KeyboardInterrupt``
+    and ``AssertionError`` (:data:`NON_RETRYABLE`) propagate immediately:
+    the first is the operator, the second is an invariant violation that a
+    restart would just re-trip.
+
+    **Backoff**: restarts wait ``min(backoff_cap, backoff_base * 2**k)``
+    (k = prior failures) instead of hot-looping — a crash loop against a
+    recovering filesystem or a flapping host must not burn the cluster.
+    ``sleep_fn`` is injectable for tests.
+
     ``ckpt`` (optional, the run's CheckpointManager) lets the supervisor
     fence asynchronous persistence: when an incarnation dies, ``ckpt.abort()``
-    runs BEFORE ``make_state`` rebuilds — in-flight saves issued by the dead
-    incarnation are discarded (queued snapshots dropped, a mid-write publish
-    interrupted, ``.tmp`` debris swept), so the restart restores only a
-    fully-published step and never a half-written one.
+    runs BEFORE ``make_state`` rebuilds — the WHOLE writer group is fenced
+    (queued snapshots dropped, every in-flight writer interrupted between
+    shards, torn-step debris swept), so the restart restores only a
+    quorum-published step and never a half-written one.
     """
     restarts = 0
     while True:
@@ -117,13 +165,16 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
             on_restart(inc)
         try:
             return run_steps(state, start, inc), restarts + 1
-        except RuntimeError as e:
+        except BaseException as e:
+            if isinstance(e, NON_RETRYABLE) or not isinstance(e, Exception):
+                raise                 # operator interrupt / invariant bug
             restarts += 1
             if ckpt is not None:
-                ckpt.abort()          # dead incarnation: fence async saves
+                ckpt.abort()          # dead incarnation: fence writer group
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded {max_restarts} restarts; last error: {e}")
+            sleep_fn(min(backoff_cap, backoff_base * 2 ** (restarts - 1)))
 
 
 def rebalance_data_shards(num_hosts: int, slow_hosts: List[int],

@@ -45,6 +45,13 @@ def train(train_step: Callable, state: Dict, data_iter, *,
           log_fn: Callable = print) -> Dict:
     params, opt_state = state["params"], state["opt_state"]
     history = state.setdefault("history", [])
+    if (ckpt is not None and injector is not None
+            and hasattr(injector, "check_writer")
+            and getattr(ckpt, "writer_fault", None) is None):
+        # wire the writer-fault dimension: the injector can now kill one
+        # logical writer inside the torn window (post shard-write, pre
+        # partial-manifest publish) — checkpoint/manager.py quorum protocol
+        ckpt.writer_fault = injector.check_writer
     for step in range(start_step, num_steps):
         batch = next(data_iter)
         if injector is not None:

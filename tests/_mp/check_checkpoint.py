@@ -16,6 +16,23 @@ device_put directly — the fold-of-train_step property train/loop.py
 documents.  The resumed sharded state is then saved *asynchronously* from
 the mesh and restored again, proving sharded→global snapshots are lossless.
 
+Part C — writer-kill quorum (ISSUE 6 acceptance, N=2 and N=4): a child
+(``--child-writer-kill DIR N``) publishes step 4 with an N-writer group,
+then issues ``save_async(8)`` with writer N-1 hung INSIDE the torn window
+(shards written, partial manifest not yet published) and hard-kills itself.
+The parent inspects the torn debris (N-1 partial manifests present, the
+dead writer's shards present but unmanifested, no global manifest), then
+verifies the torn step is never restorable, the debris is swept, and
+restore(4) resumes bit-exact against an uninterrupted run.
+
+``--pipeline-quorum`` (the CI ckpt-quorum job) runs the full crash-resume
+story on a 2-pod 1F1B pipeline grid: one checkpoint writer per stage
+(stage_writer_map), an injected single-writer death at a save boundary
+killing the incarnation at the quorum gate, run_supervised fencing +
+restart, loss history bit-exact against an uninterrupted baseline, an async
+multi-writer save/restore roundtrip of the pipeline state, and a corrupted
+shard failing restore with the file named.
+
 Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
 """
 import os
@@ -187,16 +204,208 @@ def check_elastic_grids(tmp_root):
               "sharded async snapshot lossless")
 
 
+# ---------------------------------------------------------------------------
+# Part C: kill writer k of N inside the torn window (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def child_writer_kill(ckpt_dir, n_writers):
+    ts = _ts1()
+    params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    mgr = AsyncCheckpointManager(ckpt_dir, writers=n_writers)
+    params, opt, _ = _fold(ts, params, opt, 0, 4)
+    mgr.save_async(4, {"params": params, "opt_state": opt})
+    mgr.wait_until_finished()                 # step 4 is PUBLISHED
+    params, opt, _ = _fold(ts, params, opt, 4, 8)
+
+    def hang_last_writer(step, writer):
+        # park writer N-1 in the torn window: its shards are on disk, its
+        # partial manifest is not — the exact state a host crash leaves
+        if writer == n_writers - 1:
+            time.sleep(60)
+
+    mgr.writer_fault = hang_last_writer
+    mgr.save_async(8, {"params": params, "opt_state": opt})
+    time.sleep(1.0)            # healthy writers publish partials; victim hangs
+    os._exit(42)               # host dies with the group sub-quorum
+
+
+def check_writer_kill(ckpt_dir, n_writers):
+    env = dict(os.environ)
+    r = subprocess.run([sys.executable, os.path.abspath(__file__),
+                        "--child-writer-kill", ckpt_dir, str(n_writers)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 42, (r.returncode, r.stdout, r.stderr[-2000:])
+    # torn debris: quorum was never met, so the step must still be a .tmp
+    # dir with N-1 partial manifests, the victim's shards unmanifested, and
+    # no global manifest
+    tmp = os.path.join(ckpt_dir, "step_00000008.tmp")
+    assert os.path.isdir(tmp), os.listdir(ckpt_dir)
+    assert not os.path.exists(os.path.join(tmp, "MANIFEST.json"))
+    for w in range(n_writers - 1):
+        assert os.path.exists(os.path.join(tmp, f"writer_{w:02d}",
+                                           "manifest.json")), (n_writers, w)
+    victim = os.path.join(tmp, f"writer_{n_writers - 1:02d}")
+    assert not os.path.exists(os.path.join(victim, "manifest.json"))
+    assert [f for f in os.listdir(victim) if f.endswith(".npy")], \
+        "victim writer should have written shards before hanging"
+    assert "step_00000008" not in os.listdir(ckpt_dir)
+
+    # next incarnation: torn step never restorable, debris swept
+    mgr = CheckpointManager(ckpt_dir, writers=n_writers)
+    assert mgr.all_steps() == [4], mgr.all_steps()
+    assert not [n for n in os.listdir(ckpt_dir) if n.endswith(".tmp")]
+
+    ts = _ts1()
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    o0 = adamw.init(p0)
+    pa, oa, la = _fold(ts, p0, o0, 0, 8)      # uninterrupted reference
+    restored, step = mgr.restore({"params": p0, "opt_state": o0})
+    assert step == 4
+    pb, ob, lb = _fold(ts, restored["params"], restored["opt_state"], 4, 8)
+    assert la[4:] == lb, (la[4:], lb)
+    for a, b in zip(jax.tree_util.tree_leaves(pa),
+                    jax.tree_util.tree_leaves(pb)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    print(f"writer-kill {n_writers - 1} of {n_writers}: torn step never "
+          "restorable, debris swept, restore(4) resumed bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# --pipeline-quorum: crash-resume on a 2-pod 1F1B grid, one writer per stage
+# ---------------------------------------------------------------------------
+
+def check_pipeline_quorum(tmp_root):
+    from repro.launch import mesh as MM
+    from repro.parallel import pipeline as PP
+    from repro.runtime.fault import FailureInjector, run_supervised
+    from repro.train import loop as train_loop
+
+    pcfg = ParallelConfig(strategy="hecaton", data=1, model=2, mx=1, my=2,
+                          pods=2, pod_axis_role="pipeline", microbatches=2,
+                          grad_reduce_dtype="fp32", remat="none",
+                          zero1=False)
+    mesh = MM.make_small_mesh("hecaton", 1, 1, 2, pods=2)
+    cfg = CFG.scaled(num_layers=2)
+    runner, pstep = PP.build_pipeline_train_step(cfg, pcfg, RC, mesh,
+                                                 compute_dtype=jnp.float32)
+    p0 = lm.init_params(cfg, jax.random.PRNGKey(0))
+    TOTAL = 8
+
+    def fresh_state():
+        sparams = runner.place_params(p0)
+        return {"params": sparams, "opt_state": runner.init_opt(sparams)}
+
+    def batches():
+        return iter([{k: jnp.asarray(v) for k, v in DS.batch_at(s).items()}
+                     for s in range(TOTAL)])
+
+    # ---- uninterrupted baseline ----------------------------------------
+    base = train_loop.train(pstep, fresh_state(), batches(),
+                            num_steps=TOTAL, log_every=1,
+                            log_fn=lambda *a: None)
+    base_hist = list(base["history"])
+
+    # ---- supervised run with an injected writer death at step 4's save --
+    # one writer per stage: stage-pinned shards, sync manager so the
+    # QuorumError lands at the boundary (the incarnation-killing path)
+    ckpt_dir = os.path.join(tmp_root, "pipe_quorum")
+    mgr = CheckpointManager(ckpt_dir, writers=2,
+                            writer_map=PP.stage_writer_map(2))
+    inj = FailureInjector(writer_fail_at={4: 1})
+    seen_after_crash = []
+
+    def make_state(_):
+        state, start = fresh_state(), 0
+        if mgr.latest_step() is not None:
+            seen_after_crash.append(list(mgr.all_steps()))
+            state, start = mgr.restore(state)
+        return state, start
+
+    def run_steps(state, start, inc):
+        it = ({k: jnp.asarray(v) for k, v in DS.batch_at(s).items()}
+              for s in range(start, TOTAL))
+        return train_loop.train(pstep, state, it, start_step=start,
+                                num_steps=TOTAL, ckpt=mgr, ckpt_every=2,
+                                log_every=1, injector=inj,
+                                log_fn=lambda *a: None)
+
+    state, incarnations = run_supervised(make_state, run_steps, ckpt=mgr,
+                                         sleep_fn=lambda _: None)
+    assert incarnations == 2, incarnations
+    assert inj.log == ["step 4: injected writer 1 death"], inj.log
+    # the torn step 4 was never visible to the restart
+    assert seen_after_crash == [[2]], seen_after_crash
+    assert mgr.all_steps() == [4, 6, 8], mgr.all_steps()
+    # stage pinning held: every stage-s shard sits with writer s
+    import json
+    with open(os.path.join(ckpt_dir, "step_00000008",
+                           "MANIFEST.json")) as f:
+        manifest = json.load(f)["manifest"]
+    for name, info in manifest.items():
+        assert info["writer"] == int(name.split("/")[1]), (name, info)
+    # crash-resume is bit-exact against the uninterrupted baseline
+    hist = state["history"]
+    tail = {s: l for s, l in hist}
+    for s, want in base_hist:
+        if s >= 4:                     # steps re-run by incarnation 2
+            assert tail[s] == want, (s, tail[s], want)
+    print("pipeline-quorum: stage-pinned 2-writer crash-resume bit-exact, "
+          f"torn step fenced (saw {seen_after_crash[0]} after crash)")
+
+    # ---- async multi-writer roundtrip of the pipeline state -------------
+    amgr = AsyncCheckpointManager(os.path.join(tmp_root, "pipe_async"),
+                                  writers=2,
+                                  writer_map=PP.stage_writer_map(2))
+    amgr.save_async(TOTAL, {"params": state["params"],
+                            "opt_state": state["opt_state"]})
+    amgr.wait_until_finished()
+    rt, _ = amgr.restore({"params": state["params"],
+                          "opt_state": state["opt_state"]})
+    for a, b in zip(jax.tree_util.tree_leaves(rt),
+                    jax.tree_util.tree_leaves({"params": state["params"],
+                                               "opt_state":
+                                                   state["opt_state"]})):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(jax.device_get(b)))
+    amgr.close()
+    print("pipeline-quorum: async 2-writer pipeline snapshot lossless")
+
+    # ---- a corrupted shard fails restore naming the file ----------------
+    from repro.checkpoint.manager import CheckpointCorruptionError
+    name, info = sorted(manifest.items())[0]
+    victim = os.path.join(ckpt_dir, "step_00000008", info["file"])
+    blob = bytearray(open(victim, "rb").read())
+    blob[-1] ^= 0x40
+    with open(victim, "wb") as f:
+        f.write(blob)
+    try:
+        mgr.restore(fresh_state())
+    except CheckpointCorruptionError as e:
+        assert info["file"] in str(e), (info["file"], str(e))
+        print(f"pipeline-quorum: corrupted {info['file']} refused by name")
+    else:
+        raise AssertionError("corrupted shard restored silently")
+
+
 def main():
     import tempfile
     root = tempfile.mkdtemp(prefix="ckpt_check_")
     check_kill_mid_write(os.path.join(root, "kill"))
     check_elastic_grids(root)
+    for n in (2, 4):
+        check_writer_kill(os.path.join(root, f"wkill{n}"), n)
     print("ALL CHECKPOINT CHECKS PASSED")
 
 
 if __name__ == "__main__":
     if len(sys.argv) > 2 and sys.argv[1] == "--child-kill":
         child_kill(sys.argv[2])
+    elif len(sys.argv) > 3 and sys.argv[1] == "--child-writer-kill":
+        child_writer_kill(sys.argv[2], int(sys.argv[3]))
+    elif len(sys.argv) > 1 and sys.argv[1] == "--pipeline-quorum":
+        import tempfile
+        check_pipeline_quorum(tempfile.mkdtemp(prefix="ckpt_pq_"))
+        print("ALL PIPELINE-QUORUM CHECKS PASSED")
     else:
         main()

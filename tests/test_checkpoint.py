@@ -1,9 +1,12 @@
-"""Checkpoint subsystem tests (ISSUE 4): async/sync equivalence, crash
-atomicity, GC under in-flight saves, error propagation, abort fencing, and
-the manifest encoding (keys with ``__`` / ``/``, bf16 leaves).  The
-kill-mid-write and elastic-grid acceptance checks run in a subprocess
-(tests/_mp/check_checkpoint.py)."""
+"""Checkpoint subsystem tests (ISSUE 4 + ISSUE 6): async/sync equivalence,
+crash atomicity, GC under in-flight saves, error propagation, abort fencing,
+the manifest encoding (keys with ``__`` / ``/``, bf16 leaves), and the
+multi-writer quorum protocol — per-writer partitioning, torn-step sweeping,
+writer-fault injection, and end-to-end corruption detection on restore.  The
+kill-mid-write, writer-kill and elastic-grid acceptance checks run in a
+subprocess (tests/_mp/check_checkpoint.py)."""
 
+import json
 import os
 import subprocess
 import sys
@@ -16,8 +19,10 @@ import numpy as np
 import pytest
 
 import repro.checkpoint.manager as M
-from repro.checkpoint.manager import (AsyncCheckpointManager,
-                                      CheckpointManager, make_manager)
+from repro.checkpoint.manager import (MANIFEST, AsyncCheckpointManager,
+                                      CheckpointCorruptionError,
+                                      CheckpointManager, QuorumError,
+                                      make_manager, partition_shards)
 from repro.config import CheckpointConfig
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -34,6 +39,22 @@ def _leaves_equal(a, b):
     for x, y in zip(la, lb):
         assert np.asarray(x).dtype == np.asarray(y).dtype
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _files_under(d):
+    """{relative path: absolute path} for every file under ``d`` (steps are
+    directories of per-writer subdirectories now)."""
+    out = {}
+    for root, _, files in os.walk(d):
+        for fn in files:
+            p = os.path.join(root, fn)
+            out[os.path.relpath(p, d)] = p
+    return out
+
+
+def _manifest_of(mgr, step):
+    with open(os.path.join(mgr.dir, f"step_{step:08d}", MANIFEST)) as f:
+        return json.load(f)
 
 
 # ---------------------------------------------------------------------------
@@ -67,11 +88,11 @@ def test_async_save_equals_sync_save_bit_for_bit(tmp_path):
     asyn.save_async(7, STATE, extra_meta={"tag": "x"})
     asyn.wait_until_finished()
     d1, d2 = (os.path.join(m.dir, "step_00000007") for m in (sync, asyn))
-    assert sorted(os.listdir(d1)) == sorted(os.listdir(d2))
-    for fn in os.listdir(d1):
-        with open(os.path.join(d1, fn), "rb") as f1, \
-                open(os.path.join(d2, fn), "rb") as f2:
-            assert f1.read() == f2.read(), fn
+    fa, fb = _files_under(d1), _files_under(d2)
+    assert sorted(fa) == sorted(fb)
+    for rel in fa:
+        with open(fa[rel], "rb") as f1, open(fb[rel], "rb") as f2:
+            assert f1.read() == f2.read(), rel
     _leaves_equal(asyn.restore(STATE)[0], STATE)
     asyn.close()
 
@@ -257,15 +278,16 @@ def test_roundtrip_tricky_keys_and_dtypes(tmp_path):
     restored, step = mgr.restore(tree)
     assert step == 1
     _leaves_equal(restored, tree)
-    # manifest is complete: one entry per leaf, distinct files
-    import json
-    with open(os.path.join(str(tmp_path), "step_00000001",
-                           "meta.json")) as f:
-        meta = json.load(f)
+    # global manifest is complete: one entry per leaf, distinct files, and
+    # every entry carries the integrity fields the restore verifier needs
+    meta = _manifest_of(mgr, 1)
+    assert meta["complete"] is True
     n_leaves = len(jax.tree_util.tree_leaves(tree))
     assert len(meta["manifest"]) == n_leaves
     files = [v["file"] for v in meta["manifest"].values()]
     assert len(set(files)) == n_leaves
+    for info in meta["manifest"].values():
+        assert info["bytes"] > 0 and 0 <= info["crc32"] <= 0xFFFFFFFF
 
 
 def test_checkpoint_config_validation_and_make_manager(tmp_path):
@@ -279,6 +301,12 @@ def test_checkpoint_config_validation_and_make_manager(tmp_path):
         CheckpointConfig(staging="device")
     with pytest.raises(AssertionError):
         CheckpointConfig(max_inflight=0)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(writers=0)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(writers=2, quorum=3)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(writers=2, quorum=0)
 
     m1 = make_manager(str(tmp_path / "a"), CheckpointConfig(async_=False,
                                                             keep=7))
@@ -287,6 +315,10 @@ def test_checkpoint_config_validation_and_make_manager(tmp_path):
     assert isinstance(m2, AsyncCheckpointManager) and m2.keep == 4
     m3 = make_manager(str(tmp_path / "c"))
     assert type(m3) is CheckpointManager
+    m4 = make_manager(str(tmp_path / "d"),
+                      CheckpointConfig(async_=False, writers=4, quorum=3,
+                                       verify=False))
+    assert (m4.writers, m4.quorum, m4.verify) == (4, 3, False)
     m2.close()
 
 
@@ -320,3 +352,205 @@ def test_train_loop_uses_async_path_and_drains(tmp_path):
     assert calls == [2, 4, 6]
     assert mgr.all_steps() == [2, 4, 6]   # drained before returning
     mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 6: writer-group partitioning, quorum publish, integrity verification
+# ---------------------------------------------------------------------------
+
+def test_partition_shards_balanced_deterministic_and_pinned():
+    sizes = {"a": 100, "b": 90, "c": 10, "d": 10, "e": 5}
+    p1 = partition_shards(sizes, 2)
+    p2 = partition_shards(dict(reversed(list(sizes.items()))), 2)
+    assert p1 == p2                       # pure function of contents
+    assert set(p1) == set(sizes) and set(p1.values()) <= {0, 1}
+    loads = [sum(sizes[n] for n, w in p1.items() if w == i) for i in (0, 1)]
+    assert max(loads) <= 2 * min(loads)   # greedy byte-balance
+    # writer_map pins; out-of-range / None falls back to balancing
+    pinned = partition_shards(sizes, 3,
+                              writer_map=lambda n: 2 if n == "a" else None)
+    assert pinned["a"] == 2
+    assert set(pinned.values()) <= {0, 1, 2}
+
+
+@pytest.mark.parametrize("writers,quorum", [(1, None), (3, None), (4, 2)])
+def test_multiwriter_roundtrip_and_layout(tmp_path, writers, quorum):
+    """N writers persist disjoint shard sets into per-writer subdirs with
+    partial manifests; restore reassembles bit-exact regardless of N."""
+    mgr = CheckpointManager(str(tmp_path), writers=writers, quorum=quorum)
+    mgr.save(3, STATE, extra_meta={"tag": "x"})
+    meta = _manifest_of(mgr, 3)
+    assert meta["writers"] == writers
+    assert meta["committed"] == list(range(writers))
+    owners = {info["writer"] for info in meta["manifest"].values()}
+    n_leaves = len(jax.tree_util.tree_leaves(STATE))
+    assert owners == set(range(min(writers, n_leaves)))
+    for w in range(writers):              # every writer published a partial
+        assert os.path.exists(os.path.join(
+            mgr.dir, "step_00000003", f"writer_{w:02d}", "manifest.json"))
+    restored, step = mgr.restore(STATE)
+    assert step == 3
+    _leaves_equal(restored, STATE)
+
+
+def test_multiwriter_more_writers_than_leaves(tmp_path):
+    """Zero-shard writers still commit (empty partial manifests): coverage
+    comes from the populated ones."""
+    mgr = CheckpointManager(str(tmp_path), writers=4)
+    mgr.save(1, {"w": jnp.arange(4.0)})
+    meta = _manifest_of(mgr, 1)
+    assert meta["committed"] == [0, 1, 2, 3]
+    _leaves_equal(mgr.restore({"w": jnp.zeros(4)})[0],
+                  {"w": jnp.arange(4.0)})
+
+
+def test_writer_death_in_torn_window_never_publishes(tmp_path):
+    """A writer killed after its shard writes but before its partial
+    manifest publishes (the writer_fault window) fails the quorum gate:
+    the save raises, the torn step is swept, all_steps never lists it."""
+    def kill_w1(step, writer):
+        if writer == 1:
+            raise RuntimeError("injected writer death")
+
+    mgr = CheckpointManager(str(tmp_path), writers=2, writer_fault=kill_w1)
+    with pytest.raises(QuorumError, match="injected writer death"):
+        mgr.save(5, STATE)
+    assert mgr.all_steps() == []
+    assert os.listdir(str(tmp_path)) == []    # torn debris swept
+    mgr.writer_fault = None                   # writer "replaced"
+    mgr.save(6, STATE)
+    assert mgr.all_steps() == [6]
+    _leaves_equal(mgr.restore(STATE)[0], STATE)
+
+
+def test_quorum_tolerates_dead_zero_shard_writer_only(tmp_path):
+    """quorum < writers publishes through a dead writer IF coverage is
+    complete (the dead writer owned no shards); a dead shard-owning writer
+    still fails — there is no replication to cover its shards."""
+    state = {"w": jnp.arange(4.0)}            # 1 leaf -> writers 1..3 empty
+
+    def kill(step, writer):
+        if writer == 3:
+            raise RuntimeError("empty writer died")
+
+    mgr = CheckpointManager(str(tmp_path / "a"), writers=4, quorum=3,
+                            writer_fault=kill)
+    mgr.save(1, state)                        # publishes: coverage intact
+    meta = _manifest_of(mgr, 1)
+    assert meta["committed"] == [0, 1, 2] and meta["failed_writers"] == [3]
+    _leaves_equal(mgr.restore(state)[0], state)
+
+    def kill0(step, writer):
+        if writer == 0:
+            raise RuntimeError("shard owner died")
+
+    mgr2 = CheckpointManager(str(tmp_path / "b"), writers=4, quorum=3,
+                             writer_fault=kill0)
+    with pytest.raises(QuorumError, match="shards uncovered"):
+        mgr2.save(1, state)
+    assert mgr2.all_steps() == []
+
+
+def test_async_writer_death_sticky_then_fenced(tmp_path):
+    """On the async manager a torn save surfaces as the usual sticky error
+    and abort() fences it like any other writer failure."""
+    boom = {"on": True}
+
+    def kill(step, writer):
+        if boom["on"] and writer == 1:
+            raise RuntimeError("injected writer death")
+
+    mgr = AsyncCheckpointManager(str(tmp_path), writers=2, writer_fault=kill)
+    mgr.save_async(1, STATE)
+    with pytest.raises(RuntimeError, match="injected writer death"):
+        mgr.wait_until_finished()
+    boom["on"] = False
+    mgr.abort()
+    mgr.save_async(2, STATE)
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [2]
+    mgr.close()
+
+
+def test_bitflip_corruption_fails_restore_naming_file(tmp_path):
+    """End-to-end integrity: a single flipped bit in one shard file makes
+    restore raise CheckpointCorruptionError naming that file; verify=False
+    (explicit opt-out) loads the garbage silently."""
+    mgr = CheckpointManager(str(tmp_path), writers=2)
+    mgr.save(1, STATE)
+    meta = _manifest_of(mgr, 1)
+    # pick the shard holding params/w and flip one payload bit
+    info = meta["manifest"]["params/w"]
+    victim = os.path.join(mgr.dir, "step_00000001", info["file"])
+    blob = bytearray(open(victim, "rb").read())
+    blob[-1] ^= 0x01
+    with open(victim, "wb") as f:
+        f.write(blob)
+    with pytest.raises(CheckpointCorruptionError) as ei:
+        mgr.restore(STATE)
+    assert info["file"] in str(ei.value) and "crc32" in str(ei.value)
+    lax = CheckpointManager(str(tmp_path), writers=2, verify=False)
+    lax.restore(STATE)                        # opt-out: no integrity check
+
+
+def test_truncated_shard_fails_restore_naming_file(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, STATE)
+    info = _manifest_of(mgr, 1)["manifest"]["params/w"]
+    victim = os.path.join(mgr.dir, "step_00000001", info["file"])
+    blob = open(victim, "rb").read()
+    with open(victim, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    with pytest.raises(CheckpointCorruptionError, match="truncated") as ei:
+        mgr.restore(STATE)
+    assert info["file"] in str(ei.value)
+
+
+def test_torn_or_truncated_manifests_exclude_step(tmp_path):
+    """Tolerant listing: a step with a truncated global manifest, a step
+    caught before its global publish (partial manifests only), and foreign
+    files in the root are all skipped by all_steps — and swept (where torn)
+    by the next incarnation — without crashing."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, STATE)
+    mgr.save(2, STATE)
+
+    # (a) truncate step 2's global manifest mid-"write"
+    g2 = os.path.join(mgr.dir, "step_00000002", MANIFEST)
+    blob = open(g2, "rb").read()
+    with open(g2, "wb") as f:
+        f.write(blob[:len(blob) // 3])
+    # (b) a torn multi-writer publish: shards + truncated partial manifest,
+    # global manifest never written
+    torn = tmp_path / "step_00000007" / "writer_00"
+    torn.mkdir(parents=True)
+    (torn / "leaf_00000.npy").write_bytes(b"\x93NUMPY...")
+    (torn / "manifest.json").write_text('{"writer": 0, "shards": {"x"')
+    # (c) foreign junk in the checkpoint root
+    (tmp_path / "README.txt").write_text("not a checkpoint")
+    (tmp_path / "step_junk").mkdir()
+    (tmp_path / "step_00000042").write_text("a FILE squatting on the name")
+
+    assert mgr.all_steps() == [1]
+    assert mgr.latest_step() == 1
+    restored, step = mgr.restore(STATE)       # newest COMPLETE step
+    assert step == 1
+    _leaves_equal(restored, STATE)
+
+    mgr2 = CheckpointManager(str(tmp_path))   # next incarnation sweeps torn
+    assert mgr2.all_steps() == [1]
+    assert not (tmp_path / "step_00000007").exists()
+    assert not (tmp_path / "step_00000002").exists()
+    assert (tmp_path / "README.txt").exists()     # foreign files untouched
+    assert (tmp_path / "step_junk").exists()
+
+
+def test_gc_survives_foreign_files_and_leaves_no_half_steps(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    (tmp_path / "notes.md").write_text("x")
+    for s in (1, 2, 3):
+        mgr.save(s, STATE)
+    assert mgr.all_steps() == [3]
+    leftover = [d for d in os.listdir(str(tmp_path))
+                if d.startswith("step_") and not d.endswith(".tmp")]
+    assert leftover == ["step_00000003"]      # retired steps fully gone

@@ -1,14 +1,17 @@
 """Unit tests for the fault-tolerance runtime (runtime/fault.py) — the test
-file its docstring has always advertised: FailureInjector determinism,
-StepTimer straggler detection (EWMA freeze while slow, streak reset),
-rebalance_data_shards edge cases, and run_supervised restart accounting
-(including the async-checkpoint abort fence).  End-to-end restart behaviour
-lives in tests/test_system.py and examples/elastic_restart.py."""
+file its docstring has always advertised: FailureInjector determinism
+(whole-incarnation and per-writer), StepTimer straggler detection (EWMA
+freeze while slow, streak reset), rebalance_data_shards edge cases, and
+run_supervised restart accounting (exception supervision classes, capped
+exponential backoff, the async-checkpoint abort fence).  End-to-end restart
+behaviour lives in tests/test_system.py and examples/elastic_restart.py."""
 
 import pytest
 
 from repro.runtime.fault import (FailureInjector, Incarnation, StepTimer,
                                  rebalance_data_shards, run_supervised)
+
+NO_SLEEP = {"sleep_fn": lambda _: None}    # keep unit tests instant
 
 
 # ---------------------------------------------------------------------------
@@ -27,6 +30,21 @@ def test_injector_fails_each_step_exactly_once():
     assert inj.log == ["step 3: injected chip down",
                        "step 7: injected host unreachable"]
     assert inj.fail_at == {}
+
+
+def test_injector_writer_kill_is_one_shot_and_targeted():
+    """check_writer (the manager's writer_fault hook) kills exactly the
+    configured writer of the configured step's save, exactly once — the
+    retried save after a restart must go through."""
+    inj = FailureInjector(writer_fail_at={4: 1})
+    inj.check(4)                      # whole-incarnation path is untouched
+    inj.check_writer(4, 0)            # other writers of the group survive
+    with pytest.raises(RuntimeError, match="writer 1 died at step 4"):
+        inj.check_writer(4, 1)
+    inj.check_writer(4, 1)            # popped: the retry publishes
+    inj.check_writer(5, 1)            # other steps never fail
+    assert inj.writer_fail_at == {}
+    assert inj.log == ["step 4: injected writer 1 death"]
 
 
 # ---------------------------------------------------------------------------
@@ -125,7 +143,7 @@ def test_run_supervised_counts_incarnations_and_restarts():
     run = _FlakyRun(fails=2)
     state, incarnations = run_supervised(
         lambda _: ({}, 0), run, max_restarts=5,
-        on_restart=restarts.append)
+        on_restart=restarts.append, **NO_SLEEP)
     assert state["done"] and incarnations == 3
     assert [i.index for i in restarts] == [1, 2]
     assert all(isinstance(i, Incarnation) for i in restarts)
@@ -134,22 +152,63 @@ def test_run_supervised_counts_incarnations_and_restarts():
 def test_run_supervised_exhaustion_raises():
     run = _FlakyRun(fails=100)
     with pytest.raises(RuntimeError, match="exceeded 2 restarts"):
-        run_supervised(lambda _: ({}, 0), run, max_restarts=2)
+        run_supervised(lambda _: ({}, 0), run, max_restarts=2, **NO_SLEEP)
     assert run.calls == 3             # initial attempt + 2 restarts
 
 
 def test_run_supervised_zero_restarts_budget():
     with pytest.raises(RuntimeError, match="exceeded 0 restarts"):
-        run_supervised(lambda _: ({}, 0), _FlakyRun(fails=1), max_restarts=0)
+        run_supervised(lambda _: ({}, 0), _FlakyRun(fails=1), max_restarts=0,
+                       **NO_SLEEP)
 
 
-def test_run_supervised_non_runtime_errors_propagate():
-    """Only RuntimeError (real/injected chip+host failures) is supervised;
-    programming errors must surface immediately, not burn restarts."""
-    def run(state, start, inc):
-        raise ValueError("bug, not a fault")
-    with pytest.raises(ValueError):
-        run_supervised(lambda _: ({}, 0), run)
+def test_run_supervised_supervises_any_exception():
+    """A dead filesystem raises OSError, jax raises ValueError-ish runtime
+    errors — at cluster scale those are incarnation deaths, and the
+    supervisor must restart through them, not die on the first one."""
+    for exc in (OSError("EIO: checkpoint fs gone"),
+                ValueError("jax runtime broke")):
+        calls = {"n": 0}
+
+        def run(state, start, inc):
+            calls["n"] += 1
+            if calls["n"] == 1:
+                raise exc
+            return {"done": True}
+
+        state, incarnations = run_supervised(lambda _: ({}, 0), run,
+                                             **NO_SLEEP)
+        assert state["done"] and incarnations == 2
+
+
+def test_run_supervised_non_retryable_errors_propagate():
+    """KeyboardInterrupt is the operator; AssertionError is an invariant
+    violation a restart would just re-trip.  Both escape immediately with
+    zero restarts burned (and zero backoff slept)."""
+    for exc_type in (KeyboardInterrupt, AssertionError):
+        calls = {"n": 0}
+        slept = []
+
+        def run(state, start, inc):
+            calls["n"] += 1
+            raise exc_type("stop")
+
+        with pytest.raises(exc_type):
+            run_supervised(lambda _: ({}, 0), run, sleep_fn=slept.append)
+        assert calls["n"] == 1 and slept == []
+
+
+def test_run_supervised_backoff_is_exponential_and_capped():
+    """Restart delays follow base * 2^k, clamped at the cap — never a
+    hot-loop against a recovering filesystem."""
+    slept = []
+    with pytest.raises(RuntimeError, match="exceeded 5 restarts"):
+        run_supervised(lambda _: ({}, 0), _FlakyRun(fails=100),
+                       max_restarts=5, backoff_base=0.5, backoff_cap=3.0,
+                       sleep_fn=slept.append)
+    assert slept == [0.5, 1.0, 2.0, 3.0, 3.0]   # capped at 3.0
+    # no sleep after the final (budget-exhausting) failure
+    assert len(slept) == 5
 
 
 class _FakeAsyncCkpt:
@@ -171,7 +230,8 @@ def test_run_supervised_aborts_inflight_saves_per_failure():
         return {}, 0
 
     state, incarnations = run_supervised(
-        make_state, _FlakyRun(fails=2), max_restarts=5, ckpt=ckpt)
+        make_state, _FlakyRun(fails=2), max_restarts=5, ckpt=ckpt,
+        **NO_SLEEP)
     assert incarnations == 3
     assert ckpt.aborts == 2
     # each restore happened only after the preceding failure was fenced
@@ -182,5 +242,49 @@ def test_run_supervised_aborts_on_exhaustion_too():
     ckpt = _FakeAsyncCkpt()
     with pytest.raises(RuntimeError, match="exceeded"):
         run_supervised(lambda _: ({}, 0), _FlakyRun(fails=100),
-                       max_restarts=1, ckpt=ckpt)
+                       max_restarts=1, ckpt=ckpt, **NO_SLEEP)
     assert ckpt.aborts == 2           # fenced even when giving up
+
+
+def test_supervised_writer_kill_end_to_end(tmp_path):
+    """The full ISSUE 6 story in-process: an injected single-writer death
+    fails the save at the quorum gate (QuorumError is a RuntimeError — a
+    supervised fault), the incarnation dies at that boundary, the
+    supervisor fences the writer group, and the restart resumes from the
+    last quorum step and republishes the torn one.  (The async-manager
+    variant of this scenario runs in the subprocess harness,
+    tests/_mp/check_checkpoint.py.)"""
+    import jax.numpy as jnp
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.train import loop as train_loop
+
+    inj = FailureInjector(writer_fail_at={4: 1})   # kill writer 1 of step 4
+    mgr = CheckpointManager(str(tmp_path), writers=2)
+
+    def ts(params, opt, batch):
+        return {"w": params["w"] + 1.0}, opt, {"loss": jnp.float32(0.0)}
+
+    def make_state(_):
+        state = {"params": {"w": jnp.zeros(3)}, "opt_state": {}}
+        start = 0
+        if mgr.latest_step() is not None:
+            state, start = mgr.restore(state)
+        return state, start
+
+    def run_steps(state, start, inc):
+        return train_loop.train(ts, state, iter([{}] * 8), start_step=start,
+                                num_steps=8, ckpt=mgr, ckpt_every=2,
+                                log_every=100, injector=inj,
+                                log_fn=lambda *a: None)
+
+    state, incarnations = run_supervised(make_state, run_steps, ckpt=mgr,
+                                         **NO_SLEEP)
+    assert incarnations == 2
+    assert inj.log == ["step 4: injected writer 1 death"]
+    # torn step 4 republished by the restart; GC (keep=3) retired step 2
+    assert mgr.all_steps() == [4, 6, 8]
+    import numpy as np
+    np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
+                                  np.full(3, 8.0))
+    mgr.close()

@@ -233,21 +233,28 @@ def _ckpt_tree(draw, depth=0):
 
 
 @settings(max_examples=15, deadline=None)
-@given(_ckpt_tree())
-def test_checkpoint_roundtrip_lossless_and_manifest_complete(tree):
+@given(_ckpt_tree(), st.integers(1, 4), st.booleans())
+def test_checkpoint_roundtrip_lossless_and_manifest_complete(tree, writers,
+                                                             pin_even):
     """Any pytree of nested dicts/lists with mixed dtypes (incl. bf16, which
     the .npy format cannot round-trip natively, and keys containing "__",
-    "/", "%") survives save→restore bit-exact, and meta.json's manifest has
-    exactly one entry per leaf with no file collisions."""
+    "/", "%") survives save→restore bit-exact under ANY writer-group size
+    1..4 (with and without a writer_map pinning), the global MANIFEST.json
+    has exactly one entry per leaf with no file collisions, and the
+    per-writer partition covers every leaf exactly once with every shard
+    landing in its owner's subdirectory."""
     import json
     import shutil
     import tempfile
 
-    from repro.checkpoint.manager import CheckpointManager
+    from repro.checkpoint.manager import MANIFEST, CheckpointManager
 
+    # optional pinning: half the leaves forced onto writer 0 by name hash
+    wmap = ((lambda n: 0 if len(n) % 2 == 0 else None) if pin_even
+            else None)
     d = tempfile.mkdtemp(prefix="ckpt_prop_")
     try:
-        mgr = CheckpointManager(d)
+        mgr = CheckpointManager(d, writers=writers, writer_map=wmap)
         mgr.save(1, tree)
         restored, step = mgr.restore(tree)
         assert step == 1
@@ -261,11 +268,24 @@ def test_checkpoint_roundtrip_lossless_and_manifest_complete(tree):
             assert gn.shape == wn.shape
             # bit-exact: compare raw bytes (works for bf16/NaN alike)
             assert gn.tobytes() == wn.tobytes()
-        with open(os.path.join(d, "step_00000001", "meta.json")) as f:
+        with open(os.path.join(d, "step_00000001", MANIFEST)) as f:
             meta = json.load(f)
+        assert meta["complete"] is True
+        assert meta["committed"] == list(range(writers))
         assert len(meta["manifest"]) == len(want)      # complete, no merges
         files = [v["file"] for v in meta["manifest"].values()]
         assert len(set(files)) == len(want)            # no file collisions
+        for info in meta["manifest"].values():
+            # each shard sits in its owning writer's subdirectory and is
+            # accounted for in that writer's partial manifest
+            assert info["file"].startswith(f"writer_{info['writer']:02d}/")
+            assert 0 <= info["writer"] < writers
+        for w in range(writers):
+            with open(os.path.join(d, "step_00000001", f"writer_{w:02d}",
+                                   "manifest.json")) as f:
+                partial = json.load(f)
+            assert set(partial["shards"]) == {
+                k for k, v in meta["manifest"].items() if v["writer"] == w}
     finally:
         shutil.rmtree(d, ignore_errors=True)
 
