@@ -32,6 +32,12 @@ non-durable so the measurement is serialize+write parallelism rather than
 fsync latency).  Acceptance (CI): the 4-writer save is no slower than the
 1-writer save — the writer group removes the single-writer bandwidth
 ceiling, it must not add a coordination penalty.
+
+Guard overhead (ISSUE 7; persisted as ``guard_overhead``): median steady-
+state step time of the guarded jitted step (the in-graph NaN/spike update
+guard, optim/adamw.update + runtime/guard.py, docs/DESIGN.md §8) over the
+unguarded step — ``guard_overhead_base_us`` / ``guard_overhead_guarded_us``
+/ ``guard_overhead_x``.  Acceptance (CI): <= 1.05x.
 """
 import time
 
@@ -40,9 +46,10 @@ EVERY = 4          # boundaries at local steps 3, 7, 11 (published 4, 8, 12)
 WARMUP = 2
 WRITER_SWEEP = (1, 2, 4)
 MW_REPS = 5
+GUARD_PAIRS = 30
 
 
-def _build():
+def _build(guard=None):
     import jax
     import jax.numpy as jnp
     from repro.config import ModelConfig, ParallelConfig, RunConfig
@@ -59,7 +66,7 @@ def _build():
     pcfg = ParallelConfig(data=1, model=1, mx=1, my=1, microbatches=1,
                           zero1=False)
     ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
-                                     compute_dtype=jnp.float32),
+                                     compute_dtype=jnp.float32, guard=guard),
                  donate_argnums=(0, 1))
     ds = SyntheticLM(cfg.vocab_size, rc.seq_len, rc.global_batch)
     batches = [{k: jnp.asarray(v) for k, v in ds.batch_at(s).items()}
@@ -114,6 +121,63 @@ def _multiwriter(emit, state, state_mb):
     rows["x4v1"] = rows["w4_us"] / rows["w1_us"]
     emit("ckpt_multiwriter_x4v1", 0.0,
          f"{rows['x4v1']:.2f}(acceptance<=1)")
+    return rows
+
+
+def _guard_overhead(emit):
+    """In-graph update-guard cost (ISSUE 7; persisted as ``guard_overhead``):
+    median step time of the guarded step (isfinite + EWMA-spike predicate +
+    where-selected AdamW, optim/adamw.update) over the unguarded step, same
+    model/batches.  Acceptance (CI): <= 1.05x — the guard is a handful of
+    scalar ops + selects XLA fuses into the update, it must be ~free.
+
+    Sampling is PAIRED and interleaved (base step then guarded step on the
+    same batch, back to back): both pair members see the same machine-load
+    conditions, so the reported ratio is the MEDIAN OF PER-PAIR RATIOS —
+    slow drift and load spikes hit both members and cancel, where a ratio
+    of independent block medians over a handful of samples wobbles ~±5% on
+    a shared CI box, swamping the effect under test."""
+    import itertools
+
+    import jax
+
+    import numpy as np
+    from repro.config import GuardConfig
+    from repro.models import lm
+    from repro.optim import adamw
+
+    cfg, ts_base, batches = _build(guard=None)
+    _, ts_guard, _ = _build(guard=GuardConfig())
+
+    def init_state():
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return params, adamw.init(params)
+
+    # separate fold chains — the jitted steps donate their buffers
+    chains = {"base": init_state(), "guarded": init_state()}
+    steps = {"base": ts_base, "guarded": ts_guard}
+    times = {"base": [], "guarded": []}
+    for b in batches[:WARMUP]:
+        for key in chains:
+            p, o, m = steps[key](*chains[key], b)
+            jax.block_until_ready(m["loss"])
+            chains[key] = (p, o)
+    # data repeats across pairs (cycle) — only the wall time is under test
+    for b in itertools.islice(itertools.cycle(batches[WARMUP:]), GUARD_PAIRS):
+        for key in ("base", "guarded"):
+            t0 = time.perf_counter()
+            p, o, m = steps[key](*chains[key], b)
+            jax.block_until_ready(m["loss"])
+            times[key].append(time.perf_counter() - t0)
+            chains[key] = (p, o)
+    rows = {}
+    for key in ("base", "guarded"):
+        rows[f"{key}_us"] = float(np.median(times[key])) * 1e6
+        emit(f"guard_overhead_{key}_us", rows[f"{key}_us"],
+             f"{'guarded' if key == 'guarded' else 'unguarded'}-step")
+    ratios = np.array(times["guarded"]) / np.array(times["base"])
+    rows["x"] = float(np.median(ratios))
+    emit("guard_overhead_x", 0.0, f"{rows['x']:.3f}(acceptance<=1.05)")
     return rows
 
 
@@ -174,6 +238,7 @@ def main(emit):
     emit("ckpt_stall_async_x", 0.0,
          f"{rows['async_x']:.2f}(acceptance<=1.5)")
     rows["multiwriter"] = _multiwriter(emit, host_state, state_mb)
+    rows["guard"] = _guard_overhead(emit)
     return rows
 
 

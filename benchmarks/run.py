@@ -109,6 +109,7 @@ def main() -> None:
             "checkpoint_stall": results.get("ckpt_stall"),
             "checkpoint_multiwriter": (results.get("ckpt_stall")
                                        or {}).get("multiwriter"),
+            "guard_overhead": (results.get("ckpt_stall") or {}).get("guard"),
             "theory_pipeline": (results.get("comm_model")
                                 or {}).get("pipeline"),
         }

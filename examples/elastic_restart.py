@@ -63,7 +63,9 @@ baseline = train_loop.train(ts, fresh_state(), batches(0, TOTAL),
                             num_steps=TOTAL, log_every=20,
                             log_fn=lambda *a: None)
 baseline_hist = dict(baseline["history"])
-print(f"baseline (uninterrupted): {sorted(baseline_hist.items())}")
+# per-step history (train/loop.py records every step): show endpoints only
+print(f"baseline (uninterrupted): {len(baseline_hist)} steps, "
+      f"first {baseline_hist[0]:.4f} last {baseline_hist[TOTAL - 1]:.4f}")
 
 
 # ---------------------------------------------------------------------------
@@ -104,6 +106,6 @@ for step, loss in sorted(resumed.items()):
     assert baseline_hist[step] == loss, (
         f"resumed loss diverged at step {step}: "
         f"{loss!r} != baseline {baseline_hist[step]!r}")
-print(f"resumed losses bit-exact vs baseline at steps "
-      f"{sorted(resumed)}")
+print(f"resumed losses bit-exact vs baseline at all "
+      f"{len(resumed)} recorded steps")
 print("elastic_restart OK")

@@ -504,6 +504,29 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def retire_steps_after(self, step: int):
+        """Divergence-rollback hook (runtime/guard.py, docs/DESIGN.md §8):
+        retire every published step > ``step`` — they were saved from
+        already-poisoned state.  A checkpoint labeled K holds the state
+        *after* consuming data 0..K-1, so with first poisoned loop step P
+        the newest safe checkpoint is the largest K <= P and the caller
+        passes ``retire_steps_after(P)``.  Same rename-then-rmtree dance as
+        :meth:`_gc`: the step leaves the published namespace atomically
+        before deletion.  Returns the retired step list."""
+        retired = []
+        for s in self.all_steps():
+            if s <= step:
+                continue
+            src = os.path.join(self.dir, f"step_{s:08d}")
+            dst = src + ".gc.tmp"
+            try:
+                os.replace(src, dst)
+            except OSError:
+                dst = src
+            shutil.rmtree(dst, ignore_errors=True)
+            retired.append(s)
+        return retired
+
     # ------------------------------------------------------------------
     # orbax-like surface, trivially satisfied on the sync path (so the train
     # loop / supervisor can treat both managers uniformly)

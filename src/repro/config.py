@@ -296,6 +296,59 @@ class CheckpointConfig:
 
 
 # ---------------------------------------------------------------------------
+# Training-guard configuration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GuardConfig:
+    """Self-healing training-runtime policy (runtime/guard.py, docs/DESIGN.md
+    §8) — three escalating defenses against the failure class checkpointing
+    alone cannot fix: numerical blow-ups and hung steps.
+
+    **In-graph skip-update guard** (``grad_spike_factor``,
+    ``grad_ewma_alpha``): the jitted optimizer step computes one scalar
+    predicate — all grads finite (read off the global-norm reduction the
+    clip already does) AND the norm within ``grad_spike_factor``x the EWMA
+    of previously accepted norms (``AdamState.gnorm_ewma``) — and applies
+    the update under a ``jax.lax.cond`` (both branches trace once).  A
+    poison microbatch costs a no-op step, never a crash or a retrace.
+
+    **Loss-spike rollback** (``loss_spike_factor``, ``loss_ewma_alpha``,
+    ``patience``, ``skip_cap``, ``rollback``): the loop-side
+    ``TrainingGuard`` tracks a loss EWMA; ``patience`` consecutive spiking
+    losses (> ``loss_spike_factor``x EWMA, or non-finite), or ``skip_cap``
+    consecutive in-graph skips, raise ``DivergenceError``.  With
+    ``rollback`` the supervisor then retires checkpoints newer than the
+    first poisoned step, blocklists the poison window
+    (``blocklist.json``), and restarts on the filtered data stream.
+
+    **Hang watchdog** (``hang_timeout``): a daemon thread armed per step;
+    a step exceeding the timeout raises ``HangError`` (supervised,
+    retryable).  0 disables the watchdog.
+    """
+    grad_spike_factor: float = 10.0   # in-graph skip when gnorm > f * EWMA
+    grad_ewma_alpha: float = 0.1      # EWMA decay for accepted grad norms
+    loss_spike_factor: float = 2.0    # loop-side spike when loss > f * EWMA
+    loss_ewma_alpha: float = 0.1      # EWMA decay for non-spiking losses
+    patience: int = 3                 # consecutive loss spikes -> rollback
+    skip_cap: int = 3                 # consecutive skipped updates -> rollback
+    hang_timeout: float = 0.0         # seconds per step; 0 = no watchdog
+    rollback: bool = True             # blocklist + rollback vs plain raise
+
+    def __post_init__(self):
+        assert self.grad_spike_factor > 1.0, (
+            f"grad_spike_factor={self.grad_spike_factor} must be > 1")
+        assert 0.0 < self.grad_ewma_alpha <= 1.0, self.grad_ewma_alpha
+        assert self.loss_spike_factor > 1.0, (
+            f"loss_spike_factor={self.loss_spike_factor} must be > 1")
+        assert 0.0 < self.loss_ewma_alpha <= 1.0, self.loss_ewma_alpha
+        assert self.patience >= 1, f"patience={self.patience} must be >= 1"
+        assert self.skip_cap >= 1, f"skip_cap={self.skip_cap} must be >= 1"
+        assert self.hang_timeout >= 0.0, (
+            f"hang_timeout={self.hang_timeout} must be >= 0")
+
+
+# ---------------------------------------------------------------------------
 # Run configuration (shape cells)
 # ---------------------------------------------------------------------------
 

@@ -22,6 +22,37 @@ def _maybe_respawn(n: int):
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
 
+def _guard_cfg(args):
+    """GuardConfig from flags, or None when --guard is off (docs/DESIGN.md
+    §8).  Passed to the step builder (arms the in-graph skip-update select)
+    and to the TrainingGuard (loss-spike / skip-cap escalation)."""
+    if not args.guard:
+        return None
+    from repro.config import GuardConfig
+    return GuardConfig(grad_spike_factor=args.guard_spike_factor,
+                       loss_spike_factor=args.guard_loss_spike,
+                       patience=args.guard_patience,
+                       skip_cap=args.guard_skip_cap,
+                       hang_timeout=args.hang_timeout,
+                       rollback=not args.no_rollback)
+
+
+def _guard_runtime(args, gcfg, ckpt_dir, start, batch_at):
+    """Loop-side guard surface: (TrainingGuard, Watchdog, data_index_fn,
+    data stream).  The stream seeks to ``batch_at(data_index(start,
+    blocklist))`` — a restored run consumes exactly the batches an
+    uninterrupted (blocklist-filtered) run would have, instead of
+    restarting the data at index 0."""
+    from repro.runtime import guard as G
+    tguard = G.TrainingGuard(gcfg) if gcfg is not None else None
+    wd = G.Watchdog(args.hang_timeout) if args.hang_timeout > 0 else None
+    bl = G.load_blocklist(ckpt_dir)
+    if bl:
+        print(f"blocklist: skipping poisoned data indices {bl}")
+    stream = G.blocklisted_stream(batch_at, start, bl)
+    return tguard, wd, (lambda s: G.data_index(s, bl)), stream
+
+
 def _train_pipeline(cfg, pcfg, rc, mesh, args):
     """1F1B pipeline path: per-pod stage state, host-side schedule executor.
 
@@ -39,9 +70,10 @@ def _train_pipeline(cfg, pcfg, rc, mesh, args):
     from repro.runtime.fault import StepTimer
     from repro.train import loop as train_loop
 
+    gcfg = _guard_cfg(args)
     runner, step = PP.build_pipeline_train_step(
         cfg, pcfg, rc, mesh, total_steps=args.steps,
-        compute_dtype=jnp.bfloat16)
+        compute_dtype=jnp.bfloat16, guard=gcfg)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     sparams = runner.place_params(params)
     sopt = runner.init_opt(sparams)
@@ -67,12 +99,20 @@ def _train_pipeline(cfg, pcfg, rc, mesh, args):
         print(f"restored pipeline checkpoint at step {start}")
 
     ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch)
-    it = Prefetcher(iter(ds))
+    tguard, wd, dix, stream = _guard_runtime(args, gcfg, args.ckpt_dir,
+                                             start, ds.batch_at)
+    it = Prefetcher(stream)
     state = {"params": sparams, "opt_state": sopt}
-    state = train_loop.train(step, state, it, start_step=start,
-                             num_steps=args.steps, ckpt=ckpt,
-                             ckpt_every=ccfg.every, timer=StepTimer())
-    it.close()
+    try:
+        state = train_loop.train(step, state, it, start_step=start,
+                                 num_steps=args.steps, ckpt=ckpt,
+                                 ckpt_every=ccfg.every, timer=StepTimer(),
+                                 guard=tguard, watchdog=wd,
+                                 data_index_fn=dix)
+    finally:
+        if wd is not None:
+            wd.close()
+        it.close()
     if ckpt is not None:
         ckpt.close()                 # train() already drained in-flight saves
     h = state["history"]
@@ -114,6 +154,27 @@ def main():
                          "publishes (0 = all writers)")
     ap.add_argument("--ckpt-no-verify", action="store_true",
                     help="skip per-shard checksum verification on restore")
+    ap.add_argument("--guard", action="store_true",
+                    help="arm the self-healing guard: in-graph NaN/spike "
+                         "skip-update + loss-spike divergence detection "
+                         "(docs/DESIGN.md §8)")
+    ap.add_argument("--guard-spike-factor", type=float, default=10.0,
+                    help="skip the update when grad norm exceeds this "
+                         "multiple of its EWMA")
+    ap.add_argument("--guard-loss-spike", type=float, default=2.0,
+                    help="a step whose loss exceeds this multiple of the "
+                         "loss EWMA counts toward divergence patience")
+    ap.add_argument("--guard-patience", type=int, default=3,
+                    help="consecutive spiking losses before DivergenceError")
+    ap.add_argument("--guard-skip-cap", type=int, default=3,
+                    help="consecutive in-graph skipped updates before "
+                         "DivergenceError")
+    ap.add_argument("--hang-timeout", type=float, default=0.0,
+                    help="seconds before an armed step counts as hung "
+                         "(0 = watchdog off)")
+    ap.add_argument("--no-rollback", action="store_true",
+                    help="on divergence, restart WITHOUT retiring poisoned "
+                         "checkpoints / blocklisting the poison window")
     args = ap.parse_args()
     _maybe_respawn(max(args.mesh_devices,
                        args.pods * args.data * args.mx * args.my
@@ -158,9 +219,10 @@ def main():
         ospecs = SP.opt_state_specs(pspecs, params, mesh, pcfg)
         opt_state = jax.device_put(opt_state, SP.sharding_tree(ospecs, mesh))
 
+    gcfg = _guard_cfg(args)
     ts = TS.build_train_step(cfg, pcfg, rc, mesh,
                              compute_dtype=jnp.float32 if mesh is None
-                             else jnp.bfloat16)
+                             else jnp.bfloat16, guard=gcfg)
     ts = jax.jit(ts, donate_argnums=(0, 1))
 
     extras = {}
@@ -169,7 +231,6 @@ def main():
     if cfg.family == "audio":
         extras["frames"] = (cfg.frontend_stub_len, cfg.d_model)
     ds = SyntheticLM(cfg.vocab_size, args.seq, args.batch, extras=extras)
-    it = Prefetcher(iter(ds))
 
     ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
                             async_=not args.ckpt_sync,
@@ -184,12 +245,21 @@ def main():
         params, opt_state = restored["params"], restored["opt_state"]
         print(f"restored checkpoint at step {start}")
 
+    tguard, wd, dix, stream = _guard_runtime(args, gcfg, args.ckpt_dir,
+                                             start, ds.batch_at)
+    it = Prefetcher(stream)
     state = {"params": params, "opt_state": opt_state}
-    state = train_loop.train(ts, state, it, start_step=start,
-                             num_steps=args.steps, ckpt=ckpt,
-                             ckpt_every=ccfg.every,
-                             timer=StepTimer())
-    it.close()
+    try:
+        state = train_loop.train(ts, state, it, start_step=start,
+                                 num_steps=args.steps, ckpt=ckpt,
+                                 ckpt_every=ccfg.every,
+                                 timer=StepTimer(),
+                                 guard=tguard, watchdog=wd,
+                                 data_index_fn=dix)
+    finally:
+        if wd is not None:
+            wd.close()
+        it.close()
     if ckpt is not None:
         ckpt.close()                 # train() already drained in-flight saves
     h = state["history"]

@@ -281,7 +281,7 @@ class PipelineRunner:
 
     def __init__(self, cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
                  mesh: Mesh, *, total_steps: int = 10_000,
-                 compute_dtype=jnp.bfloat16):
+                 compute_dtype=jnp.bfloat16, guard=None):
         from repro.launch import mesh as M
         validate_pipeline(cfg, pcfg)
         if "pod" not in mesh.axis_names:
@@ -310,12 +310,17 @@ class PipelineRunner:
         self._tok = [NamedSharding(sm, SP.batch_specs(
             sm, inner, microbatched=False, seq_len=rc.seq_len)["tokens"])
             for sm in self.submeshes]
+        self.guard = guard
         self._build_stage_fns()
         self._gnorm_sq = jax.jit(adamw.global_norm_sq)
         # one jitted optimizer update serves every stage: jit re-traces per
-        # stage tree structure/sharding and caches each specialization
+        # stage tree structure/sharding and caches each specialization.
+        # With a guard, every stage folds the SAME cross-stage scalar norm
+        # into its update, so per-stage guard predicates and EWMAs stay
+        # bitwise in sync — stages skip (or accept) a step in lockstep.
         self._upd = jax.jit(lambda q, g, st, gn: adamw.update(
-            q, g, st, self.rc, self.total_steps, grad_norm=gn))
+            q, g, st, self.rc, self.total_steps, grad_norm=gn,
+            guard=self.guard))
         # executed-op log (schedule-conformance assertions in tests)
         self.executed: List[List[PipeTask]] = []
 
@@ -552,6 +557,11 @@ class PipelineRunner:
             new_p.append(np_)
             new_o.append(no_)
         metrics.update({"grad_norm": jnp.float32(gnorm), "lr": om["lr"]})
+        if self.guard is not None:
+            # identical across stages (same scalar norm, synced EWMAs);
+            # surface the last stage's copy
+            for k in ("update_ok", "update_skipped", "nonfinite"):
+                metrics[k] = om[k]
         metrics["aux"] = jnp.float32(metrics["aux"])
         return new_p, new_o, metrics
 
@@ -559,7 +569,7 @@ class PipelineRunner:
 def build_pipeline_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
                               rc: RunConfig, mesh, *,
                               total_steps: int = 10_000,
-                              compute_dtype=jnp.bfloat16):
+                              compute_dtype=jnp.bfloat16, guard=None):
     """Pipeline counterpart of ``train/step.build_train_step``.
 
     Returns ``(runner, step_fn)``: the step takes (stage_params,
@@ -568,5 +578,5 @@ def build_pipeline_train_step(cfg: ModelConfig, pcfg: ParallelConfig,
     is a host-side 1F1B orchestrator — do NOT wrap it in ``jax.jit``.
     """
     runner = PipelineRunner(cfg, pcfg, rc, mesh, total_steps=total_steps,
-                            compute_dtype=compute_dtype)
+                            compute_dtype=compute_dtype, guard=guard)
     return runner, runner.train_step

@@ -99,7 +99,8 @@ def param_specs(params_shape, mesh: Optional[Mesh], pcfg: ParallelConfig):
 
 def opt_state_specs(pspecs, params_shape, mesh: Optional[Mesh],
                     pcfg: ParallelConfig):
-    """AdamState specs: step replicated; mu/nu = param spec + data axis (ZeRO-1)."""
+    """AdamState specs: step + guard EWMA replicated scalars; mu/nu = param
+    spec + data axis (ZeRO-1)."""
     if mesh is None:
         return None
     ax = shd.axis_info(mesh, pcfg.strategy)
@@ -109,7 +110,7 @@ def opt_state_specs(pspecs, params_shape, mesh: Optional[Mesh],
 
     moment = jax.tree.map(f, pspecs, params_shape)
     from repro.optim.adamw import AdamState
-    return AdamState(P(), moment, moment)
+    return AdamState(P(), moment, moment, P())
 
 
 def batch_specs(mesh: Optional[Mesh], pcfg: ParallelConfig, *, microbatched: bool,

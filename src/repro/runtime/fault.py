@@ -23,10 +23,17 @@ implemented (all exercised by tests/test_fault.py and examples/elastic_restart.p
    single-writer death inside the torn window to prove this).  Restore
    keeps the elastic re-sharding path (point 3) untouched.
 
-2. **Failure detection** — a heartbeat watchdog wraps the step function; a step
-   exceeding ``hang_timeout`` or raising marks the incarnation dead, and the
-   supervisor (``run_supervised``) restarts from the latest checkpoint.
-   FailureInjector simulates chip/host failures deterministically for tests.
+2. **Failure detection** — ``runtime/guard.Watchdog`` is the per-step hang
+   detector: the train loop arms it at the top of each step and disarms once
+   the step's loss syncs; a step exceeding ``GuardConfig.hang_timeout`` trips
+   the watchdog thread, whose ``check()`` raises ``HangError`` — an ordinary
+   retryable incarnation death the supervisor fences and restarts (an
+   optional ``on_hang`` callback escalates hangs that never return).
+   Numerical failure is detected one layer deeper: the jitted step's
+   ``update_ok`` guard skips non-finite / norm-spiking updates in-graph,
+   and ``runtime/guard.TrainingGuard`` raises ``DivergenceError`` on a
+   sustained loss spike or skip streak (docs/DESIGN.md §8).  FailureInjector
+   simulates chip/host failures deterministically for tests.
 
 3. **Elastic rescale** — on restart with a different device count (node lost /
    replaced), checkpoints restore with *target-mesh* shardings (global arrays
@@ -34,12 +41,21 @@ implemented (all exercised by tests/test_fault.py and examples/elastic_restart.p
    re-planned (core/schedule.choose_microbatches) so the global batch and thus
    the training trajectory semantics are preserved.
 
-4. **Straggler mitigation** — StepTimer keeps an EWMA of step latency per
-   incarnation; sustained outliers (> ``straggler_factor`` x EWMA) trigger a
-   rebalance callback.  On real pods this remaps data shards away from the slow
-   host (here: simulated + unit-tested policy).  This is the TPU analogue of
-   the paper's mini-batch re-scheduling freedom: mini-batches are the minimal
-   execution units and can be reassigned between dies/hosts.
+4. **Straggler mitigation & divergence rollback** — StepTimer keeps an EWMA
+   of step latency per incarnation (the first ``warmup_steps`` samples are
+   discarded: a JIT-compile step is ~100x steady state and would poison the
+   baseline); sustained outliers (> ``straggler_factor`` x EWMA) trigger a
+   rebalance callback that remaps data shards away from the slow host
+   (simulated + unit-tested policy) — the TPU analogue of the paper's
+   mini-batch re-scheduling freedom: mini-batches are the minimal execution
+   units and can be reassigned between dies/hosts.  The same relocatability
+   powers the rollback policy: when an incarnation dies of
+   ``DivergenceError``, ``run_supervised`` retires published checkpoints
+   newer than the first poisoned step and publishes the poisoned data
+   indices to ``blocklist.json`` (runtime/guard.py), so the restarted
+   incarnation's iterator drops those mini-batches and the recovered
+   trajectory is bit-identical to a clean run that never saw them
+   (docs/DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -47,6 +63,8 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
+
+from repro.runtime.guard import DivergenceError, publish_blocklist
 
 
 class FailureInjector:
@@ -88,16 +106,27 @@ class FailureInjector:
 
 @dataclass
 class StepTimer:
-    """EWMA step-latency tracker with straggler detection."""
+    """EWMA step-latency tracker with straggler detection.
+
+    The first ``warmup_steps`` samples are DISCARDED, not folded: step 0 is
+    JIT-compile dominated (often 100x steady state), and seeding the EWMA
+    with it would mask real stragglers for a long decay window (a genuinely
+    2.5x-slow step compares against a ~100x baseline).  The EWMA seeds from
+    the first post-warmup sample."""
     alpha: float = 0.1
     straggler_factor: float = 2.5
     patience: int = 3
+    warmup_steps: int = 1
     ewma: Optional[float] = None
     slow_streak: int = 0
+    _seen: int = 0
     events: List[str] = field(default_factory=list)
 
     def record(self, dt: float) -> bool:
         """Returns True when a sustained straggler is detected."""
+        if self._seen < self.warmup_steps:
+            self._seen += 1
+            return False                # compile-dominated: discard
         if self.ewma is None:
             self.ewma = dt
             return False
@@ -156,6 +185,15 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
     (queued snapshots dropped, every in-flight writer interrupted between
     shards, torn-step debris swept), so the restart restores only a
     quorum-published step and never a half-written one.
+
+    **Rollback policy** (docs/DESIGN.md §8): a ``DivergenceError`` with
+    ``rollback=True`` additionally *retires* published checkpoints newer
+    than the first poisoned step (``ckpt.retire_steps_after``) — they were
+    saved from already-poisoned state — and publishes the poisoned data
+    indices to the ``blocklist.json`` sidecar next to the manifests, so the
+    restarted incarnation's data iterator (``guard.blocklisted_stream``)
+    skips those batches.  Both hooks are looked up dynamically so fakes and
+    managers without a directory still supervise cleanly.
     """
     restarts = 0
     while True:
@@ -171,6 +209,16 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
             restarts += 1
             if ckpt is not None:
                 ckpt.abort()          # dead incarnation: fence writer group
+                if (isinstance(e, DivergenceError)
+                        and getattr(e, "rollback", False)):
+                    # fence first, THEN retire: an in-flight save of a
+                    # poisoned step must not land after the rollback
+                    retire = getattr(ckpt, "retire_steps_after", None)
+                    if retire is not None:
+                        retire(e.first_step)
+                    d = getattr(ckpt, "dir", None)
+                    if d:
+                        publish_blocklist(d, e.data_indices)
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded {max_restarts} restarts; last error: {e}")

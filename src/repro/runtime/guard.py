@@ -1,0 +1,305 @@
+"""Self-healing training runtime: NaN/divergence guard, loss-spike rollback,
+hang watchdog (docs/DESIGN.md §8).
+
+Checkpointing + supervised restart (runtime/fault.py, checkpoint/manager.py)
+survive *process death*; this module covers the other failure class that
+kills week-long runs — numerical blow-ups and silently hung steps — with
+three escalating defenses:
+
+1. **In-graph skip-update guard** (``optim/adamw.guard_predicate``, wired by
+   ``train/step.build_train_step(guard=...)`` and
+   ``parallel/pipeline.build_pipeline_train_step(guard=...)``): the jitted
+   optimizer step computes one scalar ``update_ok`` — all grads finite
+   (read off the global-norm reduction the clip already performs) AND no
+   norm spike vs the EWMA carried in ``AdamState.gnorm_ewma`` — and applies
+   AdamW under a ``jax.lax.cond``.  A poison microbatch costs a no-op step
+   (state bit-unchanged, step counter frozen), never a crash or a retrace;
+   metrics gain ``update_ok`` / ``update_skipped`` / ``nonfinite``.  The
+   paper's mini-batch-as-relocatable-unit framing is what makes "skip the
+   poison microbatch and keep going" a legal recovery action.
+
+2. **Loss-spike rollback** (:class:`TrainingGuard`): the train loop feeds
+   every synced per-step loss to a pure-Python EWMA tracker; ``patience``
+   consecutive spiking losses (or ``skip_cap`` consecutive in-graph skips)
+   raise :class:`DivergenceError` carrying the poisoned window.
+   ``run_supervised`` (runtime/fault.py) reacts by fencing the writer
+   group, *retiring* published checkpoints newer than the first poisoned
+   step (``CheckpointManager.retire_steps_after``) and publishing the
+   poisoned data indices to a ``blocklist.json`` sidecar — the restarted
+   incarnation's iterator (:func:`blocklisted_stream`) then skips those
+   batches, so the recovered trajectory is bit-identical to a clean run
+   that never saw them (seekable ``data/synthetic.batch_at`` makes this
+   exact and testable, tests/_mp/check_guard.py).
+
+3. **Hang watchdog** (:class:`Watchdog`): a daemon thread the loop arms at
+   the top of each step and disarms when the step's loss syncs.  A step
+   exceeding ``hang_timeout`` trips the watchdog — ``check()`` then raises
+   :class:`HangError` (an ordinary supervised incarnation death), and an
+   optional ``on_hang`` escalation callback fires *during* the hang (on a
+   real fleet: page + kill the pod; in the subprocess test: ``os._exit``).
+
+Blocklist protocol: ``blocklist.json`` lives next to the manager's step
+directories and is published atomically (``.tmp`` + ``os.replace``) with
+merge-on-write semantics, so repeated incidents accumulate.  Blocklisted
+values are DATA indices (``batch_at`` arguments), not loop steps: loop step
+``s`` of a blocklist-aware run consumes data index :func:`data_index`\\
+``(s, blocklist)`` — the s-th non-blocklisted index.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Iterable, Iterator, List, Optional, Sequence
+
+BLOCKLIST = "blocklist.json"
+
+
+class DivergenceError(RuntimeError):
+    """Training diverged: a sustained loss spike or too many consecutive
+    skipped updates.  Carries everything the supervisor's rollback policy
+    needs: ``first_step`` (the first poisoned LOOP step — checkpoints newer
+    than it are poisoned and must be retired), ``data_indices`` (the
+    poisoned ``batch_at`` indices to blocklist) and ``rollback`` (the
+    GuardConfig policy bit)."""
+
+    def __init__(self, msg: str, *, kind: str, first_step: int,
+                 data_indices: Sequence[int], rollback: bool = True):
+        super().__init__(msg)
+        self.kind = kind                          # "loss_spike" | "skip_cap"
+        self.first_step = first_step
+        self.data_indices = tuple(data_indices)
+        self.rollback = rollback
+
+
+class HangError(RuntimeError):
+    """A training step exceeded the watchdog's ``hang_timeout``.  Retryable:
+    ``run_supervised`` fences the writer group and restarts from the last
+    published checkpoint like any other incarnation death."""
+
+    def __init__(self, step: int, elapsed: float, timeout: float):
+        super().__init__(
+            f"step {step} hung: {elapsed:.3f}s exceeds hang_timeout="
+            f"{timeout:.3f}s")
+        self.step = step
+        self.elapsed = elapsed
+        self.timeout = timeout
+
+
+# ---------------------------------------------------------------------------
+# Loss-spike / skip-cap tracking (pure Python, loop side)
+# ---------------------------------------------------------------------------
+
+class TrainingGuard:
+    """Escalation layer above the in-graph guard: watches the synced
+    per-step loss and the ``update_skipped`` metric, raises
+    :class:`DivergenceError` on sustained divergence.
+
+    Mirrors ``StepTimer``'s freeze-while-anomalous EWMA: spiking losses are
+    NOT folded into the baseline (a sustained spike must not normalize
+    itself), and a healthy step resets the streak.  Non-finite losses count
+    as spikes unconditionally — the in-graph guard keeps non-finite grads
+    out of the *state*, but the loss metric itself can still be NaN."""
+
+    def __init__(self, gcfg):
+        self.gcfg = gcfg
+        self.loss_ewma: Optional[float] = None
+        self.spike_streak = 0
+        self.skip_streak = 0
+        self._spike_window: List[tuple] = []      # (loop_step, data_index)
+        self._skip_window: List[tuple] = []
+        self.events: List[str] = []
+
+    def observe(self, step: int, loss: float, metrics=None,
+                data_index: Optional[int] = None):
+        """Feed one completed step.  Raises :class:`DivergenceError` when
+        the spike streak reaches ``patience`` or the skip streak reaches
+        ``skip_cap``."""
+        g = self.gcfg
+        di = step if data_index is None else data_index
+        skipped = bool(metrics is not None
+                       and float(metrics.get("update_skipped", 0.0)) >= 0.5)
+        if skipped:
+            self.skip_streak += 1
+            self._skip_window.append((step, di))
+            if self.skip_streak >= g.skip_cap:
+                self._raise("skip_cap", self._skip_window,
+                            f"{self.skip_streak} consecutive updates "
+                            f"skipped in-graph (skip_cap={g.skip_cap})")
+            # a skipped step's loss is untrusted (often NaN); don't let it
+            # touch the loss EWMA or the spike streak either way
+            return
+        self.skip_streak = 0
+        self._skip_window.clear()
+
+        finite = loss == loss and abs(loss) != float("inf")
+        if self.loss_ewma is None:
+            if finite:
+                self.loss_ewma = loss             # first healthy loss seeds
+            return
+        spiking = (not finite) or loss > g.loss_spike_factor * self.loss_ewma
+        if spiking:
+            self.spike_streak += 1
+            self._spike_window.append((step, di))
+            if self.spike_streak >= g.patience:
+                self._raise("loss_spike", self._spike_window,
+                            f"loss {loss:.4f} spiked >"
+                            f"{g.loss_spike_factor}x ewma "
+                            f"{self.loss_ewma:.4f} for "
+                            f"{self.spike_streak} consecutive steps "
+                            f"(patience={g.patience})")
+            return                                # EWMA frozen while spiking
+        self.spike_streak = 0
+        self._spike_window.clear()
+        a = g.loss_ewma_alpha
+        self.loss_ewma = (1 - a) * self.loss_ewma + a * loss
+
+    def _raise(self, kind: str, window: List[tuple], why: str):
+        first_step = window[0][0]
+        indices = [di for _, di in window]
+        self.events.append(f"{kind} at step {first_step}: {why}")
+        raise DivergenceError(
+            f"divergence ({kind}) first poisoned step {first_step}, "
+            f"data indices {indices}: {why}",
+            kind=kind, first_step=first_step, data_indices=indices,
+            rollback=self.gcfg.rollback)
+
+
+# ---------------------------------------------------------------------------
+# Hang watchdog
+# ---------------------------------------------------------------------------
+
+class Watchdog:
+    """Per-step hang detector (the ``hang_timeout`` heartbeat
+    runtime/fault.py's contract promises).
+
+    The loop calls :meth:`arm` at the top of a step and :meth:`disarm` +
+    :meth:`check` once the step's loss has synced.  A daemon thread wakes
+    every ``poll`` seconds; when an armed step's age exceeds ``timeout`` it
+    records the trip and fires ``on_hang(step, elapsed)`` — the escalation
+    hook for hangs that never return (a real deployment kills the pod; the
+    subprocess test ``os._exit``\\ s).  For hangs that DO eventually return
+    (stalled collective that times out, GC pause), :meth:`check` raises
+    :class:`HangError` on the training thread — an ordinary supervised
+    death, fenced and restarted by ``run_supervised``.
+
+    One watchdog serves a whole supervised run: :meth:`check` clears the
+    trip, so the next incarnation starts clean."""
+
+    def __init__(self, timeout: float, *,
+                 on_hang: Optional[Callable[[int, float], None]] = None,
+                 poll: float = 0.02,
+                 clock: Callable[[], float] = time.monotonic):
+        assert timeout > 0.0, f"hang_timeout={timeout} must be > 0"
+        self.timeout = timeout
+        self.on_hang = on_hang
+        self.poll = poll
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._armed_step: Optional[int] = None
+        self._armed_at = 0.0
+        self._trip: Optional[HangError] = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._watch, name="watchdog",
+                                        daemon=True)
+        self._thread.start()
+
+    def arm(self, step: int):
+        with self._lock:
+            self._armed_step = step
+            self._armed_at = self.clock()
+
+    def disarm(self):
+        with self._lock:
+            self._armed_step = None
+
+    def check(self):
+        """Raise (and clear) a pending :class:`HangError`."""
+        with self._lock:
+            trip, self._trip = self._trip, None
+        if trip is not None:
+            raise trip
+
+    @property
+    def tripped(self) -> bool:
+        with self._lock:
+            return self._trip is not None
+
+    def _watch(self):
+        while not self._stop.wait(self.poll):
+            fire = None
+            with self._lock:
+                if (self._armed_step is not None and self._trip is None):
+                    elapsed = self.clock() - self._armed_at
+                    if elapsed > self.timeout:
+                        self._trip = HangError(self._armed_step, elapsed,
+                                               self.timeout)
+                        fire = (self._armed_step, elapsed)
+                        self._armed_step = None   # one trip per arm
+            if fire is not None and self.on_hang is not None:
+                self.on_hang(*fire)
+
+    def close(self):
+        self._stop.set()
+        self._thread.join(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# Blocklist sidecar (published next to the checkpoint manifests)
+# ---------------------------------------------------------------------------
+
+def blocklist_path(directory: str) -> str:
+    return os.path.join(directory, BLOCKLIST)
+
+
+def load_blocklist(directory: Optional[str]) -> List[int]:
+    """Sorted poisoned data indices, or [] (missing dir/file/torn json all
+    mean "nothing blocklisted" — same tolerant-listing stance as
+    ``all_steps``)."""
+    if not directory:
+        return []
+    try:
+        with open(blocklist_path(directory)) as f:
+            return sorted({int(i) for i in json.load(f)["data_indices"]})
+    except (OSError, ValueError, KeyError, TypeError):
+        return []
+
+
+def publish_blocklist(directory: str, data_indices: Iterable[int]
+                      ) -> List[int]:
+    """Merge ``data_indices`` into the sidecar and publish atomically
+    (``.tmp`` + ``os.replace``, the manifest-publish idiom) so a reader
+    never observes a torn blocklist.  Returns the merged sorted list."""
+    merged = sorted(set(load_blocklist(directory)) | {int(i) for i in
+                                                      data_indices})
+    os.makedirs(directory, exist_ok=True)
+    tmp = blocklist_path(directory) + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"data_indices": merged}, f, sort_keys=True)
+    os.replace(tmp, blocklist_path(directory))
+    return merged
+
+
+def data_index(step: int, blocklist: Sequence[int]) -> int:
+    """Loop step -> data index under a blocklist: step ``s`` consumes the
+    s-th NON-blocklisted index.  Identity for an empty blocklist; exact
+    inverse of dropping the blocklisted batches from a clean stream, which
+    is what makes rollback-resume bit-comparable to a clean filtered run."""
+    idx = step
+    for b in sorted(set(blocklist)):
+        if b <= idx:
+            idx += 1
+    return idx
+
+
+def blocklisted_stream(batch_at: Callable[[int], dict], start_step: int,
+                       blocklist: Sequence[int]) -> Iterator[dict]:
+    """Seekable data stream for a (restarted) blocklist-aware run: yields
+    ``batch_at(data_index(s, blocklist))`` for ``s = start_step, ...``."""
+    bl = sorted(set(blocklist))
+    s = start_step
+    while True:
+        yield batch_at(data_index(s, bl))
+        s += 1

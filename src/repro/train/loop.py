@@ -42,7 +42,18 @@ def train(train_step: Callable, state: Dict, data_iter, *,
           log_every: int = 10, injector: Optional[FailureInjector] = None,
           timer: Optional[StepTimer] = None,
           on_straggler: Optional[Callable] = None,
+          guard=None, watchdog=None,
+          data_index_fn: Optional[Callable[[int], int]] = None,
           log_fn: Callable = print) -> Dict:
+    """``guard`` is a :class:`repro.runtime.guard.TrainingGuard` — fed every
+    synced per-step loss (+ the in-graph ``update_skipped`` metric), it
+    raises ``DivergenceError`` on sustained divergence, BEFORE the boundary
+    save that would persist the poisoned state.  ``watchdog`` is a
+    :class:`repro.runtime.guard.Watchdog`, armed at the top of each step and
+    checked once the loss syncs — a step that outlives ``hang_timeout``
+    raises ``HangError``.  ``data_index_fn`` maps loop step -> data index
+    (identity when None) so a blocklist-aware run reports the true poisoned
+    ``batch_at`` indices (docs/DESIGN.md §8)."""
     params, opt_state = state["params"], state["opt_state"]
     history = state.setdefault("history", [])
     if (ckpt is not None and injector is not None
@@ -56,18 +67,33 @@ def train(train_step: Callable, state: Dict, data_iter, *,
         batch = next(data_iter)
         if injector is not None:
             injector.check(step)
+        if watchdog is not None:
+            watchdog.arm(step)
         t0 = time.time()
         params, opt_state, metrics = train_step(params, opt_state, batch)
         jax.block_until_ready(metrics["loss"])
         dt = time.time() - t0
+        if watchdog is not None:
+            watchdog.disarm()
+            watchdog.check()                # raises HangError if tripped
         if timer is not None and timer.record(dt) and on_straggler:
             on_straggler(step, timer)
+        # per-step history: the loss is already a synced scalar (the
+        # block_until_ready above), so recording every step costs one float
+        # append — and restart-exactness tests / the guard see the full
+        # trajectory, not a log_every subsample
+        loss = float(metrics["loss"])
+        history.append((step, loss))
         if step % log_every == 0 or step == num_steps - 1:
-            loss = float(metrics["loss"])
-            history.append((step, loss))
             log_fn(f"step {step:5d} loss {loss:.4f} "
                    f"gnorm {float(metrics.get('grad_norm', 0)):.3f} "
                    f"{dt*1e3:.0f}ms")
+        if guard is not None:
+            # before the boundary save: a DivergenceError here must not
+            # let the poisoned state publish
+            guard.observe(step, loss, metrics,
+                          data_index=(data_index_fn(step)
+                                      if data_index_fn else step))
         if ckpt is not None and (step + 1) % ckpt_every == 0:
             # non-blocking on AsyncCheckpointManager; = save() on the sync one
             ckpt.save_async(step + 1, {"params": params,

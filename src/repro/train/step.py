@@ -40,8 +40,14 @@ def microbatch_split(batch: Dict[str, jax.Array], n_micro: int):
 
 def build_train_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
                      mesh, *, total_steps: int = 10_000,
-                     compute_dtype=jnp.bfloat16):
+                     compute_dtype=jnp.bfloat16, guard=None):
     """Single-program train step (grad-accumulation scan over microbatches).
+
+    ``guard`` (a :class:`repro.config.GuardConfig`) arms the in-graph
+    skip-update guard (docs/DESIGN.md §8): the AdamW update is applied under
+    a ``jax.lax.cond`` on ``update_ok`` (all grads finite, no norm spike vs
+    the EWMA in ``opt_state``), and metrics gain ``update_ok`` /
+    ``update_skipped`` / ``nonfinite``.
 
     With ``pcfg.pipeline_enabled`` (pod_axis_role="pipeline") the step is
     instead the 1F1B orchestrator over per-pod stage sub-meshes — build it
@@ -81,7 +87,7 @@ def build_train_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
             mb_body, (gzero, jnp.zeros(()), jnp.zeros(())), mbs)
         grads = jax.tree.map(lambda g: g / n_micro, gsum)
         new_params, new_opt, om = adamw.update(params, grads, opt_state, rc,
-                                               total_steps)
+                                               total_steps, guard=guard)
         metrics = {"loss": lsum / n_micro, "aux": asum / n_micro, **om}
         return new_params, new_opt, metrics
 

@@ -1,0 +1,496 @@
+"""End-to-end checks for the self-healing training runtime (ISSUE 7
+acceptance, runtime/guard.py, docs/DESIGN.md §8).
+
+Scenario A — in-graph NaN skip: a poison batch (NaN in ``loss_mask`` ->
+NaN loss -> NaN grads) at step k of a guarded single-program run is skipped
+IN-GRAPH: no retrace (a trace counter stays at 1 — the predicate is a traced
+select, not Python control flow), ``update_skipped == 1`` at exactly step k,
+and the final params/opt-state and every non-poisoned loss are bit-exact
+against a clean run over the same stream with batch k dropped (a skipped
+step passes state through bit-unchanged, so the two folds are the same
+fold).
+
+Scenario B1 — genuine loss-spike rollback (single-program + ASYNC
+checkpointing): after enough pretraining that the model is confident,
+label-shifted poison batches produce a real, finite loss spike
+(ratio asserted >= SPIKE_MARGIN so calibration drift fails loudly).
+TrainingGuard raises DivergenceError at patience; run_supervised fences the
+async writer group, retires the published checkpoint saved mid-spike,
+publishes ``blocklist.json``, and the restarted incarnation — streaming
+``batch_at(data_index(s, blocklist))`` — produces a loss history and final
+params bit-exact vs an uninterrupted run over the same filtered stream.
+
+Scenario B2 — skip-cap rollback on the 2-pod 1F1B pipeline grid: NaN poison
+batches are skipped in-graph (per-stage guards stay in lockstep off ONE
+cross-stage norm), the skip streak hits ``skip_cap``, and the same
+rollback/blocklist/bit-exact-resume contract holds with the stage-pinned
+2-writer checkpoint group.
+
+Scenario B3 — loss-spike rollback on the pipeline path: the in-graph guard
+disarmed, NaN poison reaches the loss (non-finite counts as a spike), state
+is genuinely corrupted and the mid-spike checkpoint holds NaN params —
+retirement + blocklist + restart recover a trajectory bit-exact vs the
+filtered clean run.
+
+Scenario C — hang watchdog, in-process: a step that sleeps past
+``hang_timeout`` trips the Watchdog; ``check()`` raises HangError — a
+retryable supervised death — and the restart resumes bit-exact.
+
+Scenario C2 — hang watchdog, subprocess (``--child-hang DIR``): the child's
+hung step never returns; the ``on_hang`` escalation callback ``os._exit``\\ s
+the process DURING the hang (rc 57 proves detection fired while hung), and
+the parent's next incarnation sweeps and resumes from the published step
+bit-exact.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8.
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import subprocess
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import (AsyncCheckpointManager,
+                                      CheckpointManager)
+from repro.config import GuardConfig, ModelConfig, ParallelConfig, RunConfig
+from repro.data.synthetic import SyntheticLM
+from repro.models import lm
+from repro.optim import adamw
+from repro.runtime import guard as G
+from repro.runtime.fault import run_supervised
+from repro.train import loop as train_loop
+from repro.train import step as TS
+
+CFG = ModelConfig(name="guard-test", family="dense", num_layers=2,
+                  d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                  vocab_size=64, mlp_kind="swiglu")
+RC = RunConfig("t", "train", 16, 8, lr=2e-3)
+DS = SyntheticLM(CFG.vocab_size, RC.seq_len, RC.global_batch, seed=7)
+PCFG1 = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1,
+                       microbatches=1, zero1=False)
+
+# B1 calibration: at lr=1e-2 the model is confident enough by PRETRAIN that
+# label-shifted batches spike the loss ~1.20x over its EWMA; the detector
+# runs at 1.1x and the measured ratio is asserted >= SPIKE_MARGIN so any
+# drift (jax version, platform) fails loudly instead of silently not firing
+RC_HOT = RunConfig("t", "train", 16, 8, lr=1e-2)
+PRETRAIN_TOTAL = 240
+POISON = (233, 234)
+SPIKE_MARGIN = 1.15
+
+
+def _batch(s, poison=()):
+    b = {k: jnp.asarray(v) for k, v in DS.batch_at(s).items()}
+    # loss_mask is optional to the step fn; carry it on EVERY batch so the
+    # poison batch (NaN mask) has the same pytree structure — the no-retrace
+    # assertion in scenario A depends on poison being data-only
+    b["loss_mask"] = jnp.ones((RC.global_batch, RC.seq_len), jnp.float32)
+    if s in poison:
+        # label shift: on a confident model, NLL of the wrong token is well
+        # above the EWMA — a *finite* loss spike (mask scaling can't spike:
+        # xent_loss is loss_mask-normalized)
+        b["labels"] = (b["labels"] + CFG.vocab_size // 2) % CFG.vocab_size
+    return b
+
+
+def _nan_batch(s):
+    b = _batch(s)
+    b["loss_mask"] = jnp.full((RC.global_batch, RC.seq_len), jnp.nan,
+                              jnp.float32)
+    return b
+
+
+def _leaves_equal(t1, t2, what):
+    for a, b in zip(jax.tree_util.tree_leaves(t1),
+                    jax.tree_util.tree_leaves(t2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# Scenario A: in-graph NaN skip, no retrace, bit-exact vs dropped batch
+# ---------------------------------------------------------------------------
+
+def check_nan_skip_in_graph():
+    gc = GuardConfig(grad_spike_factor=1e9)       # isolate the finite test
+    inner = TS.build_train_step(CFG, PCFG1, RC, None,
+                                compute_dtype=jnp.float32, guard=gc)
+    traces = {"n": 0}
+
+    def counted(p, o, b):
+        traces["n"] += 1
+        return inner(p, o, b)
+
+    ts = jax.jit(counted)
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    o0 = adamw.init(p0)
+    K, TOTAL = 4, 10
+
+    # guarded run over the poisoned stream
+    pa, oa = p0, o0
+    skipped, losses_a = [], []
+    for s in range(TOTAL):
+        b = _nan_batch(s) if s == K else _batch(s)
+        pa, oa, m = ts(pa, oa, b)
+        skipped.append(float(m["update_skipped"]))
+        losses_a.append(float(m["loss"]))
+    assert traces["n"] == 1, f"retraced: {traces['n']} traces"
+    assert skipped == [1.0 if s == K else 0.0 for s in range(TOTAL)], skipped
+    assert np.isnan(losses_a[K])                  # poison loss surfaced...
+
+    # ...but the fold is the clean fold with batch K dropped: same step fn,
+    # one fewer step
+    pb, ob = p0, o0
+    losses_b = []
+    for s in [x for x in range(TOTAL) if x != K]:
+        pb, ob, m = ts(pb, ob, _batch(s))
+        losses_b.append(float(m["loss"]))
+    assert [l for i, l in enumerate(losses_a) if i != K] == losses_b
+    _leaves_equal(pa, pb, "params after NaN-skip vs dropped-batch run")
+    _leaves_equal(oa, ob, "opt state after NaN-skip vs dropped-batch run")
+    assert int(oa.step) == TOTAL - 1              # counter froze at the skip
+    print(f"A: NaN batch at step {K} skipped in-graph (1 trace, "
+          f"update_skipped==1), trajectory bit-exact vs dropped-batch run")
+
+
+# ---------------------------------------------------------------------------
+# Scenario B1: finite loss spike -> rollback -> blocklist -> bit-exact resume
+# (single-program, ASYNC multi-writer checkpointing)
+# ---------------------------------------------------------------------------
+
+def check_loss_spike_rollback_single(tmp_root):
+    gc = GuardConfig(grad_spike_factor=1e6, loss_spike_factor=1.1,
+                     patience=2, skip_cap=999)
+    ts = jax.jit(TS.build_train_step(CFG, PCFG1, RC_HOT, None,
+                                     compute_dtype=jnp.float32, guard=gc))
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    TOTAL = PRETRAIN_TOTAL
+
+    # ---- measured spike margin (loud calibration guard) ------------------
+    pa, oa = p0, adamw.init(p0)
+    ew = None
+    for s in range(POISON[0]):
+        pa, oa, m = ts(pa, oa, _batch(s))
+        l = float(m["loss"])
+        ew = l if ew is None else 0.9 * ew + 0.1 * l
+    _, _, m = ts(pa, oa, _batch(POISON[0], poison=POISON))
+    ratio = float(m["loss"]) / ew
+    assert ratio >= SPIKE_MARGIN, (
+        f"calibration drift: poison/ewma ratio {ratio:.3f} < "
+        f"{SPIKE_MARGIN} — retune PRETRAIN_TOTAL/lr")
+
+    # ---- uninterrupted reference over the FILTERED stream ----------------
+    bl = list(POISON)
+    pr, orr = p0, adamw.init(p0)
+    ref_hist = []
+    for s in range(TOTAL):
+        pr, orr, m = ts(pr, orr, _batch(G.data_index(s, bl)))
+        ref_hist.append((s, float(m["loss"])))
+
+    # ---- supervised run: poison stream, async 2-writer checkpointing -----
+    ckpt_dir = os.path.join(tmp_root, "spike_single")
+    mgr = AsyncCheckpointManager(ckpt_dir, keep=4, writers=2)
+    restored_at = []
+
+    def make_state(_):
+        state = {"params": p0, "opt_state": adamw.init(p0)}
+        start = 0
+        if mgr.latest_step() is not None:
+            state, start = mgr.restore(state)
+            restored_at.append(start)
+        return state, start
+
+    def run_steps(state, start, inc):
+        blist = G.load_blocklist(ckpt_dir)
+        stream = G.blocklisted_stream(
+            lambda i: _batch(i, poison=POISON), start, blist)
+        return train_loop.train(
+            ts, state, stream, start_step=start, num_steps=TOTAL,
+            ckpt=mgr, ckpt_every=2, log_every=1000,
+            guard=G.TrainingGuard(gc),
+            data_index_fn=lambda s: G.data_index(s, blist),
+            log_fn=lambda *a: None)
+
+    state, incarnations = run_supervised(make_state, run_steps, ckpt=mgr,
+                                         sleep_fn=lambda _: None)
+    mgr.close()
+    assert incarnations == 2, incarnations
+    assert G.load_blocklist(ckpt_dir) == list(POISON)
+    # the restart restored a pre-spike boundary (async: the last published
+    # save at divergence time; the poisoned boundary was retired)
+    assert len(restored_at) == 1 and restored_at[0] <= POISON[0] \
+        and restored_at[0] % 2 == 0, restored_at
+    start = restored_at[0]
+    # resumed trajectory bit-exact vs the uninterrupted filtered run
+    resumed = dict(state["history"])
+    for s, want in ref_hist:
+        if s >= start:
+            assert resumed[s] == want, (s, resumed[s], want)
+    _leaves_equal(state["params"], pr, "params after rollback-resume")
+    _leaves_equal(state["opt_state"], orr, "opt state after rollback-resume")
+    print(f"B1: finite loss spike ({ratio:.2f}x) at {POISON} -> rollback to "
+          f"step {start}, blocklist published, resume bit-exact vs filtered "
+          f"clean run (async 2-writer ckpt)")
+
+
+# ---------------------------------------------------------------------------
+# Scenarios B2/B3: rollback on the 2-pod 1F1B pipeline grid
+# ---------------------------------------------------------------------------
+
+def _pipeline_runner(guard):
+    from repro.launch import mesh as MM
+    from repro.parallel import pipeline as PP
+    pcfg = ParallelConfig(strategy="hecaton", data=1, model=2, mx=1, my=2,
+                          pods=2, pod_axis_role="pipeline", microbatches=2,
+                          grad_reduce_dtype="fp32", remat="none",
+                          zero1=False)
+    mesh = MM.make_small_mesh("hecaton", 1, 1, 2, pods=2)
+    cfg = CFG.scaled(num_layers=2)
+    runner, pstep = PP.build_pipeline_train_step(cfg, pcfg, RC, mesh,
+                                                 compute_dtype=jnp.float32,
+                                                 guard=guard)
+    return runner, pstep, cfg
+
+
+def _pipeline_rollback(tmp_root, tag, guard_cfg, runner_guard, expect_kind):
+    """Shared driver for B2 (in-graph skip -> skip_cap) and B3 (in-graph
+    guard off -> NaN loss counts as spike): poison data 7,8 of a 12-step
+    2-stage pipeline run, supervise, and require the rollback contract."""
+    from repro.parallel import pipeline as PP
+    runner, pstep, cfg = _pipeline_runner(runner_guard)
+    p0 = lm.init_params(cfg, jax.random.PRNGKey(0))
+    TOTAL, PBAD = 12, (7, 8)
+
+    def fresh_state():
+        sparams = runner.place_params(p0)
+        return {"params": sparams, "opt_state": runner.init_opt(sparams)}
+
+    def poisoned(i):
+        return _nan_batch(i) if i in PBAD else _batch(i)
+
+    # uninterrupted reference over the filtered stream
+    ref = train_loop.train(
+        pstep, fresh_state(),
+        (_batch(G.data_index(s, list(PBAD))) for s in range(TOTAL)),
+        num_steps=TOTAL, log_every=1000, log_fn=lambda *a: None)
+    ref_hist = dict(ref["history"])
+
+    ckpt_dir = os.path.join(tmp_root, f"pipe_{tag}")
+    mgr = CheckpointManager(ckpt_dir, keep=5, writers=2,
+                            writer_map=PP.stage_writer_map(2))
+    restored_at, steps_seen = [], []
+
+    def make_state(_):
+        state, start = fresh_state(), 0
+        if mgr.latest_step() is not None:
+            steps_seen.append(list(mgr.all_steps()))
+            state, start = mgr.restore(state)
+            restored_at.append(start)
+        return state, start
+
+    def run_steps(state, start, inc):
+        blist = G.load_blocklist(ckpt_dir)
+        stream = G.blocklisted_stream(poisoned, start, blist)
+        return train_loop.train(
+            pstep, state, stream, start_step=start, num_steps=TOTAL,
+            ckpt=mgr, ckpt_every=2, log_every=1000,
+            guard=G.TrainingGuard(guard_cfg),
+            data_index_fn=lambda s: G.data_index(s, blist),
+            log_fn=lambda *a: None)
+
+    state, incarnations = run_supervised(make_state, run_steps, ckpt=mgr,
+                                         sleep_fn=lambda _: None)
+    assert incarnations == 2, incarnations
+    assert G.load_blocklist(ckpt_dir) == list(PBAD)
+    # the boundary checkpoint saved inside the poison window (step 8) was
+    # retired before the restart could see it
+    assert restored_at == [6], restored_at
+    assert 8 not in steps_seen[0], steps_seen
+    resumed = dict(state["history"])
+    for s in range(6, TOTAL):
+        assert resumed[s] == ref_hist[s], (s, resumed[s], ref_hist[s])
+    _leaves_equal(state["params"], ref["params"],
+                  f"pipeline params after {expect_kind} rollback")
+    _leaves_equal(state["opt_state"], ref["opt_state"],
+                  f"pipeline opt state after {expect_kind} rollback")
+    print(f"{tag}: {expect_kind} rollback on 2-pod 1F1B grid -> retire(8), "
+          "blocklist [7, 8], resume from 6 bit-exact vs filtered clean run")
+
+
+def check_skip_cap_rollback_pipeline(tmp_root):
+    # in-graph guard armed: NaN batches skip (state bit-unchanged per
+    # stage, predicates in lockstep off the one cross-stage norm), the skip
+    # streak hits skip_cap=2
+    gc = GuardConfig(grad_spike_factor=1e9, skip_cap=2, patience=99)
+    _pipeline_rollback(tmp_root, "B2", gc, gc, "skip_cap")
+
+
+def check_loss_spike_rollback_pipeline(tmp_root):
+    # in-graph guard OFF: NaN reaches loss AND params (the mid-spike
+    # checkpoint genuinely holds poisoned state — retirement is load-
+    # bearing); non-finite loss counts as a spike
+    gc = GuardConfig(loss_spike_factor=2.0, patience=2, skip_cap=999)
+    _pipeline_rollback(tmp_root, "B3", gc, None, "loss_spike")
+
+
+# ---------------------------------------------------------------------------
+# Scenario C: hang watchdog, in-process supervised recovery
+# ---------------------------------------------------------------------------
+
+def check_watchdog_supervised(tmp_root):
+    ts = jax.jit(TS.build_train_step(CFG, PCFG1, RC, None,
+                                     compute_dtype=jnp.float32))
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    TOTAL, HANG_AT = 10, 5
+    hung = {"done": False}
+
+    def hang_once(p, o, b, _step=[0]):
+        s = _step[0]
+        _step[0] += 1
+        out = ts(p, o, b)
+        if s == HANG_AT and not hung["done"]:
+            hung["done"] = True
+            jax.block_until_ready(out[2]["loss"])
+            time.sleep(0.6)                       # the "hang" (returns)
+        return out
+
+    # uninterrupted baseline
+    base = train_loop.train(ts, {"params": p0, "opt_state": adamw.init(p0)},
+                            (_batch(s) for s in range(TOTAL)),
+                            num_steps=TOTAL, log_every=1000,
+                            log_fn=lambda *a: None)
+    base_hist = dict(base["history"])
+
+    ckpt_dir = os.path.join(tmp_root, "hang")
+    mgr = CheckpointManager(ckpt_dir)
+    wd = G.Watchdog(0.25, poll=0.02)
+    errors = []
+
+    def make_state(_):
+        state = {"params": p0, "opt_state": adamw.init(p0)}
+        start = 0
+        if mgr.latest_step() is not None:
+            state, start = mgr.restore(state)
+        return state, start
+
+    def run_steps(state, start, inc):
+        try:
+            return train_loop.train(
+                hang_once, state, (_batch(s) for s in range(start, TOTAL)),
+                start_step=start, num_steps=TOTAL, ckpt=mgr, ckpt_every=2,
+                log_every=1000, watchdog=wd, log_fn=lambda *a: None)
+        except G.HangError as e:
+            errors.append(e)
+            raise
+
+    try:
+        state, incarnations = run_supervised(make_state, run_steps,
+                                             ckpt=mgr,
+                                             sleep_fn=lambda _: None)
+    finally:
+        wd.close()
+    assert incarnations == 2, incarnations
+    assert len(errors) == 1 and errors[0].step == HANG_AT
+    assert errors[0].elapsed > errors[0].timeout == 0.25
+    resumed = dict(state["history"])
+    for s, want in base_hist.items():
+        if s >= 4:                                # steps re-run after restore
+            assert resumed[s] == want, (s, resumed[s], want)
+    _leaves_equal(state["params"], base["params"],
+                  "params after hang-restart")
+    print(f"C: step {HANG_AT} hung past hang_timeout=0.25s -> HangError, "
+          "supervised restart from step 4, resume bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# Scenario C2: hung step never returns; on_hang kills the process mid-hang
+# ---------------------------------------------------------------------------
+
+def child_hang(ckpt_dir):
+    ts = jax.jit(TS.build_train_step(CFG, PCFG1, RC, None,
+                                     compute_dtype=jnp.float32))
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    # warm the compile cache before arming a 0.3s watchdog — the compile
+    # step is ~100x steady state and would itself read as a hang (the same
+    # reason StepTimer discards warmup_steps samples)
+    jax.block_until_ready(ts(p0, adamw.init(p0), _batch(0))[2]["loss"])
+    mgr = CheckpointManager(ckpt_dir)
+
+    def hang_forever(p, o, b, _step=[0]):
+        s = _step[0]
+        _step[0] += 1
+        out = ts(p, o, b)
+        if s == 5:
+            jax.block_until_ready(out[2]["loss"])
+            time.sleep(600)                       # a real hang: never returns
+        return out
+
+    # rc 57 (not 1) so the parent can tell the watchdog escalation from an
+    # uncaught child exception; _exit fires DURING the sleep above
+    wd = G.Watchdog(0.3, poll=0.02, on_hang=lambda s, el: os._exit(57))
+    train_loop.train(hang_forever, {"params": p0, "opt_state": adamw.init(p0)},
+                     (_batch(s) for s in range(10)), num_steps=10,
+                     ckpt=mgr, ckpt_every=2, log_every=1000, watchdog=wd,
+                     log_fn=lambda *a: None)
+    os._exit(3)                                   # unreachable
+
+
+def check_hang_kill(ckpt_dir):
+    t0 = time.time()
+    r = subprocess.run([sys.executable, os.path.abspath(__file__),
+                        "--child-hang", ckpt_dir],
+                       capture_output=True, text=True,
+                       env=dict(os.environ), timeout=300)
+    wall = time.time() - t0
+    assert r.returncode == 57, (r.returncode, r.stdout, r.stderr[-2000:])
+    assert wall < 120, f"watchdog escalation took {wall:.0f}s"
+
+    # next incarnation: sweep, restore the published step, resume bit-exact
+    mgr = CheckpointManager(ckpt_dir)
+    mgr.abort()
+    assert mgr.all_steps() == [2, 4], mgr.all_steps()
+    ts = jax.jit(TS.build_train_step(CFG, PCFG1, RC, None,
+                                     compute_dtype=jnp.float32))
+    p0 = lm.init_params(CFG, jax.random.PRNGKey(0))
+    o0 = adamw.init(p0)
+    pa, oa = p0, o0
+    ref = []
+    for s in range(8):
+        pa, oa, m = ts(pa, oa, _batch(s))
+        ref.append(float(m["loss"]))
+    restored, step = mgr.restore({"params": p0, "opt_state": o0})
+    assert step == 4
+    pb, ob = restored["params"], restored["opt_state"]
+    got = []
+    for s in range(4, 8):
+        pb, ob, m = ts(pb, ob, _batch(s))
+        got.append(float(m["loss"]))
+    assert ref[4:] == got, (ref[4:], got)
+    _leaves_equal(pa, pb, "params after hang-kill resume")
+    print("C2: on_hang escalation fired DURING the 600s hang (rc 57, "
+          f"{wall:.0f}s wall), restart resumed from step 4 bit-exact")
+
+
+def main():
+    import tempfile
+    root = tempfile.mkdtemp(prefix="guard_check_")
+    check_nan_skip_in_graph()
+    check_loss_spike_rollback_single(root)
+    check_skip_cap_rollback_pipeline(root)
+    check_loss_spike_rollback_pipeline(root)
+    check_watchdog_supervised(root)
+    check_hang_kill(os.path.join(root, "hang_kill"))
+    print("ALL GUARD CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 2 and sys.argv[1] == "--child-hang":
+        child_hang(sys.argv[2])
+    else:
+        main()

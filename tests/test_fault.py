@@ -52,15 +52,48 @@ def test_injector_writer_kill_is_one_shot_and_targeted():
 # ---------------------------------------------------------------------------
 
 def test_steptimer_first_sample_seeds_ewma():
-    t = StepTimer()
+    t = StepTimer(warmup_steps=0)
     assert t.record(1.0) is False
+    assert t.ewma == 1.0
+
+
+def test_steptimer_warmup_discards_compile_spike():
+    """Default warmup discards the first sample entirely: a 100x JIT-compile
+    step 0 must not seed the EWMA (it would mask real stragglers for a long
+    decay window — the cold-start regression)."""
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=1)
+    assert t.record(100.0) is False   # compile-dominated: discarded
+    assert t.ewma is None
+    assert t.record(1.0) is False     # first post-warmup sample seeds
+    assert t.ewma == 1.0
+    assert t.record(3.0) is True      # 3x a sane baseline fires immediately
+    assert len(t.events) == 1
+
+
+def test_steptimer_no_warmup_compile_spike_masks_stragglers():
+    """The regression the warmup exists for: seeding with the compile step
+    makes a genuinely 3x-slow step invisible."""
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=1,
+                  warmup_steps=0)
+    t.record(100.0)                   # poisons the baseline
+    assert t.record(3.0) is False     # straggler hides under the 100s EWMA
+    assert t.events == []
+
+
+def test_steptimer_warmup_discards_exactly_n_samples():
+    t = StepTimer(warmup_steps=3)
+    for dt in (50.0, 40.0, 30.0):
+        assert t.record(dt) is False
+        assert t.ewma is None
+    t.record(1.0)
     assert t.ewma == 1.0
 
 
 def test_steptimer_ewma_freezes_while_slow():
     """Outlier steps must NOT be folded into the EWMA — otherwise a sustained
     straggler drags the baseline up and masks itself."""
-    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3)
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3,
+                  warmup_steps=0)
     t.record(1.0)
     for _ in range(2):
         assert t.record(10.0) is False
@@ -72,7 +105,8 @@ def test_steptimer_ewma_freezes_while_slow():
 
 
 def test_steptimer_fast_step_resets_streak_and_updates_ewma():
-    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3)
+    t = StepTimer(alpha=0.5, straggler_factor=2.0, patience=3,
+                  warmup_steps=0)
     t.record(1.0)
     t.record(10.0)
     t.record(10.0)                    # streak = 2, one short of patience
@@ -85,7 +119,8 @@ def test_steptimer_fast_step_resets_streak_and_updates_ewma():
 
 
 def test_steptimer_borderline_step_is_not_slow():
-    t = StepTimer(alpha=0.5, straggler_factor=2.5, patience=1)
+    t = StepTimer(alpha=0.5, straggler_factor=2.5, patience=1,
+                  warmup_steps=0)
     t.record(1.0)
     assert t.record(2.5) is False     # exactly at factor*ewma: not an outlier
     assert t.ewma == pytest.approx(1.75)
@@ -244,6 +279,70 @@ def test_run_supervised_aborts_on_exhaustion_too():
         run_supervised(lambda _: ({}, 0), _FlakyRun(fails=100),
                        max_restarts=1, ckpt=ckpt, **NO_SLEEP)
     assert ckpt.aborts == 2           # fenced even when giving up
+
+
+def test_run_supervised_divergence_rollback_policy(tmp_path):
+    """A DivergenceError(rollback=True) triggers the full rollback policy in
+    order: fence the writer group, retire checkpoints newer than the first
+    poisoned step, publish the poison window to blocklist.json — then the
+    next incarnation restores.  A plain RuntimeError must NOT roll back."""
+    from repro.runtime.guard import DivergenceError, load_blocklist
+
+    class _RollbackCkpt(_FakeAsyncCkpt):
+        def __init__(self, d):
+            super().__init__()
+            self.dir = str(d)
+            self.retired = []
+
+        def retire_steps_after(self, step):
+            self.retired.append(("after-abort" if self.aborts else "early",
+                                 step))
+
+    ckpt = _RollbackCkpt(tmp_path)
+    calls = {"n": 0}
+
+    def run_steps(state, start, inc):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise DivergenceError("poison", kind="loss_spike", first_step=17,
+                                  data_indices=(17, 18))
+        if calls["n"] == 2:
+            raise RuntimeError("ordinary death")    # no rollback for this
+        return state
+
+    _, incarnations = run_supervised(lambda _: ({}, 0), run_steps,
+                                     max_restarts=4, ckpt=ckpt, **NO_SLEEP)
+    assert incarnations == 3
+    assert ckpt.aborts == 2                   # both deaths fenced
+    assert ckpt.retired == [("after-abort", 17)]   # only the divergence
+    assert load_blocklist(str(tmp_path)) == [17, 18]
+
+
+def test_run_supervised_divergence_no_rollback_flag(tmp_path):
+    """rollback=False (the --no-rollback policy) restarts WITHOUT retiring
+    or blocklisting."""
+    from repro.runtime.guard import DivergenceError, load_blocklist
+
+    class _RollbackCkpt(_FakeAsyncCkpt):
+        dir = str(tmp_path)
+
+        def retire_steps_after(self, step):
+            raise AssertionError("must not retire with rollback=False")
+
+    fails = {"n": 0}
+
+    def run_steps(state, start, inc):
+        if not fails["n"]:
+            fails["n"] = 1
+            raise DivergenceError("poison", kind="skip_cap", first_step=3,
+                                  data_indices=(3,), rollback=False)
+        return state
+
+    _, incarnations = run_supervised(lambda _: ({}, 0), run_steps,
+                                     max_restarts=2, ckpt=_RollbackCkpt(),
+                                     **NO_SLEEP)
+    assert incarnations == 2
+    assert load_blocklist(str(tmp_path)) == []
 
 
 def test_supervised_writer_kill_end_to_end(tmp_path):

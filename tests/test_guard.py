@@ -1,0 +1,360 @@
+"""Unit tests for the self-healing runtime (runtime/guard.py + the guarded
+optimizer path in optim/adamw.py, docs/DESIGN.md §8): GuardConfig
+validation, the in-graph skip-update predicate (NaN/Inf anywhere -> skip,
+skipped state bit-unchanged, spike vs EWMA), TrainingGuard loss-spike /
+skip-cap streaks, the Watchdog, blocklist sidecar helpers + the step->data
+index mapping, and CheckpointManager.retire_steps_after.  End-to-end
+injected-failure scenarios live in tests/_mp/check_guard.py."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import GuardConfig, RunConfig
+from repro.optim import adamw
+from repro.runtime import guard as G
+
+RC = RunConfig("t", "train", 16, 8, lr=2e-3)
+GC = GuardConfig()
+
+
+def _tree():
+    k = jax.random.PRNGKey(0)
+    return {"a": jax.random.normal(k, (4, 8), jnp.float32),
+            "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (3,),
+                                         jnp.float32)}}
+
+
+def _grads(scale=0.1):
+    return jax.tree.map(lambda p: jnp.full_like(p, scale), _tree())
+
+
+def _bits_equal(t1, t2):
+    return all(np.array_equal(np.asarray(a), np.asarray(b), equal_nan=True)
+               for a, b in zip(jax.tree.leaves(t1), jax.tree.leaves(t2)))
+
+
+# ---------------------------------------------------------------------------
+# GuardConfig validation
+# ---------------------------------------------------------------------------
+
+def test_guardconfig_defaults_valid():
+    g = GuardConfig()
+    assert g.grad_spike_factor > 1 and g.loss_spike_factor > 1
+    assert g.rollback
+
+
+@pytest.mark.parametrize("kw", [
+    {"grad_spike_factor": 1.0}, {"loss_spike_factor": 0.5},
+    {"grad_ewma_alpha": 0.0}, {"loss_ewma_alpha": 1.5},
+    {"patience": 0}, {"skip_cap": 0}, {"hang_timeout": -1.0},
+])
+def test_guardconfig_rejects_bad_values(kw):
+    with pytest.raises(AssertionError):
+        GuardConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Guarded optimizer update (in-graph defense)
+# ---------------------------------------------------------------------------
+
+def test_guarded_update_matches_unguarded_when_ok():
+    params, grads = _tree(), _grads()
+    st = adamw.init(params)
+    p1, s1, m1 = adamw.update(params, grads, st, RC)
+    p2, s2, m2 = adamw.update(params, grads, st, RC, guard=GC)
+    assert _bits_equal(p1, p2)
+    assert _bits_equal(s1.mu, s2.mu) and _bits_equal(s1.nu, s2.nu)
+    assert int(s2.step) == 1
+    assert float(m2["update_ok"]) == 1.0
+    assert float(m2["update_skipped"]) == 0.0
+
+
+@pytest.mark.parametrize("bad", [jnp.nan, jnp.inf, -jnp.inf])
+def test_nonfinite_grad_skips_bit_unchanged(bad):
+    params = _tree()
+    st = adamw.init(params)
+    # seed the EWMA with one healthy step first
+    params, st, _ = adamw.update(params, _grads(), st, RC, guard=GC)
+    grads = _grads()
+    grads["b"]["w"] = grads["b"]["w"].at[1].set(bad)   # one poison element
+    p2, s2, m = adamw.update(params, grads, st, RC, guard=GC)
+    assert float(m["update_skipped"]) == 1.0
+    assert float(m["nonfinite"]) == 1.0
+    assert _bits_equal(p2, params)
+    assert _bits_equal(s2.mu, st.mu) and _bits_equal(s2.nu, st.nu)
+    assert int(s2.step) == int(st.step)                # counter frozen
+    assert float(s2.gnorm_ewma) == float(st.gnorm_ewma)  # baseline frozen
+
+
+def test_norm_spike_skips_but_finite():
+    params = _tree()
+    st = adamw.init(params)
+    params, st, _ = adamw.update(params, _grads(0.1), st, RC, guard=GC)
+    # 1000x the seeded norm blows past grad_spike_factor=10
+    p2, s2, m = adamw.update(params, _grads(100.0), st, RC, guard=GC)
+    assert float(m["update_skipped"]) == 1.0
+    assert float(m["nonfinite"]) == 0.0               # finite, just spiking
+    assert _bits_equal(p2, params)
+
+
+def test_unseeded_ewma_accepts_any_norm():
+    """First step after init (ewma=0 sentinel) must accept — there is no
+    baseline to spike against."""
+    params = _tree()
+    st = adamw.init(params)
+    _, s2, m = adamw.update(params, _grads(100.0), st, RC, guard=GC)
+    assert float(m["update_ok"]) == 1.0
+    assert float(s2.gnorm_ewma) > 0.0                 # norm seeded it
+
+
+def test_ewma_folds_only_accepted_norms():
+    params = _tree()
+    st = adamw.init(params)
+    _, s1, _ = adamw.update(params, _grads(0.1), st, RC, guard=GC)
+    seeded = float(s1.gnorm_ewma)
+    _, s2, _ = adamw.update(params, _grads(100.0), s1, RC, guard=GC)
+    assert float(s2.gnorm_ewma) == seeded             # skip froze the EWMA
+    _, s3, m3 = adamw.update(params, _grads(0.11), s2, RC, guard=GC)
+    assert float(m3["update_ok"]) == 1.0
+    assert float(s3.gnorm_ewma) != seeded             # accepted step folds
+
+
+def test_guard_predicate_jits_without_retrace():
+    """Data-only poison must not retrace the jitted step — the predicate is
+    a traced select, not Python control flow."""
+    params = _tree()
+    st = adamw.init(params)
+    traces = {"n": 0}
+
+    @jax.jit
+    def step(p, s, g):
+        traces["n"] += 1
+        return adamw.update(p, g, s, RC, guard=GC)
+
+    p, s, _ = step(params, st, _grads(0.1))
+    p, s, m = step(p, s, _grads(jnp.nan))
+    p, s, m2 = step(p, s, _grads(0.1))
+    assert traces["n"] == 1
+    assert float(m["update_skipped"]) == 1.0
+    assert float(m2["update_skipped"]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# TrainingGuard (loop-side escalation)
+# ---------------------------------------------------------------------------
+
+def _tg(**kw):
+    base = dict(loss_spike_factor=1.5, patience=2, skip_cap=3)
+    base.update(kw)
+    return G.TrainingGuard(GuardConfig(**base))
+
+
+def test_training_guard_healthy_run_never_raises():
+    tg = _tg()
+    for s in range(50):
+        tg.observe(s, 1.0 - s * 0.01)
+    assert tg.spike_streak == 0 and tg.events == []
+
+
+def test_training_guard_loss_spike_raises_with_window():
+    tg = _tg()
+    tg.observe(0, 1.0)
+    tg.observe(1, 1.0)
+    tg.observe(2, 9.0)                       # streak 1
+    with pytest.raises(G.DivergenceError) as ei:
+        tg.observe(3, 9.5)                   # streak 2 = patience
+    e = ei.value
+    assert e.kind == "loss_spike"
+    assert e.first_step == 2
+    assert e.data_indices == (2, 3)
+    assert e.rollback
+
+
+def test_training_guard_ewma_frozen_while_spiking():
+    """A spike must not normalize itself into the baseline."""
+    tg = _tg(patience=5)
+    tg.observe(0, 1.0)
+    tg.observe(1, 9.0)
+    assert tg.loss_ewma == 1.0               # frozen
+    tg.observe(2, 1.0)                       # healthy: streak resets, folds
+    assert tg.spike_streak == 0
+    assert tg.loss_ewma == pytest.approx(1.0)
+
+
+def test_training_guard_nonfinite_loss_counts_as_spike():
+    tg = _tg(patience=1)
+    tg.observe(0, 1.0)
+    with pytest.raises(G.DivergenceError):
+        tg.observe(1, float("nan"))
+
+
+def test_training_guard_skip_cap():
+    tg = _tg(skip_cap=2, patience=99)
+    tg.observe(0, 1.0)
+    tg.observe(1, float("nan"), {"update_skipped": 1.0})
+    with pytest.raises(G.DivergenceError) as ei:
+        tg.observe(2, float("nan"), {"update_skipped": 1.0})
+    assert ei.value.kind == "skip_cap"
+    assert ei.value.data_indices == (1, 2)
+    assert tg.loss_ewma == 1.0               # skipped losses never folded
+
+
+def test_training_guard_reports_data_indices_not_steps():
+    """Under a blocklist the loop step != data index; the poison window must
+    carry batch_at indices."""
+    tg = _tg()
+    tg.observe(0, 1.0, data_index=0)
+    tg.observe(16, 9.0, data_index=19)
+    with pytest.raises(G.DivergenceError) as ei:
+        tg.observe(17, 9.0, data_index=20)
+    assert ei.value.first_step == 16
+    assert ei.value.data_indices == (19, 20)
+
+
+def test_training_guard_spike_detection_monotone_in_factor():
+    """A loss flagged at factor f is flagged at every f' < f."""
+    losses = [1.0, 1.2, 2.9, 3.1]
+    fired = []
+    for f in (1.2, 2.0, 2.8):
+        tg = _tg(loss_spike_factor=f, patience=1)
+        try:
+            for s, l in enumerate(losses):
+                tg.observe(s, l)
+            fired.append(None)
+        except G.DivergenceError as e:
+            fired.append(e.first_step)
+    assert fired == sorted(fired, key=lambda x: (x is None, x))
+    assert fired[0] is not None              # tightest factor fires first
+
+
+# ---------------------------------------------------------------------------
+# Watchdog
+# ---------------------------------------------------------------------------
+
+def test_watchdog_fast_steps_never_trip():
+    wd = G.Watchdog(0.5, poll=0.01)
+    try:
+        for s in range(5):
+            wd.arm(s)
+            time.sleep(0.01)
+            wd.disarm()
+            wd.check()
+    finally:
+        wd.close()
+
+
+def test_watchdog_trips_on_hung_step_and_clears():
+    wd = G.Watchdog(0.05, poll=0.01)
+    try:
+        wd.arm(7)
+        time.sleep(0.2)                      # the "hang"
+        wd.disarm()
+        assert wd.tripped
+        with pytest.raises(G.HangError) as ei:
+            wd.check()
+        assert ei.value.step == 7
+        assert ei.value.elapsed > ei.value.timeout == 0.05
+        wd.check()                           # trip cleared: next arm is clean
+        wd.arm(8)
+        time.sleep(0.01)
+        wd.disarm()
+        wd.check()
+    finally:
+        wd.close()
+
+
+def test_watchdog_on_hang_fires_during_the_hang():
+    """The escalation callback must fire while the step is STILL hung — that
+    is the only defense against a step that never returns."""
+    fired = []
+    wd = G.Watchdog(0.05, poll=0.01, on_hang=lambda s, el: fired.append(s))
+    try:
+        wd.arm(3)
+        deadline = time.time() + 2.0
+        while not fired and time.time() < deadline:
+            time.sleep(0.01)                 # "hung": never disarms
+        assert fired == [3]
+    finally:
+        wd.close()
+
+
+def test_watchdog_disarmed_never_trips():
+    wd = G.Watchdog(0.02, poll=0.01)
+    try:
+        time.sleep(0.1)                      # idle (between steps): no arm
+        assert not wd.tripped
+    finally:
+        wd.close()
+
+
+# ---------------------------------------------------------------------------
+# Blocklist sidecar + index mapping
+# ---------------------------------------------------------------------------
+
+def test_blocklist_roundtrip_and_merge(tmp_path):
+    d = str(tmp_path)
+    assert G.load_blocklist(d) == []
+    assert G.publish_blocklist(d, [18, 17]) == [17, 18]
+    assert G.load_blocklist(d) == [17, 18]
+    # second incident merges, deduped
+    assert G.publish_blocklist(d, [18, 40]) == [17, 18, 40]
+    assert G.load_blocklist(d) == [17, 18, 40]
+
+
+def test_blocklist_missing_and_torn_are_empty(tmp_path):
+    assert G.load_blocklist(None) == []
+    assert G.load_blocklist(str(tmp_path / "nope")) == []
+    p = tmp_path / G.BLOCKLIST
+    p.write_text("{torn")
+    assert G.load_blocklist(str(tmp_path)) == []
+
+
+def test_data_index_mapping():
+    assert [G.data_index(s, []) for s in range(5)] == [0, 1, 2, 3, 4]
+    bl = [17, 18]
+    assert [G.data_index(s, bl) for s in (16, 17, 18, 19)] == [16, 19, 20, 21]
+    assert G.data_index(0, [0]) == 1         # blocklisted head shifts all
+    # unsorted input handled: non-blocklisted = [0, 3, 4, 6, ...], s=3 -> 6
+    assert G.data_index(3, [1, 5, 2]) == 6
+
+
+def test_data_index_skips_exactly_the_blocklist():
+    """The mapped stream is the clean stream with blocklisted indices
+    dropped — the identity the bit-exactness tests rely on."""
+    bl = [2, 5, 6, 11]
+    mapped = [G.data_index(s, bl) for s in range(10)]
+    expect = [i for i in range(20) if i not in bl][:10]
+    assert mapped == expect
+
+
+def test_blocklisted_stream_yields_filtered_batches():
+    got = list()
+    stream = G.blocklisted_stream(lambda i: i * 10, 1, [2, 3])
+    for _ in range(4):
+        got.append(next(stream))
+    assert got == [10, 40, 50, 60]
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint retirement (rollback's first half)
+# ---------------------------------------------------------------------------
+
+def test_retire_steps_after(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    state = {"w": np.arange(4.0, dtype=np.float32)}
+    for s in (2, 4, 6, 8):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [2, 4, 6, 8]
+    assert mgr.retire_steps_after(4) == [6, 8]
+    assert mgr.all_steps() == [2, 4]
+    # idempotent; no-op when nothing newer
+    assert mgr.retire_steps_after(4) == []
+    restored, step = mgr.restore({"w": state["w"]})
+    assert step == 4
+    assert mgr.retire_steps_after(0) == [2, 4]
+    assert mgr.all_steps() == []

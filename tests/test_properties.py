@@ -193,6 +193,68 @@ def test_adamw_matches_reference(p0, g0, seed):
 
 
 # ---------------------------------------------------------------------------
+# in-graph skip-update guard (runtime/guard.py, docs/DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _rand_grad_tree(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {"a": jax.random.normal(ks[0], (3, 4), jnp.float32),
+            "b": {"w": jax.random.normal(ks[1], (5,), jnp.float32),
+                  "v": jax.random.normal(ks[2], (2, 2, 2), jnp.float32)}}
+
+
+@settings(**SET)
+@given(st.integers(0, 10_000), st.integers(0, 2), st.integers(0, 3),
+       st.sampled_from([np.nan, np.inf, -np.inf]))
+def test_guard_any_nonfinite_anywhere_skips_bit_unchanged(seed, leaf_i,
+                                                          elem_i, bad):
+    """A single non-finite element in ANY leaf forces update_ok=False, and a
+    skipped step passes params and every optimizer leaf through
+    bit-unchanged (the select must be where(), never multiply)."""
+    from repro.config import GuardConfig, RunConfig
+    from repro.optim import adamw
+    rc = RunConfig("t", "train", 8, 2, lr=1e-2)
+    gc = GuardConfig()
+    params = _rand_grad_tree(seed + 1)
+    st_ = adamw.init(params)
+    # one healthy step so the EWMA/moments are non-trivial state to preserve
+    params, st_, _ = adamw.update(params, _rand_grad_tree(seed + 2), st_, rc,
+                                  guard=gc)
+    grads = _rand_grad_tree(seed)
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    leaf = flat[leaf_i % len(flat)]
+    pos = np.unravel_index(elem_i % leaf.size, leaf.shape)
+    flat[leaf_i % len(flat)] = leaf.at[pos].set(bad)
+    grads = jax.tree_util.tree_unflatten(treedef, flat)
+    p2, s2, m = adamw.update(params, grads, st_, rc, guard=gc)
+    assert float(m["update_ok"]) == 0.0
+    assert float(m["update_skipped"]) == 1.0
+    assert float(m["nonfinite"]) == 1.0
+    for a, b in zip(jax.tree.leaves((p2, s2)), jax.tree.leaves((params, st_))):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SET)
+@given(st.integers(0, 10_000), st.floats(1.5, 50.0, allow_nan=False))
+def test_guard_spike_detection_monotone_in_factor(seed, ratio):
+    """If a grad norm is accepted at spike factor f, it is accepted at every
+    f' > f; if skipped, skipped at every f' < f — the predicate is monotone
+    in the factor, so tightening the guard never lets more through."""
+    from repro.config import GuardConfig
+    from repro.optim import adamw
+    ewma = jnp.float32(1.0)
+    gnorm = jnp.float32(ratio)
+    oks = []
+    for f in (1.01, 2.0, 5.0, 10.0, 100.0):
+        ok, finite = adamw.guard_predicate(gnorm, ewma,
+                                           GuardConfig(grad_spike_factor=f))
+        assert bool(finite)
+        oks.append(bool(ok))
+    assert oks == sorted(oks)          # False ... False True ... True
+    assert oks[-1]                     # factor 100 > max ratio 50: accepted
+
+
+# ---------------------------------------------------------------------------
 # checkpoint roundtrip over random pytrees is lossless + manifest-complete
 # ---------------------------------------------------------------------------
 
