@@ -83,20 +83,22 @@ import queue
 import re
 import shutil
 import threading
-import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
+from repro.checkpoint import wire
+
 _COPY_POOL: Optional[ThreadPoolExecutor] = None
 _WRITE_POOL: Optional[ThreadPoolExecutor] = None
 _POOL_LOCK = threading.Lock()
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
-MANIFEST = "MANIFEST.json"          # global (coordinator-published) manifest
-PARTIAL_MANIFEST = "manifest.json"  # per-writer partial manifest
+MANIFEST = wire.MANIFEST            # global (coordinator-published) manifest
+PARTIAL_MANIFEST = wire.PARTIAL_MANIFEST  # per-writer partial manifest
+_FLEET_DIR = ".fleet"               # writer-fleet scratch (runtime/procs.py)
 
 
 def _copy_pool() -> ThreadPoolExecutor:
@@ -151,21 +153,12 @@ def _leaf_paths(tree) -> Dict[str, Any]:
     return out
 
 
-def _npy_safe(dtype: np.dtype) -> bool:
-    """Can the ``.npy`` format round-trip this dtype?  ml_dtypes extension
-    types (bfloat16, float8_*) save fine but LOAD back as raw void."""
-    return np.dtype(dtype).isbuiltin == 1
-
-
-def _crc(data: bytes) -> int:
-    return zlib.crc32(data) & 0xFFFFFFFF
-
-
-def _shards_crc(shards: Dict[str, Dict]) -> int:
-    """Self-checksum of a partial manifest's shard table (canonical json) —
-    a torn/garbled manifest write fails this instead of passing coordinator
-    verification by accident."""
-    return _crc(json.dumps(shards, sort_keys=True).encode())
+# Format primitives live in checkpoint/wire.py (jax-free, shared with the
+# cross-process writer fleet so both runtimes emit bit-identical trees);
+# the local names are kept for callers and tests.
+_npy_safe = wire.npy_safe
+_crc = wire.crc
+_shards_crc = wire.shards_crc
 
 
 class CheckpointCorruptionError(RuntimeError):
@@ -233,8 +226,15 @@ class CheckpointManager:
                  durable: bool = False, writers: int = 1,
                  quorum: Optional[int] = None, verify: bool = True,
                  writer_map: Optional[Callable[[str], Optional[int]]] = None,
-                 writer_fault: Optional[Callable[[int, int], None]] = None):
+                 writer_fault: Optional[Callable[[int, int], None]] = None,
+                 writer_procs: bool = False, writer_timeout: float = 5.0,
+                 reassign: int = 1,
+                 proc_fault: Optional[Callable[[int, int],
+                                               Optional[Dict]]] = None):
         assert writers >= 1, f"writers={writers} must be >= 1"
+        assert writer_timeout > 0, (
+            f"writer_timeout={writer_timeout} must be > 0")
+        assert reassign >= 0, f"reassign={reassign} must be >= 0"
         self.dir = directory
         self.keep = keep
         self.durable = durable
@@ -245,6 +245,15 @@ class CheckpointManager:
         self.verify = verify
         self.writer_map = writer_map
         self.writer_fault = writer_fault
+        # cross-process writer fleet (runtime/procs.py, docs/DESIGN.md §9):
+        # each logical writer is its own OS process with a heartbeat lease;
+        # proc_fault(step, writer) -> fault spec dict or None is the
+        # process-level injection hook (FailureInjector.proc_fault)
+        self.writer_procs = writer_procs
+        self.writer_timeout = writer_timeout
+        self.reassign = reassign
+        self.proc_fault = proc_fault
+        self._fleet = None
         os.makedirs(directory, exist_ok=True)
         self._clean_stale_tmp()
 
@@ -253,11 +262,17 @@ class CheckpointManager:
         (in-flight or crashed writes, interrupted GC renames) and published
         -namespace step directories whose global manifest is absent or
         unparseable (a half-deleted step, a foreign dir squatting on the
-        name).  Safe only when no writer is active against this directory
-        (true at construction and after an abort drain)."""
+        name), plus writer-fleet scratch (``.fleet/`` heartbeats and
+        handover spill files from a SIGKILLed coordinator — its orphaned
+        writer children self-exit on the ppid check within a heartbeat
+        interval, runtime/procs.py).  Safe only when no writer is active
+        against this directory (true at construction and after an abort
+        drain, which fences the fleet first)."""
         for d in os.listdir(self.dir):
             p = os.path.join(self.dir, d)
             if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
+            elif d == _FLEET_DIR:
                 shutil.rmtree(p, ignore_errors=True)
             elif _STEP_RE.match(d) and os.path.isdir(p) \
                     and not self._manifest_complete(p):
@@ -267,10 +282,14 @@ class CheckpointManager:
     def _manifest_complete(step_dir: str) -> bool:
         """Does ``step_dir`` hold a parseable, complete global manifest?
         Never raises — torn json / missing file / permission errors all mean
-        "not a restorable step" (the tolerant-listing contract)."""
+        "not a restorable step" (the tolerant-listing contract).  The type
+        check matters: a foreign ``MANIFEST.json`` holding a JSON array /
+        string / null parses fine but is not a manifest, and must read as
+        "not restorable", not crash ``all_steps``."""
         try:
             with open(os.path.join(step_dir, MANIFEST)) as f:
-                return bool(json.load(f).get("complete"))
+                meta = json.load(f)
+            return isinstance(meta, dict) and bool(meta.get("complete"))
         except (OSError, ValueError):
             return False
 
@@ -307,12 +326,8 @@ class CheckpointManager:
 
     # -- writer side (phase 1: shards + partial manifest) ---------------
     def _write_leaf(self, path: str, arr: np.ndarray) -> Dict:
-        info: Dict[str, Any] = {"shape": list(arr.shape),
-                                "dtype": str(arr.dtype)}
-        if not _npy_safe(arr.dtype):   # bf16 etc: raw bytes + logical dtype
-            info["raw"] = True
-            arr = np.frombuffer(arr.tobytes(), np.uint8)
-        np.save(path, arr)
+        wire_arr, info = wire.leaf_wire(arr)
+        np.save(path, wire_arr)     # module-local np: tests fault-inject here
         with open(path, "rb") as f:    # checksum the on-disk container bytes
             data = f.read()
         info["bytes"] = len(data)
@@ -399,6 +414,112 @@ class CheckpointManager:
                     f"writer {writer} manifest records {info['bytes']}B")
         return shards
 
+    def _fan_out_threads(self, tmp: str, step: int,
+                         groups: List[List[str]],
+                         snap: Dict[str, np.ndarray],
+                         abort_check) -> Dict[int, BaseException]:
+        """Phase 1, thread runtime: run the writer group on the shared write
+        pool; returns the per-writer failure map (empty = all committed)."""
+        futs = [_write_pool().submit(self._run_writer, tmp, step, w,
+                                     groups[w], snap, abort_check)
+                for w in range(self.writers)]
+        failures: Dict[int, BaseException] = {}
+        for w, fut in enumerate(futs):
+            try:
+                fut.result()
+            except BaseException as e:
+                failures[w] = e
+        return failures
+
+    def _get_fleet(self):
+        from repro.runtime.procs import WriterFleet
+        if self._fleet is None:
+            self._fleet = WriterFleet(self.dir, self.writers,
+                                      timeout=self.writer_timeout,
+                                      reassign=self.reassign)
+        return self._fleet
+
+    def _fan_out_procs(self, tmp: str, step: int, groups: List[List[str]],
+                       snap: Dict[str, np.ndarray], abort_check
+                       ) -> Tuple[Dict[int, BaseException], Dict[int, str]]:
+        """Phase 1, process runtime (docs/DESIGN.md §9): hand the snapshot to
+        the writer fleet; heartbeat-lease supervision + orphan-shard
+        reassignment happen inside :meth:`WriterFleet.run_save`.  The
+        ``verify`` callback makes the fleet's commit criterion the SAME
+        disk verification the quorum gate uses — a writer that corrupted a
+        shard after checksumming it fails commit and is reassigned exactly
+        like a dead one."""
+        from repro.runtime.procs import FleetAborted
+        fleet = self._get_fleet()
+        try:
+            failed, reassigned = fleet.run_save(
+                tmp, step, groups, snap, durable=self.durable,
+                fault_for=self.proc_fault,
+                verify=lambda w: self._verify_partial(tmp, step, w),
+                abort_check=abort_check)
+        except FleetAborted:
+            raise _Aborted(step) from None
+        return ({w: RuntimeError(why) for w, why in failed.items()},
+                reassigned)
+
+    def quorum_gate(self, tmp: str, step: int, names: List[str],
+                    failures: Dict[int, BaseException]
+                    ) -> Dict[int, Dict[str, Dict]]:
+        """Phase 2 gate: re-verify every surviving writer's partial manifest
+        FROM DISK, then demand quorum AND full shard coverage.  Raises
+        :class:`QuorumError` on a torn step; returns the verified per-writer
+        shard tables on success."""
+        verified: Dict[int, Dict[str, Dict]] = {}
+        for w in range(self.writers):
+            if w not in failures:
+                verified[w] = self._verify_partial(tmp, step, w)
+        covered = set()
+        for shards in verified.values():
+            covered.update(shards)
+        missing = [n for n in names if n not in covered]
+        if len(verified) < self.quorum or missing:
+            why = "; ".join(
+                f"writer {w}: {type(e).__name__}: {e}"
+                for w, e in sorted(failures.items())) or "no writer died"
+            raise QuorumError(
+                f"step {step} torn: {len(verified)}/{self.writers} "
+                f"partial manifests verified (quorum {self.quorum}), "
+                f"{len(missing)} shards uncovered — {why}")
+        return verified
+
+    def _publish(self, tmp: str, final: str, step: int,
+                 verified: Dict[int, Dict[str, Dict]],
+                 failures: Dict[int, BaseException],
+                 reassigned: Dict[int, str],
+                 extra_meta: Optional[Dict] = None) -> str:
+        """Phase 2 publish: write the global manifest (tmp + ``os.replace``)
+        and atomically publish the step directory.  ``reassigned`` writers
+        are recorded in the manifest ONLY when non-empty, so a clean
+        fleet save is bit-identical to a thread-writer save."""
+        manifest: Dict[str, Dict] = {}
+        for w in sorted(verified):
+            manifest.update(verified[w])
+        meta = {"step": step, "writers": self.writers,
+                "quorum": self.quorum, "committed": sorted(verified),
+                "failed_writers": sorted(failures), "complete": True,
+                "manifest": manifest, **(extra_meta or {})}
+        if reassigned:
+            meta["reassigned"] = {str(w): why
+                                  for w, why in sorted(reassigned.items())}
+        gtmp = os.path.join(tmp, MANIFEST + ".tmp")
+        with open(gtmp, "w") as f:
+            json.dump(meta, f, sort_keys=True)
+            if self.durable:
+                f.flush()
+                os.fsync(f.fileno())
+        os.replace(gtmp, os.path.join(tmp, MANIFEST))
+        if self.durable:               # data durable BEFORE the publish
+            _fsync_path(tmp)
+        os.replace(tmp, final)                      # atomic publish
+        if self.durable:
+            _fsync_path(self.dir)        # the rename itself
+        return final
+
     def _write(self, step: int, snap: Dict[str, np.ndarray],
                extra_meta: Optional[Dict] = None, abort_check=None) -> str:
         tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
@@ -412,54 +533,18 @@ class CheckpointManager:
                                      self.writers, self.writer_map)
             groups = [[n for n in names if owner[n] == w]
                       for w in range(self.writers)]
-            futs = [_write_pool().submit(self._run_writer, tmp, step, w,
-                                         groups[w], snap, abort_check)
-                    for w in range(self.writers)]
-            failures: Dict[int, BaseException] = {}
-            for w, fut in enumerate(futs):
-                try:
-                    fut.result()
-                except BaseException as e:
-                    failures[w] = e
+            reassigned: Dict[int, str] = {}
+            if self.writer_procs:
+                failures, reassigned = self._fan_out_procs(
+                    tmp, step, groups, snap, abort_check)
+            else:
+                failures = self._fan_out_threads(tmp, step, groups, snap,
+                                                 abort_check)
             if any(isinstance(e, _Aborted) for e in failures.values()):
                 raise _Aborted(step)
-            # phase 2: quorum gate — verify every committed partial from
-            # disk, then publish iff quorum met AND coverage complete
-            verified: Dict[int, Dict[str, Dict]] = {}
-            for w in range(self.writers):
-                if w not in failures:
-                    verified[w] = self._verify_partial(tmp, step, w)
-            covered = set()
-            for shards in verified.values():
-                covered.update(shards)
-            missing = [n for n in names if n not in covered]
-            if len(verified) < self.quorum or missing:
-                why = "; ".join(
-                    f"writer {w}: {type(e).__name__}: {e}"
-                    for w, e in sorted(failures.items())) or "no writer died"
-                raise QuorumError(
-                    f"step {step} torn: {len(verified)}/{self.writers} "
-                    f"partial manifests verified (quorum {self.quorum}), "
-                    f"{len(missing)} shards uncovered — {why}")
-            manifest: Dict[str, Dict] = {}
-            for w in sorted(verified):
-                manifest.update(verified[w])
-            meta = {"step": step, "writers": self.writers,
-                    "quorum": self.quorum, "committed": sorted(verified),
-                    "failed_writers": sorted(failures), "complete": True,
-                    "manifest": manifest, **(extra_meta or {})}
-            gtmp = os.path.join(tmp, MANIFEST + ".tmp")
-            with open(gtmp, "w") as f:
-                json.dump(meta, f, sort_keys=True)
-                if self.durable:
-                    f.flush()
-                    os.fsync(f.fileno())
-            os.replace(gtmp, os.path.join(tmp, MANIFEST))
-            if self.durable:               # data durable BEFORE the publish
-                _fsync_path(tmp)
-            os.replace(tmp, final)                      # atomic publish
-            if self.durable:
-                _fsync_path(self.dir)        # the rename itself
+            verified = self.quorum_gate(tmp, step, names, failures)
+            self._publish(tmp, final, step, verified, failures, reassigned,
+                          extra_meta)
         except BaseException:
             # any failure — writer death, quorum miss, abort — leaves only
             # swept ground: the torn step must never be observable
@@ -543,10 +628,16 @@ class CheckpointManager:
         pass
 
     def abort(self):
+        """Fence: SIGKILL + reap + sweep the writer fleet (when one runs),
+        then sweep torn-step debris.  The next save respawns the fleet."""
+        if self._fleet is not None:
+            self._fleet.fence()
         self._clean_stale_tmp()
 
     def close(self):
-        pass
+        if self._fleet is not None:
+            self._fleet.close()
+            self._fleet = None
 
     # ------------------------------------------------------------------
     def restore(self, template, step: Optional[int] = None,
@@ -576,7 +667,10 @@ class CheckpointManager:
             raise CheckpointCorruptionError(
                 f"global manifest {os.path.join(d, MANIFEST)} is not valid "
                 f"JSON: {e}") from e
-        if not meta.get("complete"):
+        if not isinstance(meta, dict) or not meta.get("complete"):
+            # non-dict JSON (array/string/null) is a foreign file squatting
+            # on the manifest name, not a manifest — same refusal, no
+            # AttributeError
             raise CheckpointCorruptionError(
                 f"global manifest of step {step} is not marked complete — "
                 f"refusing a sub-quorum restore")
@@ -632,10 +726,17 @@ class AsyncCheckpointManager(CheckpointManager):
                  durable: bool = False, writers: int = 1,
                  quorum: Optional[int] = None, verify: bool = True,
                  writer_map: Optional[Callable[[str], Optional[int]]] = None,
-                 writer_fault: Optional[Callable[[int, int], None]] = None):
+                 writer_fault: Optional[Callable[[int, int], None]] = None,
+                 writer_procs: bool = False, writer_timeout: float = 5.0,
+                 reassign: int = 1,
+                 proc_fault: Optional[Callable[[int, int],
+                                               Optional[Dict]]] = None):
         super().__init__(directory, keep, durable=durable, writers=writers,
                          quorum=quorum, verify=verify, writer_map=writer_map,
-                         writer_fault=writer_fault)
+                         writer_fault=writer_fault,
+                         writer_procs=writer_procs,
+                         writer_timeout=writer_timeout, reassign=reassign,
+                         proc_fault=proc_fault)
         assert staging in ("host", "sync"), staging
         assert max_inflight >= 1, max_inflight
         self.staging = staging
@@ -720,8 +821,13 @@ class AsyncCheckpointManager(CheckpointManager):
         writer error is cleared with it: the dead incarnation's persistence
         failure is fenced exactly like its in-flight saves, so the NEXT
         incarnation starts clean instead of dying at its first checkpoint
-        boundary on a stale error (e.g. a recovered ENOSPC)."""
+        boundary on a stale error (e.g. a recovered ENOSPC).  With
+        ``writer_procs`` the fence is physical: every writer PROCESS is
+        SIGKILLed and reaped (runtime/procs.py) — an in-flight fleet save
+        observes the fence, raises, and its debris is swept below."""
         self._abort.set()
+        if self._fleet is not None:
+            self._fleet.fence()
         with self._cv:
             while self._inflight > 0:
                 self._cv.wait()
@@ -730,7 +836,8 @@ class AsyncCheckpointManager(CheckpointManager):
         self._clean_stale_tmp()
 
     def close(self):
-        """Drain (without raising) and stop the coordinator thread."""
+        """Drain (without raising), stop the coordinator thread, and shut
+        down the writer fleet if one is running."""
         if self._closed:
             return
         with self._cv:
@@ -739,24 +846,34 @@ class AsyncCheckpointManager(CheckpointManager):
         self._closed = True
         self._work.put(None)
         self._thread.join(timeout=60)
+        if self._fleet is not None:
+            self._fleet.close()
+            self._fleet = None
 
 
 def make_manager(directory: str, ccfg=None, *,
                  writer_map: Optional[Callable[[str], Optional[int]]] = None,
-                 writer_fault: Optional[Callable[[int, int], None]] = None
+                 writer_fault: Optional[Callable[[int, int], None]] = None,
+                 proc_fault: Optional[Callable[[int, int],
+                                               Optional[Dict]]] = None
                  ) -> CheckpointManager:
     """Build the manager a :class:`repro.config.CheckpointConfig` describes
     (``None`` → the synchronous single-writer default).  ``writer_map`` pins
     shards to writers (e.g. ``parallel/pipeline.stage_writer_map``);
-    ``writer_fault`` is the injection hook (``FailureInjector.check_writer``,
-    also wired automatically by ``train/loop.py`` when an injector is
-    active)."""
+    ``writer_fault`` is the thread-writer injection hook
+    (``FailureInjector.check_writer``) and ``proc_fault`` its process-fleet
+    sibling (``FailureInjector.proc_fault``, runtime/procs.py) — both also
+    wired automatically by ``train/loop.py`` when an injector is active."""
     if ccfg is None:
         return CheckpointManager(directory, writer_map=writer_map,
-                                 writer_fault=writer_fault)
+                                 writer_fault=writer_fault,
+                                 proc_fault=proc_fault)
     kw = dict(keep=ccfg.keep, durable=ccfg.durable, writers=ccfg.writers,
               quorum=ccfg.quorum, verify=ccfg.verify,
-              writer_map=writer_map, writer_fault=writer_fault)
+              writer_map=writer_map, writer_fault=writer_fault,
+              writer_procs=ccfg.writer_procs,
+              writer_timeout=ccfg.writer_timeout, reassign=ccfg.reassign,
+              proc_fault=proc_fault)
     if ccfg.async_:
         return AsyncCheckpointManager(directory,
                                       max_inflight=ccfg.max_inflight,

@@ -1,0 +1,108 @@
+"""Process-agnostic checkpoint wire format (jax-free, importable by spawn).
+
+The multi-writer on-disk protocol (docs/DESIGN.md §7) was designed to be
+process-agnostic: a "writer" is whoever writes ``writer_NN/leaf_*.npy``
+shards and then atomically publishes ``writer_NN/manifest.json``.  This
+module is the format's single source of truth for the pieces BOTH runtimes
+share — thread writers inside ``checkpoint/manager.py`` and the
+cross-process writer fleet (``runtime/procs.py``, docs/DESIGN.md §9) — so
+the two produce bit-identical trees:
+
+  * ``crc`` / ``shards_crc``: the shard checksum and the partial manifest's
+    self-checksum over its canonical-json shard table.
+  * ``leaf_wire``: the logical→wire lowering of one leaf (ml_dtypes
+    extension types like bfloat16 cannot round-trip ``.npy`` and are
+    lowered to raw uint8 bytes + the logical dtype string in the manifest).
+  * ``write_leaf`` / ``publish_partial``: shard persistence and the atomic
+    (tmp + ``os.replace``) partial-manifest publish, with the same
+    fsync-when-durable barriers as the thread path.
+
+Writer children import ONLY this module (plus numpy) — never jax — so a
+fleet child costs a numpy import to spawn, and the coordinator side is the
+only place device buffers or ml_dtypes scalars exist.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Dict, Tuple
+
+import numpy as np
+
+MANIFEST = "MANIFEST.json"          # global (coordinator-published) manifest
+PARTIAL_MANIFEST = "manifest.json"  # per-writer partial manifest
+
+
+def crc(data: bytes) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def shards_crc(shards: Dict[str, Dict]) -> int:
+    """Self-checksum of a partial manifest's shard table (canonical json) —
+    a torn/garbled manifest write fails this instead of passing coordinator
+    verification by accident."""
+    return crc(json.dumps(shards, sort_keys=True).encode())
+
+
+def npy_safe(dtype: np.dtype) -> bool:
+    """Can the ``.npy`` format round-trip this dtype?  ml_dtypes extension
+    types (bfloat16, float8_*) save fine but LOAD back as raw void."""
+    return np.dtype(dtype).isbuiltin == 1
+
+
+def fsync_path(path: str):
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def leaf_wire(arr: np.ndarray) -> Tuple[np.ndarray, Dict]:
+    """Lower one logical leaf to its wire form: the ndarray that is actually
+    ``np.save``d and the manifest info stub ({shape, dtype[, raw]}) that
+    describes how to lift it back.  The ``raw`` key is present ONLY for
+    non-round-trippable dtypes — key *presence* is part of the format, so
+    thread and process writers emit identical manifests."""
+    info: Dict = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
+    if not npy_safe(arr.dtype):    # bf16 etc: raw bytes + logical dtype
+        info["raw"] = True
+        arr = np.frombuffer(arr.tobytes(), np.uint8)
+    else:
+        # force C order WITHOUT np.ascontiguousarray: its contract is
+        # ndim >= 1, which would silently promote 0-d leaves (adamw's
+        # ``.step``) to shape (1,) and break restore's shape check
+        arr = np.asarray(arr, order="C")
+    return arr, info
+
+
+def write_leaf(path: str, wire_arr: np.ndarray,
+               durable: bool = False) -> Tuple[int, int]:
+    """Persist one wire-form shard; returns (bytes, crc32) of the on-disk
+    ``.npy`` container (the checksum covers container bytes, not payload)."""
+    np.save(path, wire_arr)
+    with open(path, "rb") as f:
+        data = f.read()
+    if durable:
+        fsync_path(path)
+    return len(data), crc(data)
+
+
+def publish_partial(wdir: str, step: int, writer: int,
+                    shards: Dict[str, Dict], durable: bool = False):
+    """Atomically publish a writer's partial manifest (tmp + ``os.replace``).
+    The gap between the last shard write and this publish is the torn-step
+    window the coordinator's quorum gate exists for."""
+    partial = {"writer": writer, "step": step, "shards": shards,
+               "crc32": shards_crc(shards)}
+    mtmp = os.path.join(wdir, PARTIAL_MANIFEST + ".tmp")
+    with open(mtmp, "w") as f:
+        json.dump(partial, f, sort_keys=True)
+        if durable:
+            f.flush()
+            os.fsync(f.fileno())
+    os.replace(mtmp, os.path.join(wdir, PARTIAL_MANIFEST))
+    if durable:
+        fsync_path(wdir)

@@ -271,6 +271,17 @@ class CheckpointConfig:
     ``quorum < writers`` only lets a save survive dead writers that owned
     zero shards.  ``verify`` re-checks every shard's byte length + crc32 on
     restore, failing loudly (naming the file) on corruption.
+
+    ``writer_procs`` (ISSUE 8) runs each logical writer as its own OS
+    process (runtime/procs.py, docs/DESIGN.md §9): the snapshot is handed
+    over through a shared-memory arena (spill-file fallback), each child
+    writes the same ``writer_NN/`` tree, and a heartbeat-lease layer
+    detects crashed / hung / slow writers — a dead writer's shard range is
+    reassigned to a surviving writer (up to ``reassign`` times per save)
+    before the quorum gate, so a ``kill -9`` mid-save degrades the save
+    instead of tearing it.  ``writer_timeout`` is both the lease deadline
+    (a writer whose heartbeat token stalls longer is SIGKILL-fenced) and
+    the slow-writer reporting threshold.
     """
     every: int = 50                  # save cadence in steps
     keep: int = 3                    # published checkpoints retained by GC
@@ -281,6 +292,9 @@ class CheckpointConfig:
     writers: int = 1                 # logical writer-group size
     quorum: Optional[int] = None     # partial manifests required (None: all)
     verify: bool = True              # checksum-verify shards on restore
+    writer_procs: bool = False       # writers as OS processes (fleet)
+    writer_timeout: float = 5.0      # heartbeat-lease deadline, seconds
+    reassign: int = 1                # orphan-range reassignments per save
 
     def __post_init__(self):
         assert self.every >= 1, f"ckpt every={self.every} must be >= 1"
@@ -293,6 +307,10 @@ class CheckpointConfig:
             assert 1 <= self.quorum <= self.writers, (
                 f"quorum={self.quorum} must be in [1, writers="
                 f"{self.writers}]")
+        assert self.writer_timeout > 0, (
+            f"writer_timeout={self.writer_timeout} must be > 0")
+        assert self.reassign >= 0, (
+            f"reassign={self.reassign} must be >= 0")
 
 
 # ---------------------------------------------------------------------------

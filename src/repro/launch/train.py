@@ -85,7 +85,9 @@ def _train_pipeline(cfg, pcfg, rc, mesh, args):
     ccfg = CheckpointConfig(every=args.ckpt_every, keep=args.ckpt_keep,
                             async_=not args.ckpt_sync, writers=writers,
                             quorum=args.ckpt_quorum or None,
-                            verify=not args.ckpt_no_verify)
+                            verify=not args.ckpt_no_verify,
+                            writer_procs=args.ckpt_procs,
+                            writer_timeout=args.ckpt_writer_timeout)
     ckpt = (make_manager(args.ckpt_dir, ccfg,
                          writer_map=PP.stage_writer_map(writers))
             if args.ckpt_dir else None)
@@ -154,6 +156,14 @@ def main():
                          "publishes (0 = all writers)")
     ap.add_argument("--ckpt-no-verify", action="store_true",
                     help="skip per-shard checksum verification on restore")
+    ap.add_argument("--ckpt-procs", action="store_true",
+                    help="run each logical checkpoint writer as its own OS "
+                         "process (heartbeat leases + orphan-shard "
+                         "reassignment; runtime/procs.py, docs/DESIGN.md §9)")
+    ap.add_argument("--ckpt-writer-timeout", type=float, default=5.0,
+                    help="heartbeat-lease deadline in seconds: a writer "
+                         "process whose heartbeat stalls longer is SIGKILL-"
+                         "fenced and its shard range reassigned")
     ap.add_argument("--guard", action="store_true",
                     help="arm the self-healing guard: in-graph NaN/spike "
                          "skip-update + loss-spike divergence detection "
@@ -236,7 +246,9 @@ def main():
                             async_=not args.ckpt_sync,
                             writers=args.ckpt_writers or 1,
                             quorum=args.ckpt_quorum or None,
-                            verify=not args.ckpt_no_verify)
+                            verify=not args.ckpt_no_verify,
+                            writer_procs=args.ckpt_procs,
+                            writer_timeout=args.ckpt_writer_timeout)
     ckpt = make_manager(args.ckpt_dir, ccfg) if args.ckpt_dir else None
     start = 0
     if ckpt is not None and ckpt.latest_step() is not None:

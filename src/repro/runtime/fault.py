@@ -8,20 +8,28 @@ implemented (all exercised by tests/test_fault.py and examples/elastic_restart.p
    (state, step), and the data pipeline is seekable (data/synthetic.batch_at),
    so a restart resumes bit-exact from the last checkpoint.  Saves are
    *asynchronous* by default (AsyncCheckpointManager: host-arena snapshot on
-   the step boundary, persistence on background threads) and *multi-writer*
+   the step boundary, persistence in the background) and *multi-writer*
    (a writer group of N logical writers — one per pipeline stage/pod —
    persists disjoint shard sets with per-shard checksums; a coordinator
    publishes the step's global manifest only after a quorum of partial
-   manifests verified with full shard coverage, docs/DESIGN.md §7).  The
-   supervisor must therefore fence the WHOLE writer group on failure:
-   ``run_supervised(ckpt=...)`` calls ``ckpt.abort()`` when an incarnation
-   dies, which discards queued snapshots from the dead incarnation,
-   interrupts every in-flight writer between shards, and sweeps torn-step
-   debris (``step_K.tmp``, sub-quorum step dirs) — a restart only ever
-   restores a quorum-published step, and restore checksum-verifies every
-   shard before ``device_put`` (``FailureInjector.check_writer`` injects a
-   single-writer death inside the torn window to prove this).  Restore
-   keeps the elastic re-sharding path (point 3) untouched.
+   manifests verified with full shard coverage, docs/DESIGN.md §7).  With
+   ``CheckpointConfig.writer_procs`` each logical writer is its own OS
+   PROCESS (runtime/procs.py, docs/DESIGN.md §9): heartbeat leases detect
+   crashed (``kill -9``), hung (SIGSTOP → SIGKILL fence) and slow writers,
+   and a dead writer's shard range is REASSIGNED to a survivor before the
+   quorum gate — a single writer death degrades the save instead of
+   tearing it, with QuorumError as the backstop.  The supervisor must
+   still fence the WHOLE writer group on failure: ``run_supervised(ckpt=
+   ...)`` calls ``ckpt.abort()`` when an incarnation dies, which discards
+   queued snapshots from the dead incarnation, interrupts every in-flight
+   writer between shards (SIGKILL + reap for process writers), and sweeps
+   torn-step debris (``step_K.tmp``, sub-quorum step dirs, ``.fleet``
+   scratch) — a restart only ever restores a quorum-published step, and
+   restore checksum-verifies every shard before ``device_put``
+   (``FailureInjector.check_writer`` injects a thread-writer death inside
+   the torn window, ``FailureInjector.proc_fault`` injects process-level
+   kill9/sigstop/slow/corrupt faults, to prove this).  Restore keeps the
+   elastic re-sharding path (point 3) untouched.
 
 2. **Failure detection** — ``runtime/guard.Watchdog`` is the per-step hang
    detector: the train loop arms it at the top of each step and disarms once
@@ -78,12 +86,29 @@ class FailureInjector:
     the manager's ``writer_fault`` hook, which fires between a writer's
     shard writes and its partial-manifest publish: the torn-step window the
     quorum publish protocol exists for (checkpoint/manager.py).
+
+    ``proc_fail_at`` maps step -> (writer, kind) and injects a PROCESS-level
+    fault into that writer of the cross-process fleet (:meth:`proc_fault`,
+    wired as the manager's ``proc_fault`` hook; runtime/procs.py executes
+    the spec in the child, inside the same torn window).  Kinds:
+    ``kill9`` (SIGKILL self), ``sigstop`` (hang until the lease fences it),
+    ``slow`` (sleep with heartbeats flowing — must NOT be killed) and
+    ``corrupt`` (truncate a shard after checksumming — the disk-verified
+    gate must reject it).  A third tuple element, if given, is a dict of
+    extra spec fields (e.g. ``{"seconds": 2.0}`` for ``slow``).
     """
 
+    PROC_KINDS = ("kill9", "sigstop", "slow", "corrupt")
+
     def __init__(self, fail_at: Optional[Dict[int, str]] = None,
-                 writer_fail_at: Optional[Dict[int, int]] = None):
+                 writer_fail_at: Optional[Dict[int, int]] = None,
+                 proc_fail_at: Optional[Dict[int, tuple]] = None):
         self.fail_at = dict(fail_at or {})
         self.writer_fail_at = dict(writer_fail_at or {})
+        self.proc_fail_at = dict(proc_fail_at or {})
+        for spec in self.proc_fail_at.values():
+            assert spec[1] in self.PROC_KINDS, (
+                f"proc fault kind {spec[1]!r} not in {self.PROC_KINDS}")
         self.log: List[str] = []
 
     def check(self, step: int):
@@ -102,6 +127,22 @@ class FailureInjector:
             raise RuntimeError(
                 f"injected failure: checkpoint writer {writer} died at step "
                 f"{step} (post shard-write, pre manifest-publish)")
+
+    def proc_fault(self, step: int, writer: int) -> Optional[Dict]:
+        """Process-fleet fault hook: returns the fault SPEC (dict) for the
+        fleet to execute inside writer ``writer``'s child process during the
+        save of ``step`` — the coordinator cannot raise on the child's
+        behalf, it can only ship instructions (runtime/procs.inject_fault).
+        One-shot per step, mirroring :meth:`check_writer`."""
+        spec = self.proc_fail_at.get(step)
+        if spec is None or spec[0] != writer:
+            return None
+        del self.proc_fail_at[step]
+        kind = spec[1]
+        extra = dict(spec[2]) if len(spec) > 2 else {}
+        self.log.append(
+            f"step {step}: injected proc fault {kind} into writer {writer}")
+        return {"kind": kind, **extra}
 
 
 @dataclass
@@ -194,10 +235,19 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
     restarted incarnation's data iterator (``guard.blocklisted_stream``)
     skips those batches.  Both hooks are looked up dynamically so fakes and
     managers without a directory still supervise cleanly.
+
+    **Resume-step pinning**: after the fence (and the rollback retire, when
+    one ran), the supervisor reads ``ckpt.latest_step()`` ONCE and passes
+    that exact step to ``make_state`` — the restore target is decided at
+    fence time, under the post-abort/post-retire view of the directory,
+    so a concurrent lister/GC between fence and restore cannot move the
+    resume point.  The first (cold-start) incarnation, and managers/fakes
+    without ``latest_step``, still get ``None`` (restore-latest-or-init).
     """
     restarts = 0
+    resume_step = None
     while True:
-        state, start = make_state(None)
+        state, start = make_state(resume_step)
         inc = Incarnation(index=restarts, start_step=start)
         if on_restart and restarts:
             on_restart(inc)
@@ -219,6 +269,9 @@ def run_supervised(make_state: Callable[[Optional[int]], tuple],
                     d = getattr(ckpt, "dir", None)
                     if d:
                         publish_blocklist(d, e.data_indices)
+                # pin the restore target now, post-fence/post-retire
+                latest = getattr(ckpt, "latest_step", None)
+                resume_step = latest() if callable(latest) else None
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"exceeded {max_restarts} restarts; last error: {e}")

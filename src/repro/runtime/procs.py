@@ -1,0 +1,672 @@
+"""Cross-process checkpoint writer fleet (docs/DESIGN.md §9).
+
+PR 6 made every checkpoint save a *writer group*: N logical writers persist
+disjoint shard sets and a coordinator publishes only after a disk-verified
+quorum with full coverage.  But those writers were threads — one ``kill -9``
+took out the whole group, which is exactly the failure model Hecaton's
+per-pod controllers must survive.  This module runs each logical writer as
+its own OS process against shared storage, with the liveness + work-
+reassignment layer that turns "one writer died → torn step → restart" into
+"one writer died → degraded save still publishes with full coverage".
+
+The on-disk protocol is UNCHANGED (``writer_NN/`` shards + partial
+manifests, ``checkpoint/wire.py`` is the shared format module): a tree
+published by the fleet is bit-identical to one published by the thread
+writers, and the coordinator's quorum gate / restore verification
+(``checkpoint/manager.py``) stay the single authority on what publishes.
+
+Protocol (docs/DESIGN.md §9 for the proof obligations):
+
+  * **Spawn**: ``WriterFleet`` forks one child per writer slot via the
+    ``spawn`` context (no inherited jax/runtime state; children import only
+    numpy + ``checkpoint/wire``).  The fleet is persistent across saves —
+    spawn cost is paid once, not per boundary.
+  * **Handover**: per save, the coordinator packs every leaf's wire bytes
+    into one contiguous arena — a ``multiprocessing.shared_memory`` segment
+    when available, a spill file under ``<ckpt_dir>/.fleet/`` otherwise
+    (``REPRO_CKPT_HANDOVER=spill`` forces the fallback) — and sends each
+    child its task: writer identity, shard names, and (offset, nbytes,
+    wire dtype/shape) views into the arena.  Children never see pytrees,
+    device buffers, or ml_dtypes values.  The arena is PERSISTENT and
+    grow-only: allocated on the first save, reused (never unlinked)
+    across saves, so the steady-state handover is one warm memcpy —
+    first-touch page faults on a fresh segment cost ~100x the copy
+    itself and are paid once, not per boundary (the
+    ``ckpt_multiwriter_procs_*`` bench rows gate this at <= 1.3x the
+    thread-writer save).
+  * **Heartbeat leases**: each child runs a daemon thread that bumps a
+    sequence token into ``.fleet/hb_NN`` (tmp + ``os.replace``) every
+    ``hb_interval``; the coordinator-side :class:`LeaseTable` treats a
+    *token change* as progress, timed against the COORDINATOR's monotonic
+    clock — no cross-process clock comparison.  A slot whose token does not
+    advance within ``timeout`` is hung (``SIGSTOP``, a wedged filesystem
+    call): the coordinator SIGKILL-fences it and treats its work as failed.
+    A slot whose process has exited (nonzero exit, ``kill -9``) fails
+    immediately; a slot that heartbeats but exceeds ``timeout`` without
+    replying is merely *slow* — recorded in ``events``, never killed.
+  * **Orphan-shard reassignment**: a failed writer's shard range is wiped
+    (``writer_NN/`` may hold torn shards) and re-dispatched to a surviving
+    child, which rewrites it UNDER THE ORIGINAL writer identity — the
+    published tree is indistinguishable from one where that writer lived
+    (modulo the global manifest's ``reassigned`` record).  Reassignment is
+    bounded by the ``reassign`` budget per save; when the budget or the
+    fleet is exhausted, the writer stays failed and the quorum gate decides
+    (QuorumError is the backstop, exactly as before).  A writer's partial
+    manifest must pass the coordinator's disk verification (the ``verify``
+    callback) to count as committed — a writer that *corrupts* a shard
+    after checksumming it is detected and reassigned like a dead one.
+  * **Fence**: :meth:`WriterFleet.fence` SIGKILLs every child (SIGKILL
+    lands on SIGSTOPped processes too), reaps them, and removes heartbeat
+    + arena scratch; an in-flight :meth:`run_save` observes the fence and
+    raises :class:`FleetAborted`.  ``CheckpointManager.abort`` fences the
+    fleet before sweeping ``.tmp`` debris, so a restart never races a
+    half-dead fleet.  Children detect a SIGKILLed *coordinator* themselves:
+    the heartbeat thread exits the process when ``os.getppid`` changes, so
+    orphans stop writing within one heartbeat interval and the next
+    incarnation's ``_clean_stale_tmp`` sweeps ``.fleet`` and ``step_*.tmp``
+    debris before restoring.
+"""
+
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+from multiprocessing import connection as mp_connection
+import shutil
+import signal
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import wire
+
+FLEET_DIR = ".fleet"                 # scratch under the checkpoint root
+_SPAWN_WAIT = 60.0                   # cap on waiting for a child's 1st beat
+_ORPHAN_EXIT = 3                     # child exit code: coordinator vanished
+
+
+class FleetAborted(Exception):
+    """An in-flight fleet save was interrupted by a fence/abort."""
+
+
+class FleetError(RuntimeError):
+    """The fleet itself is unusable (spawn failed, every child dead)."""
+
+
+# ---------------------------------------------------------------------------
+# heartbeat files (child writes, coordinator reads)
+# ---------------------------------------------------------------------------
+
+def _beat(path: str, pid: int, seq: int):
+    tmp = f"{path}.{pid}.tmp"
+    with open(tmp, "w") as f:
+        f.write(f"{pid} {seq}")
+    os.replace(tmp, path)
+
+
+def read_heartbeat(path: str) -> Optional[Tuple[int, int]]:
+    """(pid, seq) or None — unreadable/garbled means "no beat yet" (the
+    lease, not the parser, decides liveness)."""
+    try:
+        with open(path) as f:
+            pid_s, seq_s = f.read().split()
+        return int(pid_s), int(seq_s)
+    except (OSError, ValueError):
+        return None
+
+
+class LeaseTable:
+    """Coordinator-side liveness ledger: token-change-as-progress.
+
+    ``observe(slot, token, now)`` records the current heartbeat token for a
+    slot; the lease clock for that slot resets only when the token CHANGES.
+    ``expired(slot, now)`` is True once ``timeout`` of coordinator-monotonic
+    time passes without a token change — no cross-process clock is ever
+    compared, so coordinator/child clock skew cannot forge or break a lease.
+    ``start`` opens a lease at dispatch time (a child that never beats at
+    all must still expire).  Pure (callers supply ``now``) so the property
+    tests drive arbitrary schedules through it (tests/test_properties.py).
+    """
+
+    def __init__(self, timeout: float):
+        assert timeout > 0, f"lease timeout={timeout} must be > 0"
+        self.timeout = timeout
+        self._last: Dict[int, Tuple[Any, float]] = {}
+
+    def start(self, slot: int, now: float):
+        self._last.setdefault(slot, (None, now))
+
+    def observe(self, slot: int, token: Any, now: float):
+        cur = self._last.get(slot)
+        if cur is None or cur[0] != token:
+            self._last[slot] = (token, now)
+
+    def expired(self, slot: int, now: float) -> bool:
+        cur = self._last.get(slot)
+        return cur is not None and (now - cur[1]) > self.timeout
+
+    def drop(self, slot: int):
+        self._last.pop(slot, None)
+
+
+# ---------------------------------------------------------------------------
+# snapshot handover arena (coordinator packs, children attach read-only)
+# ---------------------------------------------------------------------------
+
+class _Arena:
+    """One contiguous byte region both sides can map.  Owned by the fleet
+    and reused across saves (grow-only) — fresh segments pay first-touch
+    page faults worth ~100x the warm memcpy."""
+
+    def __init__(self, kind: str, ref: str, buf, owner):
+        self.kind = kind          # "shm" | "spill"
+        self.ref = ref            # shm name | spill file path
+        self.buf = buf            # writable memoryview (coordinator side)
+        self.capacity = len(buf)
+        self._owner = owner       # SharedMemory | file descriptor int
+
+    def handle(self) -> Tuple[str, str]:
+        return (self.kind, self.ref)
+
+    def close(self):
+        try:
+            if self.kind == "shm":
+                self.buf.release()
+                self._owner.close()
+                self._owner.unlink()
+            else:
+                self.buf.release()
+                os.close(self._owner)
+                os.unlink(self.ref)
+        except (OSError, BufferError, ValueError):
+            pass                  # already fenced/swept
+
+
+def make_arena(total: int, scratch: str, handover: str) -> _Arena:
+    """Create an arena: shared memory preferred, spill file under
+    ``scratch`` when shm is unavailable or ``handover="spill"``."""
+    if handover != "spill":
+        try:
+            from multiprocessing import shared_memory
+            seg = shared_memory.SharedMemory(create=True, size=max(1, total))
+            return _Arena("shm", seg.name, seg.buf, seg)
+        except (ImportError, OSError):
+            pass                  # no /dev/shm etc — spill below
+    path = os.path.join(scratch, f"handover_{os.getpid()}_{time.time_ns()}")
+    fd = os.open(path, os.O_CREAT | os.O_RDWR | os.O_EXCL, 0o600)
+    os.ftruncate(fd, max(1, total))
+    import mmap
+    m = mmap.mmap(fd, max(1, total))
+    return _Arena("spill", path, memoryview(m), fd)
+
+
+def attach_arena(handle: Tuple[str, str]):
+    """Child side: map the arena read-only; returns (closer, buffer)."""
+    kind, ref = handle
+    if kind == "shm":
+        from multiprocessing import shared_memory
+        # NOTE: attach re-registers the segment with the resource tracker,
+        # but spawn children share the coordinator's tracker process and its
+        # cache is a set — the duplicate collapses, and the coordinator's
+        # unlink clears it.  An explicit child-side unregister would double-
+        # remove and make the tracker log KeyErrors.
+        seg = shared_memory.SharedMemory(name=ref)
+        return seg.close, seg.buf
+    mm = np.memmap(ref, dtype=np.uint8, mode="r")
+    return (lambda: None), memoryview(mm)
+
+
+# ---------------------------------------------------------------------------
+# child process
+# ---------------------------------------------------------------------------
+
+def inject_fault(spec: Dict[str, Any], wdir: str, shards: Dict[str, Dict]):
+    """Execute an injected process-level fault inside the torn window (shards
+    on disk, partial manifest unpublished) — ``runtime/fault.FailureInjector``
+    builds the spec on the coordinator, this runs it in the child:
+
+      kill9    SIGKILL self: the crashed-writer path (no exit handlers run).
+      sigstop  SIGSTOP self: the hung-writer path — the heartbeat thread
+               freezes with the process, the lease expires, the coordinator
+               SIGKILL-fences us.
+      slow     sleep ``seconds`` with heartbeats still flowing: must NOT be
+               killed, only logged as slow.
+      corrupt  truncate the last shard by one byte AFTER its checksum was
+               recorded, then publish normally: the coordinator's disk
+               verification must reject the partial (the shard's on-disk
+               length no longer matches) and reassign.
+    """
+    kind = spec.get("kind")
+    if kind == "kill9":
+        os.kill(os.getpid(), signal.SIGKILL)
+    elif kind == "sigstop":
+        os.kill(os.getpid(), signal.SIGSTOP)
+    elif kind == "slow":
+        time.sleep(float(spec.get("seconds", 1.0)))
+    elif kind == "corrupt":
+        if shards:
+            last = sorted(shards)[-1]
+            path = os.path.join(os.path.dirname(wdir), shards[last]["file"])
+            with open(path, "r+b") as f:
+                f.truncate(max(0, os.path.getsize(path) - 1))
+    else:
+        raise ValueError(f"unknown injected fault kind {kind!r}")
+
+
+def run_writer_task(task: Dict[str, Any]) -> int:
+    """Execute one writer assignment: materialize each arena view, persist
+    the shards, run the fault hook in the torn window, publish the partial
+    manifest.  Returns the shard count.  Identical bytes to the thread
+    writer path — both sides lower through ``checkpoint/wire``."""
+    closer, buf = attach_arena(task["arena"])
+    try:
+        wtag = f"writer_{task['writer']:02d}"
+        wdir = os.path.join(task["tmp"], wtag)
+        os.makedirs(wdir, exist_ok=True)
+        shards: Dict[str, Dict] = {}
+        for i, ent in enumerate(task["entries"]):
+            view = buf[ent["offset"]:ent["offset"] + ent["nbytes"]]
+            arr = np.frombuffer(view, dtype=np.dtype(ent["wire_dtype"])
+                                ).reshape(ent["wire_shape"])
+            nbytes, c = wire.write_leaf(
+                os.path.join(wdir, f"leaf_{i:05d}.npy"), arr,
+                durable=task["durable"])
+            info = dict(ent["info"])
+            info["bytes"] = nbytes
+            info["crc32"] = c
+            info["file"] = f"{wtag}/leaf_{i:05d}.npy"
+            info["writer"] = task["writer"]
+            shards[ent["name"]] = info
+            del arr, view          # release arena refs before closer()
+        # >>> shards on disk; partial manifest NOT yet published <<<
+        if task.get("fault"):
+            inject_fault(task["fault"], wdir, shards)
+        wire.publish_partial(wdir, task["step"], task["writer"], shards,
+                             durable=task["durable"])
+        return len(shards)
+    finally:
+        closer()
+
+
+def _writer_child_main(conn, parent_pid: int, hb_path: str,
+                       hb_interval: float):
+    """Child entrypoint: heartbeat daemon + serial task loop on the pipe.
+
+    The heartbeat thread is also the orphan detector: when ``os.getppid()``
+    stops matching the coordinator (it was SIGKILLed — no fence ran), the
+    child hard-exits instead of writing into a directory the next
+    incarnation is about to sweep."""
+    def beat_loop():
+        pid, seq = os.getpid(), 0
+        while True:
+            if os.getppid() != parent_pid:
+                os._exit(_ORPHAN_EXIT)
+            seq += 1
+            try:
+                _beat(hb_path, pid, seq)
+            except OSError:
+                pass               # scratch swept mid-beat: orphaned soon
+            time.sleep(hb_interval)
+
+    threading.Thread(target=beat_loop, daemon=True,
+                     name="ckpt-heartbeat").start()
+    while True:
+        try:
+            task = conn.recv()
+        except (EOFError, OSError):
+            os._exit(0)            # coordinator closed the pipe
+        if task is None:
+            os._exit(0)            # graceful shutdown
+        try:
+            n = run_writer_task(task)
+            reply = ("ok", task["writer"], n)
+        except BaseException as e:  # noqa: BLE001 — child must report, not die
+            reply = ("err", task["writer"], f"{type(e).__name__}: {e}")
+        try:
+            conn.send(reply)
+        except (OSError, BrokenPipeError):
+            os._exit(0)
+
+
+# ---------------------------------------------------------------------------
+# coordinator
+# ---------------------------------------------------------------------------
+
+class WriterFleet:
+    """Supervisor for one checkpoint directory's writer processes.
+
+    One slot per logical writer; slots are respawned between saves, never
+    during one (a mid-save respawn would race the step's arena lifetime —
+    reassignment to a *surviving* slot covers the work instead)."""
+
+    def __init__(self, directory: str, writers: int, *,
+                 timeout: float = 5.0, reassign: int = 1,
+                 hb_interval: Optional[float] = None,
+                 handover: Optional[str] = None):
+        assert writers >= 1, writers
+        assert timeout > 0, timeout
+        assert reassign >= 0, reassign
+        self.dir = directory
+        self.writers = writers
+        self.timeout = timeout
+        self.reassign = reassign
+        self.hb_interval = (hb_interval if hb_interval is not None
+                            else min(0.5, max(0.02, timeout / 10.0)))
+        self.handover = (handover if handover is not None
+                         else os.environ.get("REPRO_CKPT_HANDOVER", "shm"))
+        self.events: List[str] = []
+        self._ctx = mp.get_context("spawn")
+        self._procs: Dict[int, Any] = {}
+        self._conns: Dict[int, Any] = {}
+        self._fenced = threading.Event()
+        self._lock = threading.Lock()
+        self._arena: Optional[_Arena] = None   # persistent, grow-only
+        self._saving = False
+
+    # -- lifecycle -----------------------------------------------------
+    def _scratch(self) -> str:
+        return os.path.join(self.dir, FLEET_DIR)
+
+    def _hb_path(self, slot: int) -> str:
+        return os.path.join(self._scratch(), f"hb_{slot:02d}")
+
+    def _spawn_slot(self, slot: int):
+        parent_conn, child_conn = self._ctx.Pipe()
+        hb = self._hb_path(slot)
+        try:
+            os.remove(hb)
+        except OSError:
+            pass
+        p = self._ctx.Process(
+            target=_writer_child_main,
+            args=(child_conn, os.getpid(), hb, self.hb_interval),
+            name=f"ckpt-writer-{slot:02d}", daemon=True)
+        p.start()
+        child_conn.close()
+        self._procs[slot] = p
+        self._conns[slot] = parent_conn
+
+    def _reap_slot(self, slot: int):
+        p = self._procs.pop(slot, None)
+        conn = self._conns.pop(slot, None)
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:
+                pass
+        if p is not None:
+            if p.exitcode is None:
+                try:
+                    os.kill(p.pid, signal.SIGKILL)
+                except OSError:
+                    pass
+            p.join(timeout=10)
+        try:
+            os.remove(self._hb_path(slot))
+        except OSError:
+            pass
+
+    def ensure_spawned(self):
+        """Bring the fleet to full strength (full slots, first beat seen) —
+        called at the top of every save, so a save after a fence or a slot
+        death starts with a fresh fleet."""
+        with self._lock:
+            self._fenced.clear()
+            for slot in range(self.writers):
+                p = self._procs.get(slot)
+                if p is None or p.exitcode is not None:
+                    if p is not None:
+                        self._reap_slot(slot)
+                    os.makedirs(self._scratch(), exist_ok=True)
+                    self._spawn_slot(slot)
+            deadline = time.monotonic() + _SPAWN_WAIT
+            for slot in range(self.writers):
+                while read_heartbeat(self._hb_path(slot)) is None:
+                    if self._procs[slot].exitcode is not None:
+                        raise FleetError(
+                            f"writer slot {slot} died during spawn "
+                            f"(exit {self._procs[slot].exitcode})")
+                    if time.monotonic() > deadline:
+                        raise FleetError(
+                            f"writer slot {slot} produced no heartbeat "
+                            f"within {_SPAWN_WAIT}s of spawn")
+                    time.sleep(0.01)
+
+    def fence(self):
+        """SIGKILL + reap every child and remove fleet scratch.  Safe from
+        any thread; an in-flight :meth:`run_save` raises
+        :class:`FleetAborted` at its next poll."""
+        self._fenced.set()
+        with self._lock:
+            for slot in list(self._procs):
+                self._reap_slot(slot)
+            # a mid-save fence leaves the arena to run_save's own
+            # exception path (its views may still be live in _pack)
+            if not self._saving and self._arena is not None:
+                self._arena.close()
+                self._arena = None
+            shutil.rmtree(self._scratch(), ignore_errors=True)
+
+    def close(self):
+        """Graceful shutdown: ask children to exit, then fence stragglers."""
+        with self._lock:
+            for slot, conn in list(self._conns.items()):
+                try:
+                    conn.send(None)
+                except (OSError, BrokenPipeError):
+                    pass
+            for slot, p in list(self._procs.items()):
+                p.join(timeout=10)
+        self.fence()
+
+    def alive_slots(self) -> List[int]:
+        return [s for s, p in self._procs.items() if p.exitcode is None]
+
+    # -- the save ------------------------------------------------------
+    def _ensure_arena(self, total: int) -> _Arena:
+        """Persistent handover arena: reuse while capacity suffices, grow
+        by replacement otherwise.  Reuse is the whole perf story — the
+        warm memcpy into mapped pages is ~100x cheaper than first-touch
+        faulting a fresh segment every save."""
+        a = self._arena
+        if a is not None and a.capacity >= total:
+            return a
+        if a is not None:
+            a.close()
+            self._arena = None
+        self._arena = make_arena(total, self._scratch(), self.handover)
+        return self._arena
+
+    def _drop_arena(self):
+        if self._arena is not None:
+            self._arena.close()
+            self._arena = None
+
+    def _pack(self, groups: List[List[str]],
+              snap: Dict[str, np.ndarray],
+              entries: List[List[Dict]],
+              on_group: Optional[Callable[[int], None]] = None) -> _Arena:
+        """Lower every leaf to wire form into the persistent arena.
+
+        Appends writer ``w``'s entry list (carrying (offset, nbytes) arena
+        views) into ``entries`` and calls ``on_group(w)`` the moment that
+        slice is fully packed — the caller dispatches ``w`` while later
+        groups are still copying, so the pack overlaps child I/O instead
+        of preceding all of it."""
+        wire_arrs: Dict[str, Tuple[np.ndarray, Dict]] = {}
+        total = 0
+        for g in groups:
+            for name in g:
+                wa, info = wire.leaf_wire(snap[name])
+                wire_arrs[name] = (wa, info)
+                total += wa.nbytes
+        arena = self._ensure_arena(total)
+        try:
+            offset = 0
+            for wi, g in enumerate(groups):
+                ents = []
+                for name in g:
+                    wa, info = wire_arrs[name]
+                    nb = wa.nbytes
+                    if nb:
+                        dst = np.frombuffer(arena.buf, dtype=np.uint8,
+                                            count=nb, offset=offset)
+                        # reshape BEFORE view: a 0-d leaf cannot change
+                        # itemsize via .view, but its (1,) reshape can
+                        np.copyto(dst, wa.reshape(-1).view(np.uint8))
+                        del dst
+                    ents.append({"name": name, "offset": offset,
+                                 "nbytes": nb,
+                                 "wire_dtype": str(wa.dtype),
+                                 "wire_shape": list(wa.shape),
+                                 "info": info})
+                    offset += nb
+                entries.append(ents)
+                if on_group is not None:
+                    on_group(wi)
+        except BaseException:
+            self._drop_arena()
+            raise
+        return arena
+
+    def run_save(self, tmp: str, step: int, groups: List[List[str]],
+                 snap: Dict[str, np.ndarray], *, durable: bool = False,
+                 fault_for: Optional[Callable[[int, int],
+                                              Optional[Dict]]] = None,
+                 verify: Optional[Callable[[int], Any]] = None,
+                 abort_check: Optional[Callable[[], bool]] = None,
+                 ) -> Tuple[Dict[int, str], Dict[int, str]]:
+        """Fan one save out over the fleet; supervise to completion.
+
+        Returns ``(failures, reassigned)``: writers with no verified partial
+        after the reassignment budget, and writers whose range WAS recovered
+        (value = why the original owner failed).  Raises
+        :class:`FleetAborted` on fence/abort, :class:`FleetError` when the
+        whole fleet is gone mid-save."""
+        self.ensure_spawned()
+        self._saving = True       # fence defers arena teardown to us
+        lease = LeaseTable(self.timeout)
+        now = time.monotonic()
+        pending: Dict[int, int] = {}        # writer -> slot running it
+        dispatched_at: Dict[int, float] = {}
+        failures: Dict[int, str] = {}
+        reassigned: Dict[int, str] = {}
+        slow_logged: set = set()
+        budget = self.reassign
+        entries: List[List[Dict]] = []      # filled group-by-group by _pack
+
+        def dispatch(writer: int, slot: int, fault: Optional[Dict]):
+            if self._fenced.is_set():
+                raise FleetAborted(step)
+            task = {"step": step, "tmp": tmp, "writer": writer,
+                    "durable": durable, "arena": self._arena.handle(),
+                    "entries": entries[writer], "fault": fault}
+            self._conns[slot].send(task)
+            pending[writer] = slot
+            dispatched_at[writer] = time.monotonic()
+            lease.start(slot, time.monotonic())
+
+        def fail_writer(writer: int, why: str):
+            """Reassign within budget, else record the failure."""
+            nonlocal budget
+            self.events.append(f"step {step}: writer {writer} failed: {why}")
+            alive = self.alive_slots()
+            if budget > 0 and alive:
+                budget -= 1
+                # the dead owner may have left torn shards — wipe the range
+                shutil.rmtree(os.path.join(tmp, f"writer_{writer:02d}"),
+                              ignore_errors=True)
+                tgt = min(alive,
+                          key=lambda s: sum(1 for sl in pending.values()
+                                            if sl == s))
+                reassigned[writer] = why
+                self.events.append(
+                    f"step {step}: writer {writer} range reassigned to "
+                    f"slot {tgt}")
+                dispatch(writer, tgt, None)
+            else:
+                failures[writer] = why
+                reassigned.pop(writer, None)
+
+        try:
+            # pack + dispatch interleaved: writer 0 is writing its shards
+            # while later groups are still being copied into the arena
+            self._pack(groups, snap, entries,
+                       on_group=lambda w: dispatch(
+                           w, w, fault_for(step, w)
+                           if fault_for is not None else None))
+            while pending:
+                if self._fenced.is_set() or (abort_check is not None
+                                             and abort_check()):
+                    raise FleetAborted(step)
+                try:
+                    conns = {self._conns[s]: s
+                             for s in set(pending.values())
+                             if s in self._conns}
+                    ready = mp_connection.wait(
+                        list(conns), timeout=min(0.05, self.hb_interval / 2))
+                except (OSError, KeyError):
+                    # a concurrent fence closed handles under us — the
+                    # _fenced check at the top of the loop exits next pass
+                    continue
+                now = time.monotonic()
+                for conn in ready:
+                    slot = conns[conn]
+                    try:
+                        msg = conn.recv()
+                    except (EOFError, OSError):
+                        continue        # exit handled by the liveness scan
+                    kind, writer, detail = msg
+                    if pending.get(writer) != slot:
+                        continue        # stale reply from a superseded task
+                    del pending[writer]
+                    if kind == "ok" and verify is not None:
+                        try:
+                            verify(writer)
+                        except Exception as e:
+                            kind, detail = "err", (
+                                f"partial failed disk verification: {e}")
+                    if kind != "ok":
+                        fail_writer(writer, str(detail))
+                # liveness scan (per slot; a slot may carry several writers)
+                for slot in set(pending.values()):
+                    hb = read_heartbeat(self._hb_path(slot))
+                    if hb is not None:
+                        lease.observe(slot, hb, now)
+                    p = self._procs.get(slot)
+                    dead_why = None
+                    if p is None or p.exitcode is not None:
+                        code = p.exitcode if p is not None else "?"
+                        dead_why = f"writer process exited ({code})"
+                    elif lease.expired(slot, now):
+                        dead_why = (f"heartbeat lease expired "
+                                    f"(>{self.timeout}s): SIGKILL fence")
+                    if dead_why is not None:
+                        self._reap_slot(slot)
+                        lease.drop(slot)
+                        for w in [w for w, s in pending.items()
+                                  if s == slot]:
+                            del pending[w]
+                            fail_writer(w, dead_why)
+                # slow writers: alive + leased, just late — log once
+                for w, t0 in dispatched_at.items():
+                    if (w in pending and w not in slow_logged
+                            and now - t0 > self.timeout):
+                        slow_logged.add(w)
+                        self.events.append(
+                            f"step {step}: writer {w} slow "
+                            f"(>{self.timeout}s, heartbeats healthy)")
+        except BaseException:
+            # abort/fence/fleet-death: the arena may be scheduled for
+            # sweeping with the scratch dir — drop it rather than reuse
+            self._drop_arena()
+            raise
+        finally:
+            self._saving = False
+            if self._fenced.is_set():
+                # a fence landed while we were saving and deferred the
+                # arena teardown to us (its scratch was swept under it)
+                self._drop_arena()
+        return failures, reassigned

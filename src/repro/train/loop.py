@@ -63,6 +63,14 @@ def train(train_step: Callable, state: Dict, data_iter, *,
         # logical writer inside the torn window (post shard-write, pre
         # partial-manifest publish) — checkpoint/manager.py quorum protocol
         ckpt.writer_fault = injector.check_writer
+    if (ckpt is not None and injector is not None
+            and hasattr(injector, "proc_fault")
+            and getattr(ckpt, "writer_procs", False)
+            and getattr(ckpt, "proc_fault", None) is None):
+        # process-fleet sibling: the injector ships kill9/sigstop/slow/
+        # corrupt specs into writer CHILD PROCESSES (runtime/procs.py) —
+        # same torn window, process-level failure modes
+        ckpt.proc_fault = injector.proc_fault
     for step in range(start_step, num_steps):
         batch = next(data_iter)
         if injector is not None:

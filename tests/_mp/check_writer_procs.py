@@ -1,0 +1,467 @@
+"""Chaos harness for the cross-process writer fleet (ISSUE 8 acceptance).
+
+Every scenario drives REAL ``runtime/procs.py`` children (spawn context,
+shared-memory handover, heartbeat leases) through the public manager API and
+asserts the ISSUE 8 invariant: a save either publishes a VERIFIED, complete
+step — full shard coverage, every crc32 re-checked from disk — or leaves
+only debris the next incarnation sweeps before a bit-exact resume.
+
+Scenarios (``--scenario NAME [--writers N]``; ``--scenario all`` runs the
+full matrix):
+
+  bit-identity  clean procs saves (sync + async) are byte-for-byte identical
+                to the thread-writer trees — same files, same bytes.
+  kill9         writer N-1 SIGKILLs itself inside the torn window (shards on
+                disk, partial manifest unpublished); the coordinator sees
+                the exit, wipes the orphan range, reassigns it to a
+                surviving child, and the step still publishes verified.
+  sigstop       writer N-1 SIGSTOPs itself: heartbeats freeze, the lease
+                expires, the coordinator SIGKILL-fences the slot and
+                reassigns.  Publishes verified.
+  slow          writer N-1 sleeps past ``writer_timeout`` with heartbeats
+                flowing: logged as slow, NEVER killed, no reassignment, the
+                step publishes clean (no ``reassigned`` record).
+  corrupt       writer N-1 truncates a shard AFTER checksumming it, then
+                publishes its partial normally: the coordinator's disk
+                verification rejects the partial and reassigns.
+  coordinator   a CHILD process (``--child-coord-kill DIR``) publishes step
+                4 in procs mode, starts save 8 with one writer parked slow,
+                and SIGKILLs ITSELF mid-save.  The parent verifies the
+                orphaned writer processes self-exit (ppid watch in the
+                heartbeat thread), the debris (``step_*.tmp`` + ``.fleet``)
+                is swept by the next incarnation, and restore(4) is
+                bit-exact.
+  supervised    run_supervised with a procs-mode sync manager, reassign=0
+                and an injected kill9: the QuorumError kills incarnation 1
+                at the boundary, abort() fences the fleet, incarnation 2 is
+                handed the latest PUBLISHED step (the run_supervised
+                resume-step pin) and resumes bit-exact vs an uninterrupted
+                baseline.
+  spill         the kill9 scenario with ``REPRO_CKPT_HANDOVER=spill`` — the
+                file-backed arena fallback behaves identically.
+
+Module top stays import-light on purpose: spawn children re-import this
+file as ``__main__``, so jax (and anything that pulls it) is imported only
+inside functions.
+"""
+import argparse
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import zlib
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+
+TIMEOUT = 1.0          # writer lease — short so sigstop fences fast
+
+
+# ---------------------------------------------------------------------------
+# deterministic fixtures
+# ---------------------------------------------------------------------------
+
+def _np_state(seed=0):
+    """Deterministic numpy pytree (~200 KB), mixed dtypes incl. a raw-path
+    bf16 leaf — everything the wire format has to carry, no jax needed."""
+    rng = np.random.default_rng(seed)
+    state = {
+        "params": {
+            "embed": rng.standard_normal((64, 96)).astype(np.float32),
+            "w_qkv": rng.standard_normal((96, 192)).astype(np.float32),
+            "w_out": rng.standard_normal((96, 96)).astype(np.float32),
+            "scale": rng.standard_normal((96,)).astype(np.float32) * 0.1,
+        },
+        "opt_state": {
+            "mu": rng.standard_normal((96, 192)).astype(np.float32),
+            "nu": rng.standard_normal((96, 192)).astype(np.float32),
+            "count": np.full((3,), seed * 100 + 7, dtype=np.int32),
+            # 0-d on purpose: adamw's ``.step`` is 0-d, and the wire format
+            # must NOT promote it to (1,) (restore checks template shapes)
+            "step": np.asarray(seed * 10 + 1, dtype=np.int32),
+        },
+    }
+    try:
+        import ml_dtypes
+        state["params"]["ln_bf16"] = rng.standard_normal(
+            (96,)).astype(ml_dtypes.bfloat16)
+    except ImportError:
+        pass
+    return state
+
+
+def _assert_tree_equal(a, b):
+    import jax
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), (len(la), len(lb))
+    for x, y in zip(la, lb):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        np.testing.assert_array_equal(x, y)
+
+
+def _verify_published_step(ckpt_dir, step):
+    """The publish-side half of the invariant, checked from raw disk: the
+    global manifest is complete, covers every shard exactly once, and every
+    shard file's bytes re-hash to the recorded crc32.  Returns the meta."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    assert os.path.isdir(d), os.listdir(ckpt_dir)
+    with open(os.path.join(d, "MANIFEST.json")) as f:
+        meta = json.load(f)
+    assert meta.get("complete") is True, meta
+    manifest = meta["manifest"]
+    assert manifest, "empty manifest"
+    for name, info in manifest.items():
+        path = os.path.join(d, info["file"])
+        blob = open(path, "rb").read()
+        assert len(blob) == info["bytes"], (name, len(blob), info["bytes"])
+        assert zlib.crc32(blob) == info["crc32"], name
+    return meta
+
+
+def _assert_no_debris(ckpt_dir):
+    names = os.listdir(ckpt_dir)
+    assert not [n for n in names if n.endswith(".tmp")], names
+    assert ".fleet" not in names, names
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: procs trees == thread trees, byte for byte
+# ---------------------------------------------------------------------------
+
+def _tree_files(root):
+    out = {}
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            p = os.path.join(dirpath, f)
+            out[os.path.relpath(p, root)] = open(p, "rb").read()
+    return out
+
+
+def scenario_bit_identity(root, n_writers):
+    from repro.checkpoint.manager import (AsyncCheckpointManager,
+                                          CheckpointManager)
+    state = _np_state(seed=1)
+    td = os.path.join(root, f"bid_thr{n_writers}")
+    pd = os.path.join(root, f"bid_prc{n_writers}")
+    ad = os.path.join(root, f"bid_async{n_writers}")
+    mt = CheckpointManager(td, writers=n_writers)
+    mt.save(3, state)
+    mp_ = CheckpointManager(pd, writers=n_writers, writer_procs=True,
+                            writer_timeout=TIMEOUT)
+    mp_.save(3, state)
+    ma = AsyncCheckpointManager(ad, writers=n_writers, writer_procs=True,
+                                writer_timeout=TIMEOUT)
+    ma.save_async(3, state)
+    ma.wait_until_finished()
+    mp_.close()
+    ma.close()
+    ft = _tree_files(os.path.join(td, "step_00000003"))
+    fp = _tree_files(os.path.join(pd, "step_00000003"))
+    fa = _tree_files(os.path.join(ad, "step_00000003"))
+    assert set(ft) == set(fp) == set(fa), (sorted(ft), sorted(fp))
+    for name in ft:
+        assert ft[name] == fp[name], f"sync procs differs at {name}"
+        assert ft[name] == fa[name], f"async procs differs at {name}"
+    restored, step = CheckpointManager(pd, writers=n_writers).restore(
+        _np_state(seed=1))
+    assert step == 3
+    _assert_tree_equal(restored, state)
+    _assert_no_debris(pd)
+    _assert_no_debris(ad)
+    print(f"bit-identity w={n_writers}: {len(ft)} files byte-identical "
+          "across thread / procs-sync / procs-async")
+
+
+# ---------------------------------------------------------------------------
+# in-fleet faults: kill9 / sigstop / slow / corrupt
+# ---------------------------------------------------------------------------
+
+_FAULT_WHY = {
+    "kill9": "writer process exited (-9)",
+    "sigstop": "heartbeat lease expired",
+    "corrupt": "partial failed disk verification",
+}
+
+
+def scenario_fault(root, kind, n_writers):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.runtime.fault import FailureInjector
+    victim = n_writers - 1
+    spec = ((victim, "slow", {"seconds": 2.5}) if kind == "slow"
+            else (victim, kind))
+    inj = FailureInjector(proc_fail_at={2: spec})
+    d = os.path.join(root, f"fault_{kind}{n_writers}")
+    mgr = CheckpointManager(d, writers=n_writers, writer_procs=True,
+                            writer_timeout=TIMEOUT,
+                            proc_fault=inj.proc_fault)
+    s1, s2 = _np_state(seed=1), _np_state(seed=2)
+    mgr.save(1, s1)                       # clean save — fleet healthy
+    mgr.save(2, s2)                       # fault lands in this save
+    assert inj.log == [f"step 2: injected proc fault {kind} "
+                       f"into writer {victim}"], inj.log
+    meta = _verify_published_step(d, 2)
+    events = mgr._fleet.events
+    if kind == "slow":
+        # heartbeats stayed healthy: logged, never killed, no reassignment
+        assert "reassigned" not in meta, meta
+        assert any("slow" in e and f"writer {victim}" in e
+                   for e in events), events
+        assert not any("reassigned" in e for e in events), events
+    else:
+        why = meta["reassigned"][str(victim)]
+        assert _FAULT_WHY[kind] in why, (kind, why)
+        assert any(f"writer {victim} range reassigned" in e
+                   for e in events), events
+    restored, step = mgr.restore(_np_state(seed=2))
+    assert step == 2
+    _assert_tree_equal(restored, s2)
+    mgr.close()
+    _assert_no_debris(d)
+    print(f"fault {kind} w={n_writers}: step 2 published verified"
+          + ("" if kind == "slow"
+             else f" via reassignment ({_FAULT_WHY[kind]!r})"))
+
+
+# ---------------------------------------------------------------------------
+# coordinator kill -9 mid-save: orphans self-exit, debris swept, bit-exact
+# ---------------------------------------------------------------------------
+
+def child_coord_kill(ckpt_dir):
+    from repro.checkpoint.manager import AsyncCheckpointManager
+    mgr = AsyncCheckpointManager(ckpt_dir, writers=2, writer_procs=True,
+                                 writer_timeout=5.0)
+    mgr.save_async(4, _np_state(seed=4))
+    mgr.wait_until_finished()             # step 4 is PUBLISHED
+    # park writer 1 in a long sleep so save 8 is mid-flight when we die
+    mgr.proc_fault = (lambda step, w:
+                      {"kind": "slow", "seconds": 120.0}
+                      if (step == 8 and w == 1) else None)
+    mgr.save_async(8, _np_state(seed=8))
+    w0 = os.path.join(ckpt_dir, "step_00000008.tmp", "writer_00",
+                      "manifest.json")
+    deadline = time.monotonic() + 30
+    while not os.path.exists(w0):         # writer 0's partial is on disk
+        assert time.monotonic() < deadline, "writer 0 never published partial"
+        time.sleep(0.05)
+    os.kill(os.getpid(), signal.SIGKILL)  # coordinator dies, no fence runs
+
+
+def scenario_coordinator(root):
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.runtime.procs import read_heartbeat
+    d = os.path.join(root, "coord")
+    r = subprocess.run([sys.executable, os.path.abspath(__file__),
+                       "--child-coord-kill", d],
+                      capture_output=True, text=True,
+                      env=dict(os.environ), timeout=600)
+    assert r.returncode == -signal.SIGKILL, \
+        (r.returncode, r.stdout, r.stderr[-2000:])
+    # the dead coordinator left a half-written step AND fleet scratch behind
+    names = os.listdir(d)
+    assert "step_00000008.tmp" in names, names
+    assert ".fleet" in names, names
+    # the orphaned writer children notice the vanished parent (ppid watch in
+    # the heartbeat thread) and self-exit — no fence ever ran
+    pids = []
+    for slot in range(2):
+        hb = read_heartbeat(os.path.join(d, ".fleet", f"hb_{slot:02d}"))
+        if hb is not None:
+            pids.append(hb[0])
+    assert pids, "no heartbeat files — fleet never spawned?"
+    deadline = time.monotonic() + 15
+    while time.monotonic() < deadline:
+        alive = []
+        for pid in pids:
+            try:
+                os.kill(pid, 0)
+                alive.append(pid)
+            except OSError:
+                pass
+        if not alive:
+            break
+        time.sleep(0.1)
+    assert not alive, f"orphan writers {alive} still alive 15s after kill"
+    # next incarnation: torn step invisible, ALL debris swept before restore
+    mgr = CheckpointManager(d, writers=2, writer_procs=True,
+                            writer_timeout=TIMEOUT)
+    assert mgr.all_steps() == [4], mgr.all_steps()
+    _assert_no_debris(d)
+    restored, step = mgr.restore(_np_state(seed=4))
+    assert step == 4
+    _assert_tree_equal(restored, _np_state(seed=4))   # bit-exact resume
+    mgr.close()
+    print(f"coordinator kill -9: orphans {pids} self-exited, debris swept, "
+          "restore(4) bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# supervised restart: QuorumError at the boundary, resume bit-exact
+# ---------------------------------------------------------------------------
+
+def scenario_supervised(root):
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.config import ModelConfig, ParallelConfig, RunConfig
+    from repro.data.synthetic import SyntheticLM
+    from repro.models import lm
+    from repro.optim import adamw
+    from repro.runtime.fault import FailureInjector, run_supervised
+    from repro.train import loop as train_loop
+    from repro.train import step as TS
+
+    cfg = ModelConfig(name="procs-test", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, mlp_kind="swiglu")
+    rc = RunConfig("t", "train", 16, 8, lr=2e-3)
+    ds = SyntheticLM(cfg.vocab_size, rc.seq_len, rc.global_batch, seed=7)
+    pcfg = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1,
+                          microbatches=1, zero1=False)
+    ts = jax.jit(TS.build_train_step(cfg, pcfg, rc, None,
+                                     compute_dtype=jnp.float32))
+    TOTAL = 8
+
+    def fresh():
+        p = lm.init_params(cfg, jax.random.PRNGKey(0))
+        return {"params": p, "opt_state": adamw.init(p)}
+
+    def batches(lo, hi):
+        return ({k: jnp.asarray(v) for k, v in ds.batch_at(s).items()}
+                for s in range(lo, hi))
+
+    # uninterrupted baseline
+    base = train_loop.train(ts, fresh(), batches(0, TOTAL), num_steps=TOTAL,
+                            log_every=1, log_fn=lambda *a: None)
+    base_hist = dict(base["history"])
+
+    # supervised run: procs-mode sync manager, NO reassignment budget, so
+    # the injected kill9 at step 4's save becomes a QuorumError that kills
+    # incarnation 1 at the boundary (abort() must fence the fleet)
+    d = os.path.join(root, "supervised")
+    mgr = CheckpointManager(d, writers=2, writer_procs=True,
+                            writer_timeout=TIMEOUT, reassign=0)
+    inj = FailureInjector(proc_fail_at={4: (1, "kill9")})
+    resume_args = []
+
+    def make_state(resume_step):
+        resume_args.append(resume_step)
+        state, start = fresh(), 0
+        if resume_step is not None:
+            state, start = mgr.restore(state)
+        return state, start
+
+    def run_steps(state, start, inc):
+        return train_loop.train(ts, state, batches(start, TOTAL),
+                                start_step=start, num_steps=TOTAL,
+                                ckpt=mgr, ckpt_every=2, log_every=1,
+                                injector=inj, log_fn=lambda *a: None)
+
+    state, incarnations = run_supervised(make_state, run_steps, ckpt=mgr,
+                                         sleep_fn=lambda _: None)
+    assert incarnations == 2, incarnations
+    assert inj.log == ["step 4: injected proc fault kill9 into writer 1"], \
+        inj.log
+    # the resume-step pin: incarnation 2 was handed the latest PUBLISHED
+    # step (2 — the torn 4 was fenced), not None
+    assert resume_args == [None, 2], resume_args
+    steps = mgr.all_steps()
+    assert steps[-1] == 8 and 4 in steps, steps
+    _verify_published_step(d, 8)
+    # crash-resume bit-exact vs the uninterrupted baseline
+    hist = dict(state["history"])
+    for s, want in base_hist.items():
+        if s >= 2:                        # steps re-run by incarnation 2
+            assert hist[s] == want, (s, hist[s], want)
+    restored, step = mgr.restore(fresh())
+    assert step == 8
+    _assert_tree_equal(restored, {"params": state["params"],
+                                  "opt_state": state["opt_state"]})
+    mgr.close()
+    _assert_no_debris(d)
+    print("supervised: kill9 -> QuorumError fenced incarnation 1, "
+          f"resume pinned to step {resume_args[1]}, history bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# spill handover fallback
+# ---------------------------------------------------------------------------
+
+def scenario_spill(root):
+    from repro.checkpoint.manager import CheckpointManager
+    d = os.path.join(root, "spill")
+    prev = os.environ.get("REPRO_CKPT_HANDOVER")
+    os.environ["REPRO_CKPT_HANDOVER"] = "spill"
+    try:
+        mgr = CheckpointManager(d, writers=2, writer_procs=True,
+                                writer_timeout=TIMEOUT,
+                                proc_fault=lambda s, w:
+                                    {"kind": "kill9"}
+                                    if (s == 2 and w == 1) else None)
+        s2 = _np_state(seed=2)
+        mgr.save(2, s2)
+        assert mgr._fleet.handover == "spill"
+        meta = _verify_published_step(d, 2)
+        assert "1" in meta.get("reassigned", {}), meta
+        restored, step = mgr.restore(_np_state(seed=2))
+        assert step == 2
+        _assert_tree_equal(restored, s2)
+        mgr.close()
+        _assert_no_debris(d)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_CKPT_HANDOVER", None)
+        else:
+            os.environ["REPRO_CKPT_HANDOVER"] = prev
+    print("spill: file-backed arena handover published verified "
+          "via reassignment")
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def run(scenario, root, n_writers):
+    if scenario == "bit-identity":
+        scenario_bit_identity(root, n_writers)
+    elif scenario in ("kill9", "sigstop", "slow", "corrupt"):
+        scenario_fault(root, scenario, n_writers)
+    elif scenario == "coordinator":
+        scenario_coordinator(root)
+    elif scenario == "supervised":
+        scenario_supervised(root)
+    elif scenario == "spill":
+        scenario_spill(root)
+    elif scenario == "all":
+        scenario_bit_identity(root, 3)
+        for n in (2, 4):
+            for kind in ("kill9", "sigstop", "slow", "corrupt"):
+                scenario_fault(root, kind, n)
+        scenario_coordinator(root)
+        scenario_supervised(root)
+        scenario_spill(root)
+        print("ALL WRITER-PROCS CHAOS CHECKS PASSED")
+    else:
+        raise SystemExit(f"unknown scenario {scenario!r}")
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="all")
+    ap.add_argument("--writers", type=int, default=2)
+    ap.add_argument("--child-coord-kill", metavar="DIR", default=None)
+    args = ap.parse_args(argv)
+    if args.child_coord_kill:
+        child_coord_kill(args.child_coord_kill)
+        return
+    import tempfile
+    root = tempfile.mkdtemp(prefix="procs_chaos_")
+    run(args.scenario, root, args.writers)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -554,3 +554,172 @@ def test_gc_survives_foreign_files_and_leaves_no_half_steps(tmp_path):
     leftover = [d for d in os.listdir(str(tmp_path))
                 if d.startswith("step_") and not d.endswith(".tmp")]
     assert leftover == ["step_00000003"]      # retired steps fully gone
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: manifest type hardening + the wire format
+# ---------------------------------------------------------------------------
+
+def test_manifest_complete_tolerates_non_dict_json_bodies(tmp_path):
+    """A foreign MANIFEST.json holding a JSON array / string / null parses
+    fine but is not a manifest: ``_manifest_complete`` must answer False
+    (it used to crash with AttributeError on ``list.get``), ``all_steps``
+    must stay tolerant, and the torn dirs must sweep like any debris."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, STATE)
+    for step, body in ((2, "[1, 2, 3]"), (3, '"complete"'), (4, "null")):
+        d = tmp_path / f"step_{step:08d}"
+        d.mkdir()
+        (d / MANIFEST).write_text(body)
+        assert CheckpointManager._manifest_complete(str(d)) is False, body
+    assert mgr.all_steps() == [1]             # no crash, garbage filtered
+    restored, step = mgr.restore(STATE)       # newest COMPLETE step wins
+    assert step == 1
+    _leaves_equal(restored, STATE)
+    mgr2 = CheckpointManager(str(tmp_path))   # next incarnation sweeps them
+    assert mgr2.all_steps() == [1]
+    assert sorted(d for d in os.listdir(str(tmp_path))
+                  if d.startswith("step_")) == ["step_00000001"]
+
+
+def test_restore_non_dict_manifest_is_corruption_not_crash(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, STATE)
+    d = tmp_path / "step_00000002"
+    d.mkdir()
+    (d / MANIFEST).write_text("[]")
+    with pytest.raises(CheckpointCorruptionError):
+        mgr.restore(STATE, step=2)            # explicit step: typed error
+
+
+def test_leaf_wire_preserves_zero_dim_and_forces_c_order():
+    """The wire lowering must NOT promote 0-d leaves (adamw's ``.step``) —
+    ``np.ascontiguousarray`` silently would — and must emit C-order bytes
+    for the handover arena."""
+    from repro.checkpoint import wire
+    wa, info = wire.leaf_wire(np.float32(2.5))
+    assert wa.shape == () and info["shape"] == [] and "raw" not in info
+    f_arr = np.asfortranarray(np.arange(12.0, dtype=np.float32).reshape(3, 4))
+    wa, info = wire.leaf_wire(f_arr)
+    assert wa.flags.c_contiguous and info["shape"] == [3, 4]
+    np.testing.assert_array_equal(wa, f_arr)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: cross-process writer fleet through the manager API
+# ---------------------------------------------------------------------------
+
+def _procs_mgr(d, **kw):
+    kw.setdefault("writers", 2)
+    kw.setdefault("writer_timeout", 2.0)
+    return CheckpointManager(str(d), writer_procs=True, **kw)
+
+
+def test_procs_tree_bit_identical_to_threads(tmp_path):
+    """Same state, same step, writers=2: the fleet's published tree must be
+    byte-for-byte the thread writers' tree — same files, same bytes."""
+    mt = CheckpointManager(str(tmp_path / "thr"), writers=2)
+    mt.save(5, STATE, extra_meta={"tag": "x"})
+    mp_ = _procs_mgr(tmp_path / "prc")
+    mp_.save(5, STATE, extra_meta={"tag": "x"})
+    mp_.close()
+    fa = _files_under(os.path.join(mt.dir, "step_00000005"))
+    fb = _files_under(os.path.join(mp_.dir, "step_00000005"))
+    assert sorted(fa) == sorted(fb)
+    for rel in fa:
+        with open(fa[rel], "rb") as f1, open(fb[rel], "rb") as f2:
+            assert f1.read() == f2.read(), rel
+    restored, step = CheckpointManager(mp_.dir, writers=2).restore(STATE)
+    assert step == 5
+    _leaves_equal(restored, STATE)
+    assert ".fleet" not in os.listdir(mp_.dir)     # close() swept scratch
+
+
+def test_procs_kill9_reassigns_and_publishes_verified(tmp_path):
+    """SIGKILL of writer 1's process inside the torn window: the coordinator
+    reassigns its range to the survivor and the step still publishes with
+    full coverage — the manifest records who was recovered and why."""
+    from repro.runtime.fault import FailureInjector
+    inj = FailureInjector(proc_fail_at={2: (1, "kill9")})
+    mgr = _procs_mgr(tmp_path, proc_fault=inj.proc_fault)
+    mgr.save(2, STATE)
+    assert inj.log == ["step 2: injected proc fault kill9 into writer 1"]
+    meta = _manifest_of(mgr, 2)
+    assert meta["complete"] and "-9" in meta["reassigned"]["1"]
+    assert set(meta["manifest"]) == set(M._leaf_paths(STATE))  # full coverage
+    restored, step = mgr.restore(STATE)
+    assert step == 2
+    _leaves_equal(restored, STATE)
+    mgr.close()
+
+
+def test_procs_reassign_budget_zero_is_quorum_error(tmp_path):
+    """With no reassignment budget a killed writer is a writer failure and
+    the quorum gate stays the backstop: nothing publishes, debris sweeps."""
+    mgr = _procs_mgr(tmp_path, reassign=0,
+                     proc_fault=lambda s, w: ({"kind": "kill9"}
+                                              if (s == 2 and w == 1)
+                                              else None))
+    with pytest.raises(QuorumError):
+        mgr.save(2, STATE)
+    assert mgr.all_steps() == []
+    assert not [n for n in os.listdir(str(tmp_path)) if n.endswith(".tmp")]
+    mgr.save(3, STATE)                 # fleet respawns the dead slot
+    assert mgr.all_steps() == [3]
+    mgr.close()
+
+
+def test_procs_async_abort_fences_fleet_fast(tmp_path):
+    """abort() on the async manager mid-save SIGKILL-fences the fleet in
+    bounded time (never waits out a slow child), keeps published steps, and
+    leaves a reusable manager."""
+    mgr = AsyncCheckpointManager(str(tmp_path), writers=2, writer_procs=True,
+                                 writer_timeout=2.0,
+                                 proc_fault=lambda s, w:
+                                     {"kind": "slow", "seconds": 60.0}
+                                     if (s == 2 and w == 1) else None)
+    mgr.save_async(1, STATE)
+    mgr.wait_until_finished()
+    mgr.save_async(2, STATE)           # writer 1 parked for 60s
+    deadline = time.monotonic() + 20
+    while not os.path.exists(os.path.join(mgr.dir, "step_00000002.tmp")):
+        assert time.monotonic() < deadline
+        time.sleep(0.01)
+    t0 = time.monotonic()
+    mgr.abort()
+    assert time.monotonic() - t0 < 5.0, "abort must not wait out the child"
+    assert mgr.all_steps() == [1]
+    names = os.listdir(str(tmp_path))
+    assert not [n for n in names if n.endswith(".tmp")], names
+    assert ".fleet" not in names, names
+    mgr.save_async(3, STATE)           # manager survives its own abort
+    mgr.wait_until_finished()
+    assert mgr.all_steps() == [1, 3]
+    mgr.close()
+
+
+def test_procs_spill_handover_fallback(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CKPT_HANDOVER", "spill")
+    mgr = _procs_mgr(tmp_path)
+    mgr.save(4, STATE)
+    assert mgr._fleet.handover == "spill"
+    restored, step = mgr.restore(STATE)
+    assert step == 4
+    _leaves_equal(restored, STATE)
+    mgr.close()
+    assert ".fleet" not in os.listdir(str(tmp_path))
+
+
+def test_checkpoint_config_procs_flags_and_make_manager(tmp_path):
+    ccfg = CheckpointConfig(async_=False, writers=2, writer_procs=True,
+                            writer_timeout=1.5, reassign=2)
+    mgr = make_manager(str(tmp_path), ccfg)
+    assert (mgr.writer_procs, mgr.writer_timeout, mgr.reassign) \
+        == (True, 1.5, 2)
+    mgr.save(1, STATE)
+    _leaves_equal(mgr.restore(STATE)[0], STATE)
+    mgr.close()
+    with pytest.raises(AssertionError):
+        CheckpointConfig(writer_timeout=0.0)
+    with pytest.raises(AssertionError):
+        CheckpointConfig(reassign=-1)

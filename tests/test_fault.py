@@ -387,3 +387,101 @@ def test_supervised_writer_kill_end_to_end(tmp_path):
     np.testing.assert_array_equal(np.asarray(state["params"]["w"]),
                                   np.full(3, 8.0))
     mgr.close()
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: process-level fault specs + resume-step pinning
+# ---------------------------------------------------------------------------
+
+def test_injector_proc_fault_is_one_shot_and_targeted():
+    """proc_fault (the manager's process-fleet hook) ships the spec dict to
+    exactly the configured writer of the configured step, exactly once —
+    the retried save after a restart must run clean."""
+    inj = FailureInjector(proc_fail_at={4: (1, "slow", {"seconds": 2.0}),
+                                        6: (0, "kill9")})
+    assert inj.proc_fault(4, 0) is None         # other writers untouched
+    assert inj.proc_fault(3, 1) is None         # other steps untouched
+    assert inj.proc_fault(4, 1) == {"kind": "slow", "seconds": 2.0}
+    assert inj.proc_fault(4, 1) is None         # popped: the retry is clean
+    assert inj.proc_fault(6, 0) == {"kind": "kill9"}
+    assert inj.proc_fail_at == {}
+    assert inj.log == [
+        "step 4: injected proc fault slow into writer 1",
+        "step 6: injected proc fault kill9 into writer 0",
+    ]
+
+
+def test_injector_proc_fault_rejects_unknown_kind():
+    with pytest.raises(AssertionError, match="nuke"):
+        FailureInjector(proc_fail_at={1: (0, "nuke")})
+
+
+def test_run_supervised_pins_resume_step_to_post_fence_view():
+    """make_state must receive the step published BEFORE the crash, read
+    once after the fence — not None (the old drift: the supervisor never
+    passed anything but None, so restores raced concurrent listers)."""
+    class _Ckpt(_FakeAsyncCkpt):
+        def __init__(self):
+            super().__init__()
+            self.published = [2]
+
+        def latest_step(self):
+            return self.published[-1] if self.published else None
+
+    ckpt = _Ckpt()
+    seen, calls = [], {"n": 0}
+
+    def make_state(resume_step):
+        seen.append(resume_step)
+        return {}, 0
+
+    def run(state, start, inc):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            ckpt.published.append(4)   # publish, then die
+            raise RuntimeError("dead after publishing 4")
+        return {"done": True}
+
+    state, incarnations = run_supervised(make_state, run, ckpt=ckpt,
+                                         **NO_SLEEP)
+    assert state["done"] and incarnations == 2
+    assert seen == [None, 4]           # cold start, then the pinned step
+
+
+def test_run_supervised_rollback_resume_step_is_post_retire(tmp_path):
+    """With a DivergenceError rollback, the pin is read AFTER
+    retire_steps_after ran: the restart resumes from the newest SURVIVING
+    step, never a retired (poisoned) one."""
+    from repro.runtime.guard import DivergenceError
+
+    class _Ckpt(_FakeAsyncCkpt):
+        def __init__(self, d):
+            super().__init__()
+            self.dir = str(d)
+            self.published = [2, 4, 6]
+
+        def retire_steps_after(self, step):
+            self.published = [s for s in self.published if s <= step]
+
+        def latest_step(self):
+            return self.published[-1] if self.published else None
+
+    ckpt = _Ckpt(tmp_path)
+    seen, calls = [], {"n": 0}
+
+    def make_state(resume_step):
+        seen.append(resume_step)
+        return {}, 0
+
+    def run(state, start, inc):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise DivergenceError("poison", kind="loss_spike", first_step=5,
+                                  data_indices=(5,))
+        return {"done": True}
+
+    state, incarnations = run_supervised(make_state, run, ckpt=ckpt,
+                                         max_restarts=2, **NO_SLEEP)
+    assert state["done"] and incarnations == 2
+    assert ckpt.published == [2, 4]    # 6 was saved from poisoned state
+    assert seen == [None, 4]           # pinned to the post-retire survivor

@@ -366,3 +366,127 @@ def test_rebalance_conserves(n, data):
     for s in slow:
         if len(slow) < n:
             assert out[s] <= 1
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: heartbeat leases + fleet fates through the real quorum gate
+# ---------------------------------------------------------------------------
+
+@settings(**SET)
+@given(st.integers(1, 4),
+       st.lists(st.tuples(st.integers(0, 3),          # slot (mod n_slots)
+                          st.floats(0.01, 3.0),       # dt since last event
+                          st.integers(0, 5)),         # heartbeat token
+                min_size=1, max_size=40),
+       st.floats(0.5, 2.0))
+def test_lease_table_matches_reference_model(n_slots, events, timeout):
+    """LeaseTable (the coordinator's liveness ledger) against a reference
+    model over arbitrary heartbeat-deadline schedules: a lease expires
+    exactly when ``timeout`` of coordinator time passes without the token
+    CHANGING — repeated tokens (a frozen child re-observed) never refresh
+    it, new tokens always do, and no cross-process clock is involved."""
+    from repro.runtime.procs import LeaseTable
+
+    lt = LeaseTable(timeout)
+    ref_last = {}
+    now = 0.0
+    for s in range(n_slots):
+        lt.start(s, now)
+        ref_last[s] = (None, now)
+    for slot, dt, token in events:
+        slot %= n_slots
+        now += dt
+        lt.observe(slot, token, now)
+        if ref_last[slot][0] != token:
+            ref_last[slot] = (token, now)
+        for s in range(n_slots):
+            want = (now - ref_last[s][1]) > timeout
+            assert lt.expired(s, now) == want, (s, now, ref_last[s])
+    victim = events[0][0] % n_slots
+    lt.drop(victim)
+    assert not lt.expired(victim, now + 10 * timeout)   # dropped = no lease
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.data())
+def test_fleet_fates_full_verified_coverage_or_nothing(n_writers, data):
+    """Writer-fate simulation through the REAL quorum gate + publish +
+    on-disk verification: for any writer count 1..4 and any subset of
+    writers killed (torn shards, no partial), stalled (same) or corrupting
+    (bad bytes after checksumming), a save either publishes a step whose
+    manifest covers EVERY shard with crc32s that verify from disk, or
+    publishes nothing at all — never a partial step."""
+    import json
+    import shutil
+    import tempfile
+    import zlib
+
+    from repro.checkpoint import wire
+    from repro.checkpoint.manager import (CheckpointManager, QuorumError,
+                                          partition_shards)
+
+    n_leaves = data.draw(st.integers(1, 6), label="n_leaves")
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1),
+                                          label="seed"))
+    snap = {f"leaf{i:02d}": rng.standard_normal(
+                data.draw(st.sampled_from([(2,), (3, 4), (1, 5)]),
+                          label=f"shape{i}")).astype(np.float32)
+            for i in range(n_leaves)}
+    fates = [data.draw(st.sampled_from(["ok", "dead", "stall", "corrupt"]),
+                       label=f"fate{w}") for w in range(n_writers)]
+
+    d = tempfile.mkdtemp(prefix="fleet_prop_")
+    try:
+        mgr = CheckpointManager(d, writers=n_writers)
+        owner = partition_shards({k: v.nbytes for k, v in snap.items()},
+                                 n_writers)
+        names = sorted(snap)
+        tmp = os.path.join(d, "step_00000001.tmp")
+        failures = {}
+        # virtual writers: same wire calls the fleet children make
+        for w, fate in enumerate(fates):
+            wtag = f"writer_{w:02d}"
+            wdir = os.path.join(tmp, wtag)
+            os.makedirs(wdir, exist_ok=True)
+            mine = [n for n in names if owner[n] == w]
+            shards = {}
+            for i, name in enumerate(mine):
+                wa, info = wire.leaf_wire(snap[name])
+                nbytes, c = wire.write_leaf(
+                    os.path.join(wdir, f"leaf_{i:05d}.npy"), wa)
+                info.update(bytes=nbytes, crc32=c,
+                            file=f"{wtag}/leaf_{i:05d}.npy", writer=w)
+                shards[name] = info
+                if fate in ("dead", "stall") and i == len(mine) // 2:
+                    break              # torn mid-range, rest never written
+            if fate in ("dead", "stall"):
+                failures[w] = RuntimeError(f"writer {fate}")
+                continue               # no partial manifest — the torn state
+            if fate == "corrupt" and mine:
+                victim = os.path.join(tmp, shards[mine[-1]]["file"])
+                with open(victim, "r+b") as f:
+                    f.truncate(max(0, os.path.getsize(victim) - 1))
+            wire.publish_partial(wdir, 1, w, shards)
+        final = os.path.join(d, "step_00000001")
+        try:
+            verified = mgr.quorum_gate(tmp, 1, names, failures)
+            mgr._publish(tmp, final, 1, verified, failures, {})
+            published = True
+        except QuorumError:
+            shutil.rmtree(tmp, ignore_errors=True)   # what _write does
+            published = False
+        if published:
+            with open(os.path.join(final, "MANIFEST.json")) as f:
+                meta = json.load(f)
+            assert meta["complete"] is True
+            assert set(meta["manifest"]) == set(names)   # FULL coverage
+            for name, info in meta["manifest"].items():
+                blob = open(os.path.join(final, info["file"]), "rb").read()
+                assert len(blob) == info["bytes"], name
+                assert zlib.crc32(blob) == info["crc32"], name
+            assert mgr.all_steps() == [1]
+        else:
+            assert mgr.all_steps() == []                 # NOTHING published
+            assert not os.path.exists(final)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
