@@ -89,10 +89,11 @@ def main() -> None:
         rows.append(f"{name},{us:.2f},{derived}")
 
     from benchmarks import (ckpt_stall, comm_model, dram, hlo_compare,
-                            layout, link_latency, micro, overlap, scaling)
+                            layout, link_latency, micro, overlap, scaling,
+                            serve_bench)
     results = {}
     for mod in (comm_model, scaling, dram, layout, link_latency, micro,
-                hlo_compare, overlap, ckpt_stall):
+                hlo_compare, overlap, ckpt_stall, serve_bench):
         try:
             results[mod.__name__.split(".")[-1]] = mod.main(emit)
         except Exception as e:  # keep the harness robust; surface the failure
@@ -112,6 +113,7 @@ def main() -> None:
             "guard_overhead": (results.get("ckpt_stall") or {}).get("guard"),
             "theory_pipeline": (results.get("comm_model")
                                 or {}).get("pipeline"),
+            "serving": results.get("serve_bench"),
         }
         from benchmarks import comm_model as _cm
         payload["theory_overlap"] = _cm.overlap_rows()

@@ -1,0 +1,103 @@
+"""Serving throughput: decode tokens/s vs concurrent streams on the
+continuous-batching engine + paged KV pool (docs/DESIGN.md §10).
+
+For each stream count ``n`` the engine runs ``2n`` requests (arrivals
+outpace slots, mixed prompt lengths) through ``n`` decode slots on the
+qwen3 smoke config and reports steady-state decode throughput (both
+jitted functions warmed first — compile time is excluded by
+construction) and mean prefill latency:
+
+  serving_tokps_s{n}      decode tokens/s with n concurrent streams
+  serving_prefill_ms_s{n} mean single-sequence prefill latency
+  serving_peak_blocks     peak pool blocks-in-use on the widest run vs the
+                          dense arena equivalent (slots*ceil(max_seq/block))
+  serving_paged_bytes     bytes actually leased at peak vs the dense
+                          [slots, max_seq] cache arena bytes
+
+Persisted into BENCH_overlap.json as the ``serving`` section (via
+``benchmarks/run.py``, or in place with ``python -m benchmarks.serve_bench``).
+"""
+import time
+
+STREAMS = (1, 2, 4)
+BLOCK = 8
+GEN = 16
+PROMPT_LENS = (8, 20, 12)
+ARCH = "qwen3-0.6b"
+
+
+def main(emit):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.config import ParallelConfig, RunConfig, get_smoke_config
+    from repro.models import lm
+    from repro.serve.cache import PoolConfig, blocks_for, dense_cache_bytes
+    from repro.serve.engine import DecodeEngine, Request
+
+    cfg = get_smoke_config(ARCH)
+    pcfg = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1)
+    max_seq = max(PROMPT_LENS) + GEN
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=p).astype(np.int32)
+               for p in PROMPT_LENS]
+
+    out = {"streams": {}, "arch": ARCH, "block": BLOCK, "gen": GEN,
+           "prompt_lens": list(PROMPT_LENS)}
+    for n in STREAMS:
+        pool = PoolConfig(slots=n, block=BLOCK,
+                          num_blocks=n * blocks_for(max_seq, BLOCK) + 1,
+                          max_seq=max_seq)
+        rc = RunConfig("serve", "decode", max_seq, n)
+        eng = DecodeEngine(cfg, pcfg, rc, params, pool,
+                           compute_dtype=jnp.float32)
+        eng.warmup(prompt_lens=PROMPT_LENS)
+        reqs = [Request(rid=i, prompt=prompts[i % len(prompts)], max_new=GEN,
+                        arrival=0) for i in range(2 * n)]
+        eng.run(reqs)
+        toks = eng.stats["decode_tokens"]
+        dec_s = max(eng.stats["decode_s"], 1e-9)
+        pf = eng.stats["prefill_s"]
+        pf_ms = 1e3 * sum(pf) / max(1, len(pf))
+        dense_b = dense_cache_bytes(cfg, n, max_seq, jnp.float32)
+        rec = {"slots": n, "tokps": toks / dec_s, "prefill_ms": pf_ms,
+               "decode_tokens": toks, "peak_blocks": eng.pool.peak_blocks_in_use,
+               "dense_equiv_blocks": pool.dense_equiv_blocks,
+               "paged_bytes": eng.pool.paged_bytes_peak(),
+               "dense_bytes": dense_b,
+               "preemptions": eng.stats["preemptions"]}
+        out["streams"][str(n)] = rec
+        emit(f"serving_tokps_s{n}", 1e6 * dec_s / max(1, toks),
+             f"{rec['tokps']:.1f}tok/s")
+        emit(f"serving_prefill_ms_s{n}", 1e3 * pf_ms, f"{pf_ms:.1f}ms")
+    wide = out["streams"][str(STREAMS[-1])]
+    emit("serving_peak_blocks", 0.0,
+         f"{wide['peak_blocks']}vs{wide['dense_equiv_blocks']}dense")
+    emit("serving_paged_bytes", 0.0,
+         f"{wide['paged_bytes']}vs{wide['dense_bytes']}dense")
+    return out
+
+
+if __name__ == "__main__":
+    # standalone: update the `serving` section of BENCH_overlap.json in place
+    import json
+    from benchmarks.run import BENCH_JSON
+    rows = []
+
+    def emit(name, us, derived):
+        rows.append(f"{name},{us:.2f},{derived}")
+
+    res = main(emit)
+    try:
+        with open(BENCH_JSON) as f:
+            payload = json.load(f)
+    except Exception:
+        payload = {}
+    payload["serving"] = res
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    rows.append(f"bench_overlap_json,0.00,{BENCH_JSON}")
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)

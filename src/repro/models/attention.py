@@ -72,6 +72,29 @@ class MLACache(NamedTuple):
     length: jax.Array
 
 
+class PagedKVCache(NamedTuple):
+    """Block-paged KV cache (serving tier, docs/DESIGN.md §10).
+
+    The arena is ONE pool of fixed-size blocks shared by every decode slot;
+    slot b owns the blocks listed in ``block_table[b]`` (0 = the reserved
+    null block that absorbs writes from padded/inactive slots and backs
+    table entries beyond a slot's leased range).  ``lengths`` is per-slot —
+    continuous batching means every row sits at a different position.
+    """
+    k: jax.Array            # [n_blocks, block, nkv, dh] shared arena
+    v: jax.Array
+    block_table: jax.Array  # [B, max_blocks] int32 block ids (0 = null)
+    lengths: jax.Array      # [B] int32 tokens already written per slot
+
+
+class PagedMLACache(NamedTuple):
+    """Paged variant of :class:`MLACache` (same block-table protocol)."""
+    c_kv: jax.Array         # [n_blocks, block, kv_lora]
+    k_rope: jax.Array       # [n_blocks, block, dr]
+    block_table: jax.Array  # [B, max_blocks] int32
+    lengths: jax.Array      # [B] int32
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
     dh = cfg.resolved_head_dim
     return KVCache(jnp.zeros((batch, s_max, cfg.num_kv_heads, dh), dtype),
@@ -84,6 +107,55 @@ def init_mla_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
     return MLACache(jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
                     jnp.zeros((batch, s_max, m.qk_rope_head_dim), dtype),
                     jnp.zeros((), jnp.int32))
+
+
+def init_paged_kv(cfg: ModelConfig, num_blocks: int, block: int, batch: int,
+                  max_blocks: int, dtype):
+    dh = cfg.resolved_head_dim
+    return PagedKVCache(
+        jnp.zeros((num_blocks, block, cfg.num_kv_heads, dh), dtype),
+        jnp.zeros((num_blocks, block, cfg.num_kv_heads, dh), dtype),
+        jnp.zeros((batch, max_blocks), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def init_paged_mla(cfg: ModelConfig, num_blocks: int, block: int, batch: int,
+                   max_blocks: int, dtype):
+    m = cfg.mla
+    return PagedMLACache(
+        jnp.zeros((num_blocks, block, m.kv_lora_rank), dtype),
+        jnp.zeros((num_blocks, block, m.qk_rope_head_dim), dtype),
+        jnp.zeros((batch, max_blocks), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def paged_write(arena, vals, block_table, lengths):
+    """Scatter ``vals`` [B, S, ...] into the block arena.
+
+    Token s of row b lands at absolute position ``lengths[b] + s``, i.e.
+    block ``block_table[b, pos // block]`` offset ``pos % block``.  Positions
+    past the table's leased range resolve to the null block (entry 0), so
+    prompt padding and inactive decode slots write trash into block 0
+    instead of corrupting a neighbour's lease; duplicate null-block indices
+    scatter in unspecified order, which is fine — null-block contents are
+    never read unmasked."""
+    B, S = vals.shape[:2]
+    block = arena.shape[1]
+    pos = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    blk_slot = jnp.minimum(pos // block, block_table.shape[1] - 1)
+    blk = jnp.take_along_axis(block_table, blk_slot, axis=1)       # [B,S]
+    return arena.at[blk, pos % block].set(vals.astype(arena.dtype))
+
+
+def paged_gather(arena, block_table):
+    """Gather a slot-contiguous [B, max_blocks*block, ...] view of the pages.
+
+    Positions beyond a slot's length read null-block / stale-lease garbage;
+    every consumer masks with the per-slot ``lengths`` (exact-zero softmax
+    weights — see the bit-exactness argument in docs/DESIGN.md §10)."""
+    B, nblk = block_table.shape
+    g = arena[block_table]                     # [B, nblk, block, ...]
+    return g.reshape(B, nblk * arena.shape[1], *arena.shape[2:])
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +257,22 @@ def apply_attn(pctx, cfg: ModelConfig, p, x, *, positions, causal: bool = True,
     k = L.apply_rope(k, cos, sin)
 
     new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
-    if cache is not None:
+    if isinstance(cache, PagedKVCache):
+        # paged serving path: write the new tokens through the block table,
+        # then attend over the gathered page view (per-slot lengths mask the
+        # unwritten tail exactly — docs/DESIGN.md §10)
+        kc = paged_write(cache.k, k, cache.block_table, cache.lengths)
+        vc = paged_write(cache.v, v, cache.block_table, cache.lengths)
+        new_cache = PagedKVCache(kc, vc, cache.block_table, cache.lengths + S)
+        k = paged_gather(kc, cache.block_table)
+        v = paged_gather(vc, cache.block_table)
+        if S == 1:
+            kv_len = (cache.lengths + S)[:, None]          # [B,1] per-slot
+        else:
+            # paged prefill is per-admission (one sequence): scalar offsets
+            assert B == 1, "paged prefill runs one sequence at a time"
+            kv_len, q_off = cache.lengths[0] + S, cache.lengths[0]
+    elif cache is not None:
         kc = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
                                       (0, cache.length, 0, 0))
         vc = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
@@ -193,7 +280,6 @@ def apply_attn(pctx, cfg: ModelConfig, p, x, *, positions, causal: bool = True,
         new_cache = KVCache(kc, vc, cache.length + S)
         k, v = kc, vc
         kv_len, q_off = new_cache.length, cache.length
-        positions_last = positions[:, -1:]
 
     if cache is not None and S == 1:
         # decode: grouped GQA, KV cache stays kv-head-sharded
@@ -277,7 +363,20 @@ def apply_mla(pctx, cfg: ModelConfig, p, x, *, positions,
     k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
 
     new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
-    if cache is not None:
+    if isinstance(cache, PagedMLACache):
+        cc = paged_write(cache.c_kv, c_kv, cache.block_table, cache.lengths)
+        kr = paged_write(cache.k_rope, k_rope, cache.block_table,
+                         cache.lengths)
+        new_cache = PagedMLACache(cc, kr, cache.block_table,
+                                  cache.lengths + S)
+        c_kv = paged_gather(cc, cache.block_table).astype(x.dtype)
+        k_rope = paged_gather(kr, cache.block_table).astype(x.dtype)
+        if S == 1:
+            kv_len = (cache.lengths + S)[:, None]          # [B,1] per-slot
+        else:
+            assert B == 1, "paged prefill runs one sequence at a time"
+            kv_len, q_off = cache.lengths[0] + S, cache.lengths[0]
+    elif cache is not None:
         cc = lax.dynamic_update_slice(cache.c_kv, c_kv.astype(cache.c_kv.dtype),
                                       (0, cache.length, 0))
         kr = lax.dynamic_update_slice(cache.k_rope, k_rope.astype(cache.k_rope.dtype),

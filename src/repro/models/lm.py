@@ -128,36 +128,13 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 # ---------------------------------------------------------------------------
 
 def init_caches(cfg: ModelConfig, batch: int, s_max: int, dtype):
-    """Stacked per-layer decode caches."""
-    fam = cfg.family
-    if fam == "ssm":
-        st = SSM.init_ssm_state(cfg, batch, dtype)
-        return {"mamba": jax.tree.map(
-            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), st)}
-    if fam == "hybrid":
-        st = SSM.init_ssm_state(cfg, batch, dtype)
-        every = max(1, cfg.shared_attn_every)
-        n_apps = cfg.num_layers // every
-        kv = ATT.init_kv_cache(cfg, batch, s_max, dtype)
-        return {
-            "mamba": jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), st),
-            "attn": jax.tree.map(
-                lambda a: jnp.broadcast_to(a, (n_apps, *a.shape)), kv),
-        }
-    mk = (lambda: ATT.init_mla_cache(cfg, batch, s_max, dtype)) if cfg.mla else \
-        (lambda: ATT.init_kv_cache(cfg, batch, s_max, dtype))
-    c = mk()
-    out = {"attn": jax.tree.map(
-        lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), c)}
-    if cfg.is_encdec:
-        dh = cfg.resolved_head_dim
-        F = cfg.frontend_stub_len
-        out["cross"] = (jnp.zeros((cfg.num_layers, batch, F, cfg.num_kv_heads, dh),
-                                  dtype),
-                        jnp.zeros((cfg.num_layers, batch, F, cfg.num_kv_heads, dh),
-                                  dtype))
-    return out
+    """Stacked per-layer decode caches (dense layout).
+
+    Cache layout now lives in ``repro.serve.cache`` (docs/DESIGN.md §10);
+    this delegates to the dense factory there so training-side callers are
+    unchanged.  Lazy import: serve.cache imports the model modules."""
+    from repro.serve import cache as CM
+    return CM.init_dense(cfg, batch, s_max, dtype)
 
 
 def cache_length(caches) -> jax.Array:

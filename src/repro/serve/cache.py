@@ -1,0 +1,335 @@
+"""Cache manager for the decode service: dense layout factory + the paged
+block-pool (docs/DESIGN.md §10).
+
+Cache *layout* lives here, factored out of ``lm.init_caches`` (which now
+delegates to :func:`init_dense` so the training-side dense path is
+unchanged).  Two layouts exist:
+
+* **dense** — the classic per-sequence arena: every cache leaf is
+  ``[L, B, S_max, ...]``, so each sequence pays ``S_max`` tokens of KV
+  memory up front regardless of its actual length.  Training/eval tests
+  and the multi-device ``cache_specs`` sharding path keep using this.
+
+* **paged** — one shared arena of fixed-size blocks
+  (``[L, num_blocks, block, ...]``) that sequences of different lengths
+  lease on demand through a per-slot **block table**
+  (``[slots, max_blocks]`` int32).  Block id 0 is the reserved *null
+  block*: it backs every unleased table entry, so writes from padded
+  prompt positions or inactive decode slots land in trash instead of a
+  neighbour's lease, and gathered reads past a slot's length are masked
+  to exact-zero softmax weight by the per-slot ``lengths``
+  (models/attention.py ``paged_write`` / ``paged_gather``).
+
+:class:`CachePool` is the host-side manager: it owns the device arenas,
+the free-block list, and the per-slot accounting, and exposes the
+allocate / append / free protocol the engine drives:
+
+* ``admit(prompt_len)`` — the **admission gate**: a prompt is admitted
+  only when a slot is free AND the free list covers its prompt blocks
+  (``ceil(prompt_len / block)``); otherwise the request stays queued.
+  Admission leases prompt blocks only — generated tokens lease lazily.
+* ``ensure_append(slot)`` — before a decode tick, lease the block that
+  will hold position ``lengths[slot]`` if the slot's current lease does
+  not cover it.  Returns False when the pool is exhausted — the engine's
+  **eviction protocol** then preempts the youngest running sequence
+  (frees its lease, requeues its request for a deterministic greedy
+  re-run) until the append fits.
+* ``free_slot(slot)`` — return the lease to the free list (EOS/max-len).
+
+SSM recurrent states (mamba / hybrid) are O(1) per sequence, so they are
+pooled per-slot rather than block-paged: the pool holds ``[L, slots, ...]``
+state arenas and re-zeroes a slot's row on admission via the prefill
+scatter.  Peak ``blocks_in_use`` is tracked so benchmarks can compare the
+paged pool against the dense ``slots * ceil(max_seq/block)`` arena
+equivalent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import attention as ATT
+from repro.models import ssm as SSM
+
+
+# ---------------------------------------------------------------------------
+# dense layout (factored out of lm.init_caches)
+# ---------------------------------------------------------------------------
+
+def init_dense(cfg: ModelConfig, batch: int, s_max: int, dtype):
+    """Stacked per-layer dense decode caches ([L, B, S_max, ...] leaves).
+
+    The pre-pool ``lm.init_caches`` layout, verbatim — training-side tests
+    and multi-device serving keep this path."""
+    fam = cfg.family
+    if fam == "ssm":
+        st = SSM.init_ssm_state(cfg, batch, dtype)
+        return {"mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), st)}
+    if fam == "hybrid":
+        st = SSM.init_ssm_state(cfg, batch, dtype)
+        n_apps = cfg.num_layers // max(1, cfg.shared_attn_every)
+        kv = ATT.init_kv_cache(cfg, batch, s_max, dtype)
+        return {
+            "mamba": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), st),
+            "attn": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_apps, *a.shape)), kv),
+        }
+    mk = (lambda: ATT.init_mla_cache(cfg, batch, s_max, dtype)) if cfg.mla \
+        else (lambda: ATT.init_kv_cache(cfg, batch, s_max, dtype))
+    c = mk()
+    out = {"attn": jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), c)}
+    if cfg.is_encdec:
+        dh = cfg.resolved_head_dim
+        F = cfg.frontend_stub_len
+        out["cross"] = (jnp.zeros((cfg.num_layers, batch, F,
+                                   cfg.num_kv_heads, dh), dtype),
+                        jnp.zeros((cfg.num_layers, batch, F,
+                                   cfg.num_kv_heads, dh), dtype))
+    return out
+
+
+def dense_cache_bytes(cfg: ModelConfig, batch: int, s_max: int, dtype) -> int:
+    """Total bytes of the dense [L,B,S_max,...] cache arena."""
+    tree = jax.eval_shape(lambda: init_dense(cfg, batch, s_max, dtype))
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# paged pool
+# ---------------------------------------------------------------------------
+
+NULL_BLOCK = 0           # reserved trash block backing unleased table entries
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    """Shape of the paged pool.
+
+    ``slots`` is the fixed decode batch (jit shape — admission pads into
+    it, never resizes it); ``block`` is tokens per block; ``num_blocks``
+    is the arena capacity INCLUDING the reserved null block; ``max_seq``
+    caps prompt + generated tokens per sequence and sizes the block
+    table's width."""
+    slots: int
+    block: int
+    num_blocks: int
+    max_seq: int
+
+    def __post_init__(self):
+        assert self.slots >= 1, self.slots
+        assert self.block >= 1, self.block
+        assert self.max_seq >= 1, self.max_seq
+        assert self.num_blocks >= 2, (
+            f"num_blocks={self.num_blocks}: need the null block + >= 1 "
+            "leasable block")
+
+    @property
+    def max_blocks_per_slot(self) -> int:
+        return -(-self.max_seq // self.block)
+
+    @property
+    def leasable_blocks(self) -> int:
+        return self.num_blocks - 1          # block 0 is never leased
+
+    @property
+    def dense_equiv_blocks(self) -> int:
+        """Blocks a dense [slots, max_seq] arena would pin up front."""
+        return self.slots * self.max_blocks_per_slot
+
+
+def blocks_for(tokens: int, block: int) -> int:
+    return max(1, -(-tokens // block))
+
+
+class CachePool:
+    """Host-side paged cache manager: device arenas + block accounting.
+
+    The device side is a dict of layer-stacked arena leaves (attention
+    K/V or MLA latents paged over blocks; SSM states per-slot).  The
+    pytrees handed to the jitted prefill/decode steps are assembled per
+    call from the arenas plus the CURRENT host block table / lengths
+    (``decode_tree`` / ``prefill_tree``), and the updated arenas are
+    absorbed back afterwards — the host copy of table/lengths is always
+    authoritative."""
+
+    def __init__(self, cfg: ModelConfig, pool: PoolConfig, dtype=jnp.float32):
+        if cfg.is_encdec:
+            raise NotImplementedError(
+                "paged pool: enc-dec cross caches are per-prompt dense; "
+                "use the dense serving path for audio archs")
+        self.cfg, self.pool, self.dtype = cfg, pool, dtype
+        fam = cfg.family
+        mb = pool.max_blocks_per_slot
+        self.arenas: Dict[str, Any] = {}
+        self.states: Dict[str, Any] = {}
+        if fam in ("ssm", "hybrid"):
+            st = SSM.init_ssm_state(cfg, pool.slots, dtype)
+            self.states["mamba"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.num_layers, *a.shape)).copy(), st)
+        if fam != "ssm":
+            n_app = (cfg.num_layers // max(1, cfg.shared_attn_every)
+                     if fam == "hybrid" else cfg.num_layers)
+            mk = ATT.init_paged_mla if cfg.mla else ATT.init_paged_kv
+            paged = mk(cfg, pool.num_blocks, pool.block, pool.slots, mb, dtype)
+            # arenas only — table/lengths leaves are rebuilt per call
+            self.arenas["attn"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_app, *a.shape)).copy(),
+                (paged.k, paged.v) if not cfg.mla
+                else (paged.c_kv, paged.k_rope))
+        # host accounting
+        self.table = np.zeros((pool.slots, mb), np.int32)
+        self.lengths = np.zeros(pool.slots, np.int32)
+        self.active = np.zeros(pool.slots, bool)
+        self.free: List[int] = list(range(1, pool.num_blocks))
+        self.owned: List[List[int]] = [[] for _ in range(pool.slots)]
+        self.peak_blocks_in_use = 0
+
+    # -- accounting ------------------------------------------------------
+    @property
+    def blocks_in_use(self) -> int:
+        return self.pool.leasable_blocks - len(self.free)
+
+    @property
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.pool.slots) if not self.active[s]]
+
+    def _lease(self, slot: int) -> bool:
+        if not self.free:
+            return False
+        b = self.free.pop()
+        self.owned[slot].append(b)
+        self.table[slot, len(self.owned[slot]) - 1] = b
+        self.peak_blocks_in_use = max(self.peak_blocks_in_use,
+                                      self.blocks_in_use)
+        return True
+
+    def can_admit(self, prompt_len: int) -> bool:
+        return (prompt_len <= self.pool.max_seq
+                and bool(self.free_slots)
+                and len(self.free) >= blocks_for(prompt_len, self.pool.block))
+
+    def admit(self, prompt_len: int) -> Optional[int]:
+        """Admission gate: lease prompt blocks into a free slot, or None."""
+        if not self.can_admit(prompt_len):
+            return None
+        slot = self.free_slots[0]
+        for _ in range(blocks_for(prompt_len, self.pool.block)):
+            ok = self._lease(slot)
+            assert ok, "can_admit checked the free list"
+        self.active[slot] = True
+        self.lengths[slot] = 0              # prefill commits the real length
+        return slot
+
+    def commit_prefill(self, slot: int, prompt_len: int) -> None:
+        assert self.active[slot]
+        self.lengths[slot] = prompt_len
+
+    def ensure_append(self, slot: int) -> bool:
+        """Lease the block holding position ``lengths[slot]`` if missing.
+
+        False = out of blocks (caller runs the eviction protocol) or the
+        slot hit ``max_seq`` (caller must have finished it already)."""
+        need = self.lengths[slot] // self.pool.block + 1
+        if need > self.pool.max_blocks_per_slot:
+            return False
+        while len(self.owned[slot]) < need:
+            if not self._lease(slot):
+                return False
+        return True
+
+    def advance(self, slot: int) -> None:
+        self.lengths[slot] += 1
+
+    def free_slot(self, slot: int) -> None:
+        for b in self.owned[slot]:
+            self.free.append(b)
+        self.owned[slot] = []
+        self.table[slot] = NULL_BLOCK
+        self.lengths[slot] = 0
+        self.active[slot] = False
+
+    # -- device tree assembly -------------------------------------------
+    def _paged(self, arenas, table_rows, lengths_rows):
+        """Assemble the paged cache NamedTuple with table/lengths broadcast
+        over the layer axis (scan xs need a leading layer dim)."""
+        n_app = jax.tree.leaves(arenas)[0].shape[0]
+        B = table_rows.shape[0]
+        bt = jnp.broadcast_to(jnp.asarray(table_rows, jnp.int32),
+                              (n_app, B, table_rows.shape[1]))
+        ln = jnp.broadcast_to(jnp.asarray(lengths_rows, jnp.int32), (n_app, B))
+        if self.cfg.mla:
+            return ATT.PagedMLACache(arenas[0], arenas[1], bt, ln)
+        return ATT.PagedKVCache(arenas[0], arenas[1], bt, ln)
+
+    def decode_tree(self):
+        """Cache pytree for one decode tick over all ``slots`` rows."""
+        out: Dict[str, Any] = {}
+        if "attn" in self.arenas:
+            out["attn"] = self._paged(self.arenas["attn"], self.table,
+                                      self.lengths)
+        if "mamba" in self.states:
+            out["mamba"] = self.states["mamba"]
+        return out
+
+    def prefill_tree(self, slot: int):
+        """Cache pytree for a single-slot prefill (batch 1, length 0)."""
+        out: Dict[str, Any] = {}
+        if "attn" in self.arenas:
+            out["attn"] = self._paged(self.arenas["attn"],
+                                      self.table[slot:slot + 1],
+                                      np.zeros(1, np.int32))
+        if "mamba" in self.states:
+            out["mamba"] = jax.tree.map(
+                lambda a: jnp.zeros((a.shape[0], 1, *a.shape[2:]), a.dtype),
+                self.states["mamba"])
+        return out
+
+    def absorb_prefill(self, slot: int, new_tree) -> None:
+        """Store a prefill's updated arenas; scatter its SSM state row."""
+        if "attn" in self.arenas:
+            c = new_tree["attn"]
+            self.arenas["attn"] = ((c.c_kv, c.k_rope) if self.cfg.mla
+                                   else (c.k, c.v))
+        if "mamba" in self.states:
+            self.states["mamba"] = jax.tree.map(
+                lambda full, one: full.at[:, slot].set(one[:, 0]),
+                self.states["mamba"], new_tree["mamba"])
+
+    def absorb_decode(self, new_tree) -> None:
+        if "attn" in self.arenas:
+            c = new_tree["attn"]
+            self.arenas["attn"] = ((c.c_kv, c.k_rope) if self.cfg.mla
+                                   else (c.k, c.v))
+        if "mamba" in self.states:
+            self.states["mamba"] = new_tree["mamba"]
+
+    # -- reporting -------------------------------------------------------
+    @property
+    def block_bytes(self) -> int:
+        """Bytes one leased block pins across all layers' paged arenas."""
+        # arena leaf shape: [n_app, num_blocks, block, ...]
+        per_block = 0
+        for leaf in jax.tree.leaves(self.arenas):
+            n_app, _, block = leaf.shape[0], leaf.shape[1], leaf.shape[2]
+            per_block += (n_app * block * int(np.prod(leaf.shape[3:]))
+                          * leaf.dtype.itemsize)
+        return per_block
+
+    def paged_bytes_in_use(self) -> int:
+        """Bytes of currently leased (non-null) blocks."""
+        return self.block_bytes * self.blocks_in_use
+
+    def paged_bytes_peak(self) -> int:
+        """Bytes leased at the pool's high-water mark."""
+        return self.block_bytes * self.peak_blocks_in_use

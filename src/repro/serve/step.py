@@ -57,8 +57,42 @@ def build_prefill(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig, mesh,
     return prefill
 
 
+def build_prefill_paged(cfg: ModelConfig, pcfg: ParallelConfig, mesh, *,
+                        compute_dtype=jnp.bfloat16):
+    """Prefill one admitted sequence into a paged cache tree.
+
+    Unlike :func:`build_prefill`, the caches come in as an argument (the
+    pool's ``prefill_tree``) so the new tokens are written through the
+    slot's block table (docs/DESIGN.md §10).  ``tokens`` is ``[1, P]``
+    where P may exceed the true prompt length (fixed-shape padding for
+    attention-family archs); ``length`` is the true prompt length and
+    selects the logits row — padded tail positions write into the leased
+    tail / null block and are masked by the per-slot lengths until real
+    decode tokens overwrite them.
+    """
+    pctx = PCtx(mesh, pcfg, "prefill")
+
+    def prefill(params, caches, tokens, length):
+        B, S = tokens.shape
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        mb = {"tokens": tokens, "positions": pos, "_dtype": compute_dtype}
+        out = lm.forward(pctx, cfg, params, mb, caches=caches)
+        last = jax.lax.dynamic_slice_in_dim(
+            out.logits, jnp.maximum(length - 1, 0), 1, axis=1)
+        return last, out.caches
+
+    return prefill
+
+
 def build_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
                       mesh, *, compute_dtype=jnp.bfloat16):
+    """One-token decode against a filled cache tree.
+
+    The cache tree decides the layout: dense ``KVCache``/``MLACache``
+    leaves take the classic dynamic-update path, ``PagedKVCache``/
+    ``PagedMLACache`` leaves write/gather through their block tables —
+    the step function itself is layout-agnostic.
+    """
     pctx = PCtx(mesh, pcfg, "decode")
 
     def decode_step(params, caches, tokens, positions):
@@ -70,8 +104,51 @@ def build_decode_step(cfg: ModelConfig, pcfg: ParallelConfig, rc: RunConfig,
     return decode_step
 
 
+# ---------------------------------------------------------------------------
+# sampling — the single serve-path entry point
+# ---------------------------------------------------------------------------
+
 def greedy_sample(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits, key, temperature: float = 1.0):
+    """Categorical sample from temperature-scaled logits (fp32 softmax)."""
+    lf = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def top_p_sample(logits, key, top_p: float = 0.9, temperature: float = 1.0):
+    """Nucleus sampling: keep the smallest prefix of the descending-sorted
+    distribution whose cumulative mass reaches ``top_p``, renormalize,
+    sample, and map back through the sort permutation."""
+    lf = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    sort_idx = jnp.argsort(-lf, axis=-1)
+    sorted_lf = jnp.take_along_axis(lf, sort_idx, axis=-1)
+    probs = jax.nn.softmax(sorted_lf, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens whose preceding cumulative mass is < top_p (always >= 1 kept)
+    keep = (cum - probs) < top_p
+    masked = jnp.where(keep, sorted_lf, -jnp.inf)
+    choice = jax.random.categorical(key, masked, axis=-1)
+    return jnp.take_along_axis(
+        sort_idx, choice[..., None], axis=-1)[..., 0].astype(jnp.int32)
+
+
+def sample(logits, *, method: str = "greedy", key=None, temperature: float = 1.0,
+           top_p: float = 0.9):
+    """Unified sampling entry point for every serve path (greedy /
+    temperature / top-p).  ``logits`` is ``[..., V]``; returns int32 ids
+    with the leading shape."""
+    if method == "greedy":
+        return greedy_sample(logits)
+    if key is None:
+        raise ValueError(f"sampling method {method!r} needs a PRNG key")
+    if method == "temperature":
+        return temperature_sample(logits, key, temperature)
+    if method == "top_p":
+        return top_p_sample(logits, key, top_p, temperature)
+    raise ValueError(f"unknown sampling method {method!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -99,29 +176,34 @@ def cache_specs(cfg: ModelConfig, pcfg: ParallelConfig, mesh, batch: int):
             return None
         return shd._one(lay.batch_axes)
 
+    def data_b():
+        # no-head-axis leaves (MLA latents, conv states): shard B over the
+        # data axes only — never absorb model axes a head leaf can't match
+        if batch % ax.n_data:
+            return None
+        return shd._one(ax.data_axes)
+
     def f(kp, leaf):
         names = [getattr(k, "key", getattr(k, "name", None)) for k in kp]
         rank = len(leaf.shape)
         if "attn" in names or "cross" in names:
-            lay = kv_layout(cfg.num_kv_heads if cfg.num_kv_heads else 1)
-            b = bspec(lay)
-            h = shd._one(lay.head_axes)
             if rank == 5:     # [L,B,S,nkv,dh]
-                return P(None, b, None, h, None)
-            if rank == 4:     # MLA [L,B,S,lora]
-                return P(None, b, None, None)
-            if rank == 3:     # MLA k_rope [L,B,S,dr] collapsed or lengths
-                return P(None, b, None)
+                # head count from the leaf ITSELF, not cfg: the solver must
+                # see exactly the nkv axis init_kv_cache built (GQA/MQA), or
+                # the spec tree silently mis-shards the cache
+                lay = kv_layout(leaf.shape[3])
+                return P(None, bspec(lay), None, shd._one(lay.head_axes), None)
+            if rank == 4:     # MLA c_kv [L,B,S,lora]
+                return P(None, data_b(), None, None)
+            if rank == 3:     # MLA k_rope [L,B,S] collapsed or lengths
+                return P(None, data_b(), None)
             return P()
         if "mamba" in names:
-            from repro.models import ssm as SSM
-            lay = kv_layout(SSM.n_heads(cfg))
-            b = bspec(lay)
-            h = shd._one(lay.head_axes)
             if rank == 5:     # ssm state [L,B,nh,dh,state]
-                return P(None, b, h, None, None)
+                lay = kv_layout(leaf.shape[2])
+                return P(None, bspec(lay), shd._one(lay.head_axes), None, None)
             if rank == 4:     # conv state [L,B,K-1,C]
-                return P(None, b, None, None)
+                return P(None, data_b(), None, None)
             return P()
         return P()
 

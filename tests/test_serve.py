@@ -1,0 +1,278 @@
+"""Serving tier: paged cache pool accounting, sampling entry points,
+incremental-decode parity (dense AND paged vs teacher-forced full forward),
+and the continuous-batching engine's bit-exactness + memory contract
+(docs/DESIGN.md §10).
+
+The multi-device GQA cache_specs regression and the larger engine trace run
+in tests/_mp/check_serve.py (subprocess — jax locks the device count)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ParallelConfig, RunConfig, get_smoke_config
+from repro.models import lm
+from repro.parallel.context import PCtx
+from repro.serve import step as SRV
+from repro.serve.cache import CachePool, PoolConfig, blocks_for, init_dense
+from repro.serve.engine import DecodeEngine, Request
+
+PCFG = ParallelConfig(strategy="hecaton", data=1, model=1, mx=1, my=1)
+MAXSEQ = 24
+GEN = 6
+
+
+# ---------------------------------------------------------------------------
+# pool accounting (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def _pool(slots=2, block=4, num_blocks=9, max_seq=MAXSEQ):
+    cfg = get_smoke_config("qwen3-0.6b")
+    return CachePool(cfg, PoolConfig(slots, block, num_blocks, max_seq),
+                     dtype=jnp.float32)
+
+
+def test_pool_admission_gate():
+    p = _pool(slots=2, block=4, num_blocks=9)      # 8 leasable
+    assert p.can_admit(9)                          # 3 blocks
+    s0 = p.admit(9)
+    assert s0 is not None and p.blocks_in_use == 3
+    assert p.admit(25) is None                     # > max_seq
+    s1 = p.admit(17)                               # 5 blocks -> 8 total
+    assert s1 is not None and p.blocks_in_use == 8
+    assert not p.can_admit(1)                      # slots exhausted too
+    p.free_slot(s0)
+    assert p.blocks_in_use == 5 and p.can_admit(4)
+    # freed slot's table rows are back on the null block
+    assert (p.table[s0] == 0).all()
+
+
+def test_pool_append_and_peak():
+    p = _pool(slots=2, block=4, num_blocks=9)
+    s = p.admit(4)                                 # exactly one block
+    p.commit_prefill(s, 4)
+    assert p.blocks_in_use == 1
+    assert p.ensure_append(s)                      # position 4 -> block 2
+    assert p.blocks_in_use == 2
+    p.advance(s)
+    assert p.ensure_append(s) and p.blocks_in_use == 2   # 5 fits block 2
+    assert p.peak_blocks_in_use == 2
+    # exhaust the free list: appends must start failing, not corrupt
+    other = p.admit(24)                            # 6 blocks -> 8 in use
+    p.commit_prefill(other, 20)
+    for _ in range(3):
+        p.advance(s)
+    assert not p.ensure_append(s)                  # position 8 needs block 3
+    p.free_slot(other)
+    assert p.ensure_append(s)
+
+
+def test_pool_table_null_block_invariant():
+    p = _pool()
+    s = p.admit(5)
+    # entries beyond the lease stay on the null block
+    owned = blocks_for(5, p.pool.block)
+    assert (p.table[s, owned:] == 0).all()
+    assert (p.table[s, :owned] > 0).all()
+
+
+def test_pool_config_validation():
+    with pytest.raises(AssertionError):
+        PoolConfig(slots=1, block=4, num_blocks=1, max_seq=8)
+    pc = PoolConfig(slots=3, block=4, num_blocks=10, max_seq=10)
+    assert pc.max_blocks_per_slot == 3
+    assert pc.leasable_blocks == 9
+    assert pc.dense_equiv_blocks == 9
+
+
+def test_engine_submit_rejects_unservable():
+    cfg = get_smoke_config("qwen3-0.6b")
+    rc = RunConfig("serve", "decode", 8, 1)
+    params = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+    eng = DecodeEngine(cfg, PCFG, rc, params,
+                       PoolConfig(1, 4, 2, 8), compute_dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        eng.submit(Request(0, np.zeros(7, np.int32), max_new=4))  # > max_seq
+    with pytest.raises(ValueError):
+        eng.submit(Request(1, np.zeros(6, np.int32), max_new=2))  # 2 blocks > 1
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_entry_point():
+    key = jax.random.PRNGKey(0)
+    lg = jax.random.normal(key, (3, 64))
+    g = SRV.sample(lg, method="greedy")
+    assert (np.asarray(g) == np.asarray(jnp.argmax(lg, -1))).all()
+    for m in ("temperature", "top_p"):
+        a = SRV.sample(lg, method=m, key=key, temperature=0.7, top_p=0.8)
+        b = SRV.sample(lg, method=m, key=key, temperature=0.7, top_p=0.8)
+        assert a.shape == (3,) and a.dtype == jnp.int32
+        assert (np.asarray(a) == np.asarray(b)).all()      # same key -> same
+        assert ((np.asarray(a) >= 0) & (np.asarray(a) < 64)).all()
+    # nucleus with a tiny mass keeps only the argmax
+    t = SRV.sample(lg, method="top_p", key=key, top_p=1e-6)
+    assert (np.asarray(t) == np.asarray(g)).all()
+    with pytest.raises(ValueError):
+        SRV.sample(lg, method="temperature")               # needs a key
+    with pytest.raises(ValueError):
+        SRV.sample(lg, method="beam", key=key)
+
+
+def test_top_p_restricts_support():
+    # one dominant logit -> top_p=0.5 must always return it
+    lg = jnp.zeros((1, 16)).at[0, 3].set(10.0)
+    for i in range(8):
+        k = jax.random.PRNGKey(i)
+        assert int(SRV.sample(lg, method="top_p", key=k, top_p=0.5)[0]) == 3
+
+
+# ---------------------------------------------------------------------------
+# cache_specs (GQA/MQA audit — single-device mesh; 8-device in _mp)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "granite-34b", "minicpm3-4b",
+                                  "zamba2-1.2b"])
+def test_cache_specs_head_axes_divide_leaf(arch):
+    from jax.sharding import Mesh
+    cfg = get_smoke_config(arch)
+    dev = np.array(jax.devices()[:1]).reshape(1, 1, 1)
+    mesh = Mesh(dev, ("data", "mx", "my"))
+    specs = SRV.cache_specs(cfg, PCFG, mesh, batch=2)
+    caches = jax.eval_shape(lambda: init_dense(cfg, 2, 8, jnp.float32))
+
+    # spec and cache trees have the same structure by construction
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(
+        x, jax.sharding.PartitionSpec))
+    flat_l = jax.tree.leaves(caches)
+    assert len(flat_s) == len(flat_l)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for spec, leaf in zip(flat_s, flat_l):
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            prod = int(np.prod([sizes[a] for a in axes]))
+            assert leaf.shape[dim] % prod == 0, (arch, spec, leaf.shape, dim)
+
+
+def test_cache_specs_none_mesh():
+    cfg = get_smoke_config("qwen3-0.6b")
+    assert SRV.cache_specs(cfg, PCFG, None, batch=2) is None
+
+
+# ---------------------------------------------------------------------------
+# incremental-decode parity: dense AND paged vs teacher-forced argmax
+# ---------------------------------------------------------------------------
+
+def _dense_greedy(cfg, params, prompt, gen, rc):
+    prefill = jax.jit(SRV.build_prefill(cfg, PCFG, rc, None,
+                                        compute_dtype=jnp.float32))
+    decode = jax.jit(SRV.build_decode_step(cfg, PCFG, rc, None,
+                                           compute_dtype=jnp.float32))
+    logits, caches = prefill(params, {"tokens": jnp.asarray(prompt)[None, :]})
+    tok = SRV.greedy_sample(logits)
+    toks = [int(tok[0, 0])]
+    for i in range(gen - 1):
+        pos = jnp.full((1, 1), len(prompt) + i, jnp.int32)
+        logits, caches = decode(params, caches, tok, pos)
+        tok = SRV.greedy_sample(logits)
+        toks.append(int(tok[0, 0]))
+    return toks
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "minicpm3-4b", "zamba2-1.2b"])
+def test_decode_parity_dense_paged_teacher(arch):
+    cfg = get_smoke_config(arch)
+    rc = RunConfig("serve", "decode", MAXSEQ, 1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (7,), 0,
+                                           cfg.vocab_size), np.int32)
+    dense = _dense_greedy(cfg, params, prompt, GEN, rc)
+
+    # teacher-forced: one full forward over prompt + generated prefix must
+    # reproduce the same argmax tokens position by position
+    full = np.concatenate([prompt, np.asarray(dense[:-1], np.int64)])
+    out = lm.forward(PCtx(None, PCFG), cfg, params,
+                     {"tokens": jnp.asarray(full)[None, :],
+                      "_dtype": jnp.float32})
+    teacher = np.asarray(jnp.argmax(out.logits[0, len(prompt) - 1:], -1))
+    assert teacher[:GEN].tolist() == dense, arch
+
+    # paged: single request through the engine
+    pool = PoolConfig(slots=2, block=4,
+                      num_blocks=2 * blocks_for(MAXSEQ, 4) + 1, max_seq=MAXSEQ)
+    eng = DecodeEngine(cfg, PCFG, rc, params, pool, compute_dtype=jnp.float32)
+    eng.warmup()
+    fin = eng.run([Request(rid=0, prompt=prompt, max_new=GEN)])
+    assert fin[0].tokens == dense, arch
+
+
+# ---------------------------------------------------------------------------
+# engine: over-subscribed trace, bit-exact + pool high-water mark
+# ---------------------------------------------------------------------------
+
+def test_engine_trace_bit_exact_and_paged_memory_win():
+    cfg = get_smoke_config("qwen3-0.6b")
+    rc = RunConfig("serve", "decode", MAXSEQ, 1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    plens = (5, 11, 7, 14, 3)                       # mixed lengths
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in plens]
+    want = [_dense_greedy(cfg, params, p, GEN, rc) for p in prompts]
+
+    pool = PoolConfig(slots=2, block=4,
+                      num_blocks=2 * blocks_for(MAXSEQ, 4) + 1, max_seq=MAXSEQ)
+    eng = DecodeEngine(cfg, PCFG, rc, params, pool, compute_dtype=jnp.float32)
+    eng.warmup(prompt_lens=plens)
+    fin = eng.run([Request(rid=i, prompt=p, max_new=GEN, arrival=i // 2)
+                   for i, p in enumerate(prompts)])   # 5 arrivals > 2 slots
+    for i in range(len(prompts)):
+        assert fin[i].tokens == want[i], i
+    # mixed-length trace: the pool's high-water mark stays strictly below
+    # the dense [slots, max_seq] arena equivalent
+    assert eng.pool.peak_blocks_in_use < pool.dense_equiv_blocks
+    assert eng.pool.blocks_in_use == 0              # everything freed
+
+
+def test_engine_eviction_restores_tokens():
+    cfg = get_smoke_config("qwen3-0.6b")
+    rc = RunConfig("serve", "decode", MAXSEQ, 1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (14, 11)]
+    want = [_dense_greedy(cfg, params, p, 8, rc) for p in prompts]
+    # 8 leasable blocks admit both prompts (4+3) but can't hold both
+    # sequences to completion (6+5): the youngest must be preempted and
+    # replayed from its prompt, tokens unchanged
+    pool = PoolConfig(slots=2, block=4, num_blocks=9, max_seq=MAXSEQ)
+    eng = DecodeEngine(cfg, PCFG, rc, params, pool, compute_dtype=jnp.float32)
+    eng.warmup(prompt_lens=(14, 11))
+    fin = eng.run([Request(rid=i, prompt=p, max_new=8)
+                   for i, p in enumerate(prompts)])
+    assert eng.stats["preemptions"] >= 1
+    for i in range(2):
+        assert fin[i].tokens == want[i], i
+
+
+def test_engine_eos_early_exit():
+    cfg = get_smoke_config("qwen3-0.6b")
+    rc = RunConfig("serve", "decode", MAXSEQ, 1)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (7,), 0,
+                                           cfg.vocab_size), np.int32)
+    base = _dense_greedy(cfg, params, prompt, GEN, rc)
+    eos = base[2]                       # make the 3rd generated token the EOS
+    pool = PoolConfig(slots=2, block=4,
+                      num_blocks=2 * blocks_for(MAXSEQ, 4) + 1, max_seq=MAXSEQ)
+    eng = DecodeEngine(cfg, PCFG, rc, params, pool, compute_dtype=jnp.float32,
+                       eos_id=eos)
+    eng.warmup()
+    fin = eng.run([Request(rid=0, prompt=prompt, max_new=GEN)])
+    assert fin[0].reason == "eos"
+    assert fin[0].tokens == base[:3]
