@@ -22,6 +22,14 @@ HLO measurements in hlo_compare.py / overlap.py:
   bidir  0.80  — half-sized messages both directions shrink each gap
   fused  0.95  — remote DMA double-buffered inside one kernel; only the
                  prologue hop and epilogue drain stay exposed
+
+Wire-dtype axis (``ParallelConfig.comm_dtype``, core/quant.py): int8 rings
+move ``1 + 4/h`` bytes per element (payload + amortized per-row fp32 scale)
+instead of bf16's 2, so the NoP term — and only the NoP term; compute and
+DRAM streaming are untouched — shrinks by ~2x.  :func:`comm_bytes_per_elt`
+is the single source of that number, :func:`overlap_rows` takes a
+``comm_dtype`` and ``fit_overlap_eff`` a per-mode ``wire`` multiplier so the
+calibrated efficiencies stay comparable across wire dtypes.
 """
 
 from __future__ import annotations
@@ -34,6 +42,21 @@ from repro.core import theory as T
 # ``benchmarks/run.py --calibrate``) and the fitted values are persisted
 # alongside the theory rows.
 OVERLAP_EFF = {"none": 0.00, "ring": 0.70, "bidir": 0.80, "fused": 0.95}
+
+
+def comm_bytes_per_elt(comm_dtype: str, h: int) -> float:
+    """Wire bytes per element a ring hop moves under ``comm_dtype``.
+
+    bf16 ships the shard as-is (2 B/elt).  int8 ships (int8 payload, fp32
+    per-row scale): ``1 + 4/h`` B/elt with the scale amortized over the
+    trailing extent — except below ``quant.MIN_QUANT_DIM``, where the hop
+    degrades to full width (core/quant.quant_ok) and the bf16 number applies.
+    """
+    from repro.core import quant as Q
+    Q.check_comm_dtype(comm_dtype)
+    if comm_dtype == "int8" and h >= Q.MIN_QUANT_DIM:
+        return 1.0 + 4.0 / h
+    return 2.0
 
 
 def exposed_comm(comm_s: float, compute_s: float, mode: str,
@@ -57,13 +80,15 @@ def effective_bandwidth(beta: float, comm_s: float, compute_s: float,
     return beta * comm_s / exp
 
 
-def overlap_rows(eff=None):
+def overlap_rows(eff=None, comm_dtype="bf16"):
     """Hecaton per-overlap-mode layer latency on the paper ladder (std pkg).
 
     The same layer_time decomposition as Fig. 8, with the NoP term replaced by
-    its exposed (post-overlap) fraction — normalized to the bulk mode.
+    its exposed (post-overlap) fraction — normalized to the bulk bf16 mode.
     ``eff`` substitutes a calibrated efficiency table (``fit_overlap_eff``)
-    for the hardcoded defaults."""
+    for the hardcoded defaults; ``comm_dtype`` rescales ONLY the NoP term by
+    :func:`comm_bytes_per_elt` (compute and DRAM streaming keep the compute
+    dtype — the quantization lives on the wire)."""
     table = OVERLAP_EFF if eff is None else eff
     beta = PACKAGES["standard"]
     rows = []
@@ -72,29 +97,45 @@ def overlap_rows(eff=None):
         sp = T.SystemParams(comm=p, flops_per_device=DIE_FLOPS,
                             dram_channels=max(8, int(N ** 0.5) * 4))
         lt = T.layer_time("hecaton", sp)
+        wire = comm_bytes_per_elt(comm_dtype, h)
+        nop_full = lt["nop"] * wire / p.bytes_per_elt
         base = None
         for mode in table:
-            nop = exposed_comm(lt["nop"], lt["compute"], mode, table)
+            nop = exposed_comm(nop_full, lt["compute"], mode, table)
             total = max(lt["compute"] + nop, lt["dram"]) * layers
-            base = total if base is None else base
+            if base is None:
+                # normalize to bulk *bf16* so int8 rows read as end-to-end
+                # speedups over today's exposed baseline
+                base = max(lt["compute"]
+                           + exposed_comm(lt["nop"], lt["compute"], "none",
+                                          table),
+                           lt["dram"]) * layers
             rows.append({
-                "workload": name, "mode": mode, "latency": total,
+                "workload": name, "mode": mode, "comm_dtype": comm_dtype,
+                "wire_bytes_per_elt": wire,
+                "latency": total,
                 "latency_norm": total / base,
                 "exposed_nop": nop,
                 "eff_bandwidth": effective_bandwidth(
-                    beta, lt["nop"], lt["compute"], mode, table),
+                    beta, nop_full, lt["compute"], mode, table),
             })
     return rows
 
 
-def fit_overlap_eff(step_times, prior=None):
+def fit_overlap_eff(step_times, prior=None, wire=None):
     """Fit per-mode overlap efficiency from measured per-mode step times.
 
     ``step_times`` is the ``overlap_step_times_us`` payload of
     BENCH_overlap.json: ``{mode: {"<kind>_us": t, ...}}`` with a ``"none"``
     baseline row.  Model per kind *k* and mode *m*:
 
-        t_{k,m} = compute_k + (1 - e_m) * comm_k,       comm_k = rho * t_{k,none}
+        t_{k,m} = compute_k + (1 - e_m) * w_m * comm_k, comm_k = rho * t_{k,none}
+
+    ``wire`` maps mode name → wire-byte multiplier ``w_m`` relative to the
+    baseline (default 1.0 everywhere); rows measured under
+    ``comm_dtype="int8"`` pass ``comm_bytes_per_elt("int8", h) / 2`` so the
+    2x byte cut is attributed to the wire, not mistaken for extra overlap
+    efficiency.
 
     The system is underdetermined by exactly one dof (the compute/comm split
     rho), so rho is chosen by a 1-D search minimizing the distance of the
@@ -119,14 +160,19 @@ def fit_overlap_eff(step_times, prior=None):
     if not base or not modes:
         return None
 
+    wire = dict(wire or {})
+
     def eff_at(rho):
         eff, clipped = {}, []
         for m in modes:
+            w_m = wire.get(m, 1.0)
             vals = []
             for k, tn in base.items():
                 tm = t[m].get(k)
                 if tm:
-                    vals.append((tn - tm) / (rho * tn))
+                    # invert t_m = (1-rho)t_n + (1-e) w rho t_n for e
+                    vals.append(1.0 - (tm - (1.0 - rho) * tn)
+                                / (w_m * rho * tn))
             if not vals:
                 continue
             raw = sum(vals) / len(vals)
@@ -224,9 +270,11 @@ def run():
                 energy = (flops * E_FLOP / util + nop_bytes * E_D2D
                           + act_bytes * E_DRAM)
                 # SRAM check at the paper's minimal execution unit (one
-                # mini-batch of 512 tokens, fp32 activations, 8MB buffer)
+                # mini-batch of 512 tokens, 8MB buffer) — same element width
+                # as the ladder run (was hardcoded fp32=4, silently doubling
+                # the activation footprint vs the bf16 rows above)
                 p_min = T.CommParams(N=N, beta=beta, b=1, s=512, h=h,
-                                     bytes_per_elt=4)
+                                     bytes_per_elt=p.bytes_per_elt)
                 res[m] = {"latency": lt["total"] * layers,
                           "energy": energy * layers,
                           "sram_ok": T.peak_sram_bytes(m, p_min)
@@ -263,12 +311,15 @@ def main(emit):
          f"hec={big['hecaton']['sram_ok']}")
     # overlap-aware theory: hecaton per-mode exposed-NoP latency, largest
     # workload (keeps Table III comparable to the per-mode HLO measurements)
-    ov = [r for r in overlap_rows() if r["workload"] == "llama3.1-405b"]
-    for r in ov:
-        bw = r["eff_bandwidth"]
-        bw_s = "inf" if bw == float("inf") else f"{bw/1e9:.0f}GBps"
-        emit(f"theory_overlap_{r['mode']}", 0.0,
-             f"{r['latency_norm']:.3f}x_bulk/effbw={bw_s}")
+    for cd in ("bf16", "int8"):
+        suffix = "" if cd == "bf16" else f"_{cd}"
+        ov = [r for r in overlap_rows(comm_dtype=cd)
+              if r["workload"] == "llama3.1-405b"]
+        for r in ov:
+            bw = r["eff_bandwidth"]
+            bw_s = "inf" if bw == float("inf") else f"{bw/1e9:.0f}GBps"
+            emit(f"theory_overlap_{r['mode']}{suffix}", 0.0,
+                 f"{r['latency_norm']:.3f}x_bulk/effbw={bw_s}")
     # inter-pod 1F1B pipeline theory (PR 5): bubble fraction per (pods,
     # microbatches) — the simulated schedule must match (p-1)/(m+p-1),
     # asserted inside pipeline_rows so these rows are self-checking

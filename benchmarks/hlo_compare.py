@@ -199,6 +199,58 @@ print("RESULT " + json.dumps(out))
 '''
 
 
+# Quantized-wire counter: the same 2-layer megatron LM (train fwd+bwd, seq
+# residual) compiled under comm_dtype "bf16" vs "int8" per overlap mode.
+# Proves the int8 rings actually move int8 bytes in compiled HLO — the
+# collective-permute byte total must drop well below the 0.55x gate (payload
+# shrinks 4x from the fp32 compute dtype; the per-row fp32 scales ride along
+# as separate small permutes) — while the bulk AG/RS total stays zero (the
+# wire dtype must not break the overlap lattice's degradation decisions).
+SCRIPT_QUANT = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.config import ModelConfig, ParallelConfig
+from repro.models import lm
+from repro.parallel import specs as SP
+from repro.parallel.context import PCtx
+from repro.roofline.hlo import analyze
+
+cfg = ModelConfig(name="quant", family="dense", num_layers=2, d_model=64,
+                  num_heads=8, num_kv_heads=8, d_ff=128, vocab_size=256,
+                  mlp_kind="swiglu")
+B, S, n_model = 4, 64, 8
+mesh = Mesh(np.array(jax.devices()).reshape(1, n_model), ("data", "model"))
+params = jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+out = {"n_model": n_model}
+for ov in ("ring", "bidir", "fused"):
+    row = {}
+    for cd in ("bf16", "int8"):
+        pcfg = ParallelConfig(strategy="megatron", data=1, model=n_model,
+                              overlap=ov, residual="seq", zero1=False,
+                              comm_dtype=cd)
+        pctx = PCtx(mesh, pcfg, "train")
+        pshard = SP.sharding_tree(SP.param_specs(params, mesh, pcfg), mesh)
+        bspec = SP.batch_specs(mesh, pcfg, microbatched=False, seq_len=S)
+        bshard = {k: NamedSharding(mesh, bspec[k])
+                  for k in ("tokens", "labels")}
+        bstruct = {k: jax.ShapeDtypeStruct((B, S), jnp.int32)
+                   for k in ("tokens", "labels")}
+        def loss(p, b, _pctx=pctx):
+            return lm.train_loss(_pctx, cfg, p, {**b, "_dtype": jnp.float32},
+                                 remat="none")[0]
+        c = jax.jit(jax.grad(loss), in_shardings=(pshard, bshard)).lower(
+            params, bstruct).compile()
+        r = analyze(c.as_text())
+        row[cd] = {"bytes": dict(r.coll_bytes), "count": dict(r.coll_count)}
+    out[ov] = row
+print("RESULT " + json.dumps(out))
+'''
+
+
 def _run_script(script):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
@@ -237,6 +289,18 @@ def run_residual():
     more bulk bytes than the replicated layout anywhere, and its per-die
     residual bytes are 1/n_model of the replicated layout's."""
     return _run_script(SCRIPT_RESIDUAL)
+
+
+def run_quant():
+    """Per-overlap-mode (ring/bidir/fused) collective bytes of the 2-layer
+    megatron LM train step under ``comm_dtype`` "bf16" vs "int8".
+
+    Returns {"n_model": n, mode: {comm_dtype: {"bytes", "count"}}}.
+    Acceptance (asserted by tests/test_overlap.py and the CI grep): int8's
+    collective-permute bytes ≤ 0.55x the bf16 wire's on every mode, with the
+    bulk all-gather/reduce-scatter total still zero — the byte cut comes from
+    the wire dtype, never from silently re-bulking a ring."""
+    return _run_script(SCRIPT_QUANT)
 
 
 def main(emit):
@@ -278,4 +342,15 @@ def main(emit):
             emit(f"hlo_residual_{layout}_act_bytes", 0.0,
                  f"{res_l[layout]['ring']['residual_bytes_per_die']/1e3:.1f}"
                  "KB/die")
-    return {"compare": out, "overlap": ov, "residual": res_l}
+    qt = run_quant()
+    if "error" in qt:
+        emit("hlo_quant", 0.0, "ERROR")
+    else:
+        for mode in ("ring", "bidir", "fused"):
+            row = qt[mode]
+            cp = {cd: row[cd]["bytes"].get("collective-permute", 0.0)
+                  for cd in ("bf16", "int8")}
+            ratio = cp["int8"] / max(cp["bf16"], 1.0)
+            emit(f"hlo_quant_{mode}_cp_ratio", 0.0,
+                 f"{ratio:.3f}x({cp['int8']/1e3:.1f}KB/{cp['bf16']/1e3:.1f}KB)")
+    return {"compare": out, "overlap": ov, "residual": res_l, "quant": qt}

@@ -24,8 +24,10 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
 
 Besides the CSV, the harness persists ``BENCH_overlap.json`` next to the repo
 root: per-mode step times from ``benchmarks/overlap.py``, the micro matmul
-rows, the overlap-aware comm-model theory, the per-residual-layout HLO bulk
-bytes (``hlo_compare.run_residual``), and the OVERLAP_EFF table *calibrated*
+rows, the overlap-aware comm-model theory (bf16 and int8 wire), the
+per-residual-layout HLO bulk bytes (``hlo_compare.run_residual``), the
+int8-vs-bf16 wire byte counts (``quant_bytes``, ``hlo_compare.run_quant``),
+and the OVERLAP_EFF table *calibrated*
 from the measured step times (``comm_model.fit_overlap_eff``) — one file per
 run so the perf trajectory is tracked across PRs (CI uploads it as an
 artifact and smoke-checks the residual-layout section).
@@ -107,6 +109,7 @@ def main() -> None:
             "hlo_overlap": (results.get("hlo_compare") or {}).get("overlap"),
             "residual_layouts": (results.get("hlo_compare")
                                  or {}).get("residual"),
+            "quant_bytes": (results.get("hlo_compare") or {}).get("quant"),
             "checkpoint_stall": results.get("ckpt_stall"),
             "checkpoint_multiwriter": (results.get("ckpt_stall")
                                        or {}).get("multiwriter"),
@@ -117,6 +120,7 @@ def main() -> None:
         }
         from benchmarks import comm_model as _cm
         payload["theory_overlap"] = _cm.overlap_rows()
+        payload["theory_overlap_int8"] = _cm.overlap_rows(comm_dtype="int8")
         _calibrate_payload(payload, rows)
         with open(BENCH_JSON, "w") as f:
             json.dump(payload, f, indent=2, default=str)

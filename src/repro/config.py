@@ -183,6 +183,14 @@ class ParallelConfig:
     # double-buffered remote DMA (kernels/ring_matmul.py; falls back to
     # "ring" per collective on non-tile-aligned shapes).
     overlap: str = "none"
+    # NoP ring-collective wire dtype (core/quant.py): "bf16" ships shards
+    # as-is (bit-identical to the pre-quantization rings), "int8" quantizes
+    # every hop's shard with per-row symmetric scales — (int8 payload, fp32
+    # scale) crosses the link, dequantized into the fp32 accumulator on
+    # receipt; hops whose shard cannot carry scales (integer ids, trailing
+    # extents < quant.MIN_QUANT_DIM) degrade per hop to full width, mirroring
+    # the fused→ring→bulk overlap lattice (docs/DESIGN.md §11).
+    comm_dtype: str = "bf16"
     # Canonical inter-block residual-stream layout (parallel/sharding.py
     # RESIDUAL_LAYOUTS): "seq" keeps activations token-sharded over the model
     # axes between blocks — hecaton's Alg. 1 tiling natively, and the
@@ -208,6 +216,8 @@ class ParallelConfig:
             f"('none', 'ring', 'bidir', 'fused')")
         assert self.residual in ("seq", "replicated"), (
             f"residual={self.residual!r} not in ('seq', 'replicated')")
+        assert self.comm_dtype in ("bf16", "int8"), (
+            f"comm_dtype={self.comm_dtype!r} not in ('bf16', 'int8')")
         if self.pod_axis_role not in ("data", "pipeline"):
             raise ValueError(
                 f"pod_axis_role={self.pod_axis_role!r} not in "

@@ -122,7 +122,8 @@ def _mm(x, w, precision=None):
 def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
                        t_ax: str, h_ax: str,
                        data_axes: Tuple[str, ...] = ("data",),
-                       overlap: str = "none") -> jax.Array:
+                       overlap: str = "none",
+                       comm_dtype: str = "bf16") -> jax.Array:
     """One Hecaton linear layer (paper Alg. 1 forward, steps 2-5).
 
     x: [B, T_local*t, H_local*h] logically; sharded P(data_axes, t_ax, h_ax).
@@ -139,7 +140,8 @@ def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
             return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
                                   n_s=n_h, gather_dim=1, scatter_dim=1,
                                   overlap=overlap,
-                                  mesh_axes=mesh.axis_names)
+                                  mesh_axes=mesh.axis_names,
+                                  comm_dtype=comm_dtype)
         xg = _ag(xl, t_ax, 1)           # Step 3: all-gather tokens within column
         yp = _mm(xg, wl)                # local tile matmul (partial over h_ax)
         return _rs(yp, h_ax, 1)         # Step 4: reduce-scatter tokens within row
@@ -161,7 +163,8 @@ def linear_seq_scatter(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
              t_ax: str, h_ax: str,
              data_axes: Tuple[str, ...] = ("data",),
-             overlap: str = "none") -> jax.Array:
+             overlap: str = "none",
+             comm_dtype: str = "bf16") -> jax.Array:
     """Projection *into* a token mixer (QKV / mamba in_proj). Paper Fig. 7(b) steps 1-4+10.
 
     x: [B, T/t_ax, H/h_ax]  ->  out: [B, T(full), O/(t_ax,h_ax)]
@@ -178,7 +181,8 @@ def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
             return OV.ring_linear(xl, wl, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
                                   n_s=n_h, gather_dim=1, scatter_dim=2,
                                   overlap=overlap,
-                                  mesh_axes=mesh.axis_names)
+                                  mesh_axes=mesh.axis_names,
+                                  comm_dtype=comm_dtype)
         xg = _ag(xl, t_ax, 1)           # gather sequence within column
         yp = _mm(xg, wl)                # [b, T, O/t_ax] partial over h_ax
         return _rs(yp, h_ax, 2)         # Step 10: reduce-scatter along *hidden*
@@ -194,7 +198,8 @@ def mixer_in(x: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
               t_ax: str, h_ax: str,
               data_axes: Tuple[str, ...] = ("data",),
-              overlap: str = "none") -> jax.Array:
+              overlap: str = "none",
+              comm_dtype: str = "bf16") -> jax.Array:
     """Projection *out of* a token mixer (attention O-proj / mamba out_proj).
 
     Paper Fig. 7(b) steps 12-14: all-gather hidden within row, project, then
@@ -216,15 +221,19 @@ def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
             bidir = overlap == "bidir"
             rs_ok = OV.rs_ok(al.shape[1], n_t)
             if OV.fuse_side(al.shape[-1], wl.shape[-1]) == "rs" and rs_ok:
-                ag = OV.ring_all_gather(al, h_ax, dim=2, n=n_h, bidir=bidir)
+                ag = OV.ring_all_gather(al, h_ax, dim=2, n=n_h, bidir=bidir,
+                                        comm_dtype=comm_dtype)
                 return OV.matmul_rs(ag, wl, t_ax, scatter_dim=1, n=n_t,
                                     overlap=overlap,
-                                    mesh_axes=mesh.axis_names)
+                                    mesh_axes=mesh.axis_names,
+                                    comm_dtype=comm_dtype)
             yp = OV.ag_matmul_contract(al, wl, h_ax, n=n_h, overlap=overlap,
-                                       mesh_axes=mesh.axis_names)
+                                       mesh_axes=mesh.axis_names,
+                                       comm_dtype=comm_dtype)
             if not rs_ok:
                 return _rs(yp, t_ax, 1)
-            return OV.ring_reduce_scatter(yp, t_ax, dim=1, n=n_t, bidir=bidir)
+            return OV.ring_reduce_scatter(yp, t_ax, dim=1, n=n_t, bidir=bidir,
+                                          comm_dtype=comm_dtype)
         ag = _ag(al, h_ax, 2)           # Step 12: gather hidden within row
         yp = _mm(ag, wl)                # [b, T, O/h_ax] partial over t_ax
         return _rs(yp, t_ax, 1)         # Step 14: reduce-scatter sequence
@@ -244,7 +253,7 @@ def mixer_out(a: jax.Array, w: jax.Array, *, mesh: Optional[Mesh],
 
 def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
               data_axes: Tuple[str, ...] = ("data",),
-              w1b=None, overlap: str = "none"):
+              w1b=None, overlap: str = "none", comm_dtype: str = "bf16"):
     """Fused up/down FFN: two chained seq-scatter linears with swapped axis roles.
 
     After L1 the activation tiling is transposed (tokens on h_ax); L2 runs with the
@@ -270,12 +279,14 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
     def f_ring(xl, w1l, w2l, *rest):
         bidir = overlap == "bidir"
         if rest:                                   # gated: share the gathered x
-            xg = OV.ring_all_gather(xl, t_ax, dim=1, n=n_t, bidir=bidir)
+            xg = OV.ring_all_gather(xl, t_ax, dim=1, n=n_t, bidir=bidir,
+                                    comm_dtype=comm_dtype)
             if OV.rs_ok(xg.shape[1], n_h):
                 h, g = OV.matmul_rs_pair(xg, w1l, rest[0], h_ax,
                                          scatter_dim=1, n=n_h,
                                          overlap=overlap,
-                                         mesh_axes=mesh.axis_names)
+                                         mesh_axes=mesh.axis_names,
+                                         comm_dtype=comm_dtype)
             else:
                 h = _rs(_mm(xg, w1l), h_ax, 1)
                 g = _rs(_mm(xg, rest[0]), h_ax, 1)
@@ -283,9 +294,11 @@ def ffn_block(x, w1, w2, *, mesh, act_fn, t_ax: str, h_ax: str,
         else:
             h = act_fn(OV.ring_linear(xl, w1l, g_ax=t_ax, n_g=n_t, s_ax=h_ax,
                                       n_s=n_h, overlap=overlap,
-                                      mesh_axes=mesh.axis_names))
+                                      mesh_axes=mesh.axis_names,
+                                      comm_dtype=comm_dtype))
         return OV.ring_linear(h, w2l, g_ax=h_ax, n_g=n_h, s_ax=t_ax, n_s=n_t,
-                              overlap=overlap, mesh_axes=mesh.axis_names)
+                              overlap=overlap, mesh_axes=mesh.axis_names,
+                              comm_dtype=comm_dtype)
 
     def f(xl, w1l, w2l, *rest):
         if overlap != "none":
@@ -339,7 +352,8 @@ EMBED_FUSED_VMAX = 2048
 def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
              t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
              compute_dtype=jnp.bfloat16, seq_sharded: bool = True,
-             batch_sharded: bool = True, overlap: str = "none") -> jax.Array:
+             batch_sharded: bool = True, overlap: str = "none",
+             comm_dtype: str = "bf16") -> jax.Array:
     """ids [B,S] -> embeddings.
 
     seq_sharded=True (train/prefill): ids arrive tokens-over-t_ax, output is
@@ -357,7 +371,9 @@ def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
 
     def f(ids_l, tab_l):
         if seq_sharded and overlap != "none":
-            idg = OV.ring_all_gather(ids_l, t_ax, dim=1, n=n_t, bidir=bidir)
+            # integer ids: quant_ok degrades these hops to full width
+            idg = OV.ring_all_gather(ids_l, t_ax, dim=1, n=n_t, bidir=bidir,
+                                     comm_dtype=comm_dtype)
         elif seq_sharded:
             idg = _ag(ids_l, t_ax, 1)
         else:
@@ -374,13 +390,15 @@ def embed_2d(ids: jax.Array, table: jax.Array, *, mesh: Optional[Mesh],
                       == jnp.arange(v_loc)[None, None, :]).astype(compute_dtype)
             tab = tab_l.astype(compute_dtype)
             return OV.matmul_rs(onehot, tab, t_ax, scatter_dim=1, n=n_t,
-                                overlap=overlap, mesh_axes=mesh.axis_names)
+                                overlap=overlap, mesh_axes=mesh.axis_names,
+                                comm_dtype=comm_dtype)
         emb = jnp.take(tab_l, jnp.clip(lid, 0, v_loc - 1), axis=0)
         emb = (emb * ok[..., None]).astype(compute_dtype)
         if seq_sharded:
             if overlap != "none" and OV.rs_ok(emb.shape[1], n_t):
                 return OV.ring_reduce_scatter(emb, t_ax, dim=1, n=n_t,
-                                              bidir=bidir)
+                                              bidir=bidir,
+                                              comm_dtype=comm_dtype)
             return _rs(emb, t_ax, 1)        # sums vocab partials + tiles tokens
         return lax.psum(emb, t_ax)
 
@@ -414,7 +432,8 @@ def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
                   loss_mask: Optional[jax.Array], *, mesh: Optional[Mesh],
                   t_ax: str, h_ax: str, data_axes: Tuple[str, ...] = ("data",),
                   n_chunks: int = 8,
-                  overlap: str = "none") -> Tuple[jax.Array, jax.Array]:
+                  overlap: str = "none",
+                  comm_dtype: str = "bf16") -> Tuple[jax.Array, jax.Array]:
     """Returns (sum of masked NLL, mask count) — caller divides.
 
     x [B, S, H] canonical P(d, t_ax, h_ax); w [H, V] P(None, h_ax);
@@ -458,7 +477,8 @@ def fused_lm_loss(x: jax.Array, w: jax.Array, labels: jax.Array,
                 lg = OV.ag_matmul_contract(xc, wl, h_ax, n=n_h,
                                            overlap=overlap,
                                            out_dtype=jnp.float32,
-                                           mesh_axes=mesh.axis_names)
+                                           mesh_axes=mesh.axis_names,
+                                           comm_dtype=comm_dtype)
             else:
                 xg = _ag(xc, h_ax, 2)                 # [b, tc, H] (tiny AG)
                 lg = jnp.einsum("bth,hv->btv", xg, wl,

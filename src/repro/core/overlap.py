@@ -53,7 +53,21 @@ Backward/transpose story: every loop is unrolled Python over linear primitives
 yield the overlapped backward for free: the transpose of a ``ppermute`` ring is
 the reversed ring, ``dynamic_update_slice`` transposes to ``dynamic_slice``,
 and therefore transpose(ring-AG-matmul) *is* a ring-matmul-RS (and vice versa).
-No custom VJP is needed, and grads flow as collective-permute chains too.
+Under ``comm_dtype="bf16"`` no custom VJP is needed and grads flow as
+collective-permute chains too.  Under ``comm_dtype="int8"`` each hop is
+``core/quant.q_hop`` — a custom-VJP hop whose forward permutes the (int8
+payload, fp32 scale) pair and whose backward runs the same quantized hop over
+the inverse permutation, so cotangent shards cross the links quantized exactly
+like activations do (docs/DESIGN.md §11).
+
+Communication dtype (``ParallelConfig.comm_dtype``): every ``ppermute`` in
+this module goes through ``core/quant.ring_hop``.  ``"bf16"`` (default) is
+bit-identical to a bare ``lax.ppermute`` of the operand; ``"int8"`` quantizes
+the shard being sent with per-row symmetric scales and dequantizes into the
+existing fp32 accumulation on receipt, cutting per-hop bytes ~2x (bf16
+compute) to ~4x (fp32).  Hops whose shard cannot carry scales — integer ids,
+trailing extents below ``quant.MIN_QUANT_DIM`` — degrade per hop to the
+full-width permute, mirroring the fused→ring→bulk mode lattice.
 
 Shape constraints: ``bidir`` degrades to ``ring`` per collective when a shard
 cannot be halved (checked inside each primitive — numerics are identical), and
@@ -70,9 +84,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import quant as Q
 from repro.kernels import ring_matmul as RM
 
 MODES = ("none", "ring", "bidir", "fused")
+COMM_DTYPES = Q.COMM_DTYPES
+check_comm_dtype = Q.check_comm_dtype
+_hop = Q.ring_hop
 
 
 def _mm_f32(x, w):
@@ -124,7 +142,7 @@ def rs_ok(extent: int, n: int) -> bool:
 
 
 def ring_all_gather(x, axis_name: str, *, dim: int, n: int,
-                    bidir: bool = False):
+                    bidir: bool = False, comm_dtype: str = "bf16"):
     """== lax.all_gather(x, axis_name, axis=dim, tiled=True), rank order."""
     if n <= 1:
         return x
@@ -141,19 +159,19 @@ def ring_all_gather(x, axis_name: str, *, dim: int, n: int,
             out = _put(out, curf, dim, ((idx - s) % n) * chunk)
             out = _put(out, curb, dim, ((idx + s) % n) * chunk + half)
             if s < n - 1:
-                curf = lax.ppermute(curf, axis_name, _shift_perm(n, 1))
-                curb = lax.ppermute(curb, axis_name, _shift_perm(n, -1))
+                curf = _hop(curf, axis_name, n, 1, comm_dtype)
+                curb = _hop(curb, axis_name, n, -1, comm_dtype)
         return out
     cur = x
     for s in range(n):
         out = _put(out, cur, dim, ((idx - s) % n) * chunk)
         if s < n - 1:
-            cur = lax.ppermute(cur, axis_name, _shift_perm(n, 1))
+            cur = _hop(cur, axis_name, n, 1, comm_dtype)
     return out
 
 
 def ring_reduce_scatter(y, axis_name: str, *, dim: int, n: int,
-                        bidir: bool = False):
+                        bidir: bool = False, comm_dtype: str = "bf16"):
     """== lax.psum_scatter(y, axis_name, scatter_dimension=dim, tiled=True).
 
     A per-destination accumulator circulates the ring; each device folds in its
@@ -179,14 +197,14 @@ def ring_reduce_scatter(y, axis_name: str, *, dim: int, n: int,
         accf = takef((idx - 1) % n)
         accb = takeb((idx + 1) % n)
         for s in range(1, n):
-            accf = lax.ppermute(accf, axis_name, _shift_perm(n, 1))
-            accb = lax.ppermute(accb, axis_name, _shift_perm(n, -1))
+            accf = _hop(accf, axis_name, n, 1, comm_dtype)
+            accb = _hop(accb, axis_name, n, -1, comm_dtype)
             accf = accf + takef((idx + n - 1 - s) % n)
             accb = accb + takeb((idx - (n - 1) + s) % n)
         return jnp.concatenate([accf, accb], axis=dim)
     acc = _take(y, dim, ((idx - 1) % n) * chunk, chunk)
     for s in range(1, n):
-        acc = lax.ppermute(acc, axis_name, _shift_perm(n, 1))
+        acc = _hop(acc, axis_name, n, 1, comm_dtype)
         acc = acc + _take(y, dim, ((idx + n - 1 - s) % n) * chunk, chunk)
     return acc
 
@@ -197,7 +215,7 @@ def ring_reduce_scatter(y, axis_name: str, *, dim: int, n: int,
 
 
 def ring_ag_matmul(x, w, axis_name: str, *, dim: int, n: int,
-                   bidir: bool = False):
+                   bidir: bool = False, comm_dtype: str = "bf16"):
     """== _mm(ring_all_gather(x, dim), w) with per-step partial matmuls.
 
     The gather dim is a *batch* dim of the matmul (tokens), so each arriving
@@ -220,19 +238,20 @@ def ring_ag_matmul(x, w, axis_name: str, *, dim: int, n: int,
             out = _put(out, _mm(curf, w), dim, ((idx - s) % n) * chunk)
             out = _put(out, _mm(curb, w), dim, ((idx + s) % n) * chunk + half)
             if s < n - 1:
-                curf = lax.ppermute(curf, axis_name, _shift_perm(n, 1))
-                curb = lax.ppermute(curb, axis_name, _shift_perm(n, -1))
+                curf = _hop(curf, axis_name, n, 1, comm_dtype)
+                curb = _hop(curb, axis_name, n, -1, comm_dtype)
         return out
     cur = x
     for s in range(n):
         out = _put(out, _mm(cur, w), dim, ((idx - s) % n) * chunk)
         if s < n - 1:
-            cur = lax.ppermute(cur, axis_name, _shift_perm(n, 1))
+            cur = _hop(cur, axis_name, n, 1, comm_dtype)
     return out
 
 
 def ring_ag_matmul_contract(x, w, axis_name: str, *, n: int,
-                            bidir: bool = False, out_dtype=None):
+                            bidir: bool = False, out_dtype=None,
+                            comm_dtype: str = "bf16"):
     """== mm(ring_all_gather(x, dim=-1), w) where the gathered dim is the
     matmul's *contraction* dim: w's rows are chunked to match and the per-step
     partial products accumulate in fp32 (the same accumulation a single big
@@ -253,19 +272,19 @@ def ring_ag_matmul_contract(x, w, axis_name: str, *, n: int,
             acc = acc + _mm_f32(curf, _take(w, 0, rf, half))
             acc = acc + _mm_f32(curb, _take(w, 0, rb, half))
             if s < n - 1:
-                curf = lax.ppermute(curf, axis_name, _shift_perm(n, 1))
-                curb = lax.ppermute(curb, axis_name, _shift_perm(n, -1))
+                curf = _hop(curf, axis_name, n, 1, comm_dtype)
+                curb = _hop(curb, axis_name, n, -1, comm_dtype)
         return acc.astype(dt)
     cur = x
     for s in range(n):
         acc = acc + _mm_f32(cur, _take(w, 0, ((idx - s) % n) * h_loc, h_loc))
         if s < n - 1:
-            cur = lax.ppermute(cur, axis_name, _shift_perm(n, 1))
+            cur = _hop(cur, axis_name, n, 1, comm_dtype)
     return acc.astype(dt)
 
 
 def ring_matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
-                   bidir: bool = False):
+                   bidir: bool = False, comm_dtype: str = "bf16"):
     """== lax.psum_scatter(_mm(x, w), scatter_dimension=scatter_dim, tiled).
 
     The per-destination tile is produced by a *chunked* matmul right before it
@@ -298,14 +317,14 @@ def ring_matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
         accf = contrib((idx - 1) % n, 0, half)
         accb = contrib((idx + 1) % n, half, half)
         for s in range(1, n):
-            accf = lax.ppermute(accf, axis_name, _shift_perm(n, 1))
-            accb = lax.ppermute(accb, axis_name, _shift_perm(n, -1))
+            accf = _hop(accf, axis_name, n, 1, comm_dtype)
+            accb = _hop(accb, axis_name, n, -1, comm_dtype)
             accf = accf + contrib((idx + n - 1 - s) % n, 0, half)
             accb = accb + contrib((idx - (n - 1) + s) % n, half, half)
         return jnp.concatenate([accf, accb], axis=scatter_dim)
     acc = contrib((idx - 1) % n)
     for s in range(1, n):
-        acc = lax.ppermute(acc, axis_name, _shift_perm(n, 1))
+        acc = _hop(acc, axis_name, n, 1, comm_dtype)
         acc = acc + contrib((idx + n - 1 - s) % n)
     return acc
 
@@ -320,7 +339,7 @@ def ring_matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
 
 
 def ag_matmul(x, w, axis_name: str, *, dim: int, n: int, overlap: str,
-              mesh_axes=None):
+              mesh_axes=None, comm_dtype: str = "bf16"):
     """AG ⊕ matmul (gathered dim is a batch dim) under the given mode.
 
     ``mesh_axes`` (the enclosing mesh's full axis-name tuple) lets the TPU
@@ -329,37 +348,40 @@ def ag_matmul(x, w, axis_name: str, *, dim: int, n: int, overlap: str,
     if overlap == "fused" and RM.fused_ok_ag(x.shape, w.shape, n, dim,
                                              x.dtype.itemsize):
         return RM.ag_matmul(x, w, axis_name, dim=dim, n=n,
-                            mesh_axes=mesh_axes)
+                            mesh_axes=mesh_axes, comm_dtype=comm_dtype)
     return ring_ag_matmul(x, w, axis_name, dim=dim, n=n,
-                          bidir=overlap == "bidir")
+                          bidir=overlap == "bidir", comm_dtype=comm_dtype)
 
 
 def matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
-              overlap: str, mesh_axes=None):
+              overlap: str, mesh_axes=None, comm_dtype: str = "bf16"):
     """matmul ⊕ RS under the given mode."""
     if overlap == "fused" and RM.fused_ok_rs(x.shape, w.shape, n,
                                              scatter_dim, x.dtype.itemsize):
         return RM.matmul_rs(x, w, axis_name, scatter_dim=scatter_dim, n=n,
-                            mesh_axes=mesh_axes)
+                            mesh_axes=mesh_axes, comm_dtype=comm_dtype)
     return ring_matmul_rs(x, w, axis_name, scatter_dim=scatter_dim, n=n,
-                          bidir=overlap == "bidir")
+                          bidir=overlap == "bidir", comm_dtype=comm_dtype)
 
 
 def ag_matmul_contract(x, w, axis_name: str, *, n: int, overlap: str,
-                       out_dtype=None, mesh_axes=None):
+                       out_dtype=None, mesh_axes=None,
+                       comm_dtype: str = "bf16"):
     """AG ⊕ matmul over the contracted dim under the given mode."""
     if overlap == "fused" and RM.fused_ok_contract(x.shape, w.shape, n,
                                                    x.dtype.itemsize):
         return RM.ag_matmul_contract(x, w, axis_name, n=n,
                                      out_dtype=out_dtype,
-                                     mesh_axes=mesh_axes)
+                                     mesh_axes=mesh_axes,
+                                     comm_dtype=comm_dtype)
     return ring_ag_matmul_contract(x, w, axis_name, n=n,
                                    bidir=overlap == "bidir",
-                                   out_dtype=out_dtype)
+                                   out_dtype=out_dtype,
+                                   comm_dtype=comm_dtype)
 
 
 def matmul_rs_pair(x, w1, w1b, axis_name: str, *, scatter_dim: int, n: int,
-                   overlap: str, mesh_axes=None):
+                   overlap: str, mesh_axes=None, comm_dtype: str = "bf16"):
     """Gated pair: (x·w1, x·w1b) reduce-scattered, sharing the gathered x.
 
     Fused mode reads each x tile once for both products inside one kernel;
@@ -371,12 +393,12 @@ def matmul_rs_pair(x, w1, w1b, axis_name: str, *, scatter_dim: int, n: int,
                                x.dtype.itemsize)):
         return RM.matmul_rs_pair(x, w1, w1b, axis_name,
                                  scatter_dim=scatter_dim, n=n,
-                                 mesh_axes=mesh_axes)
+                                 mesh_axes=mesh_axes, comm_dtype=comm_dtype)
     bidir = overlap == "bidir"
     return (ring_matmul_rs(x, w1, axis_name, scatter_dim=scatter_dim, n=n,
-                           bidir=bidir),
+                           bidir=bidir, comm_dtype=comm_dtype),
             ring_matmul_rs(x, w1b, axis_name, scatter_dim=scatter_dim, n=n,
-                           bidir=bidir))
+                           bidir=bidir, comm_dtype=comm_dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -395,7 +417,7 @@ def fuse_side(h_loc: int, o_loc: int) -> str:
 
 def ring_linear(x, w, *, g_ax: str, n_g: int, s_ax: str, n_s: int,
                 gather_dim: int = 1, scatter_dim: int = 1, overlap: str,
-                mesh_axes=None):
+                mesh_axes=None, comm_dtype: str = "bf16"):
     """Overlapped y = RS_{s_ax}( AG_{g_ax}(x, gather_dim) @ w, scatter_dim).
 
     One of the two collectives gets the matmul fused into its ring loop
@@ -413,12 +435,15 @@ def ring_linear(x, w, *, g_ax: str, n_g: int, s_ax: str, n_s: int,
     scattered = (x.shape[gather_dim] * n_g if scatter_dim == gather_dim
                  else w.shape[-1])
     if fuse_side(x.shape[-1], w.shape[-1]) == "rs" and rs_ok(scattered, n_s):
-        xg = ring_all_gather(x, g_ax, dim=gather_dim, n=n_g, bidir=bidir)
+        xg = ring_all_gather(x, g_ax, dim=gather_dim, n=n_g, bidir=bidir,
+                             comm_dtype=comm_dtype)
         return matmul_rs(xg, w, s_ax, scatter_dim=scatter_dim, n=n_s,
-                         overlap=overlap, mesh_axes=mesh_axes)
+                         overlap=overlap, mesh_axes=mesh_axes,
+                         comm_dtype=comm_dtype)
     yp = ag_matmul(x, w, g_ax, dim=gather_dim, n=n_g, overlap=overlap,
-                   mesh_axes=mesh_axes)
+                   mesh_axes=mesh_axes, comm_dtype=comm_dtype)
     if not rs_ok(scattered, n_s):           # cannot chunk: bulk reduce-scatter
         return lax.psum_scatter(yp, s_ax, scatter_dimension=scatter_dim,
                                 tiled=True)
-    return ring_reduce_scatter(yp, s_ax, dim=scatter_dim, n=n_s, bidir=bidir)
+    return ring_reduce_scatter(yp, s_ax, dim=scatter_dim, n=n_s, bidir=bidir,
+                               comm_dtype=comm_dtype)

@@ -49,6 +49,20 @@ and vice versa, exactly the pairing JAX derives automatically for the unrolled
 ppermute rings in core/overlap.py.  The backward therefore stays fused /
 ring-decomposed too.
 
+Communication dtype (``comm_dtype``, docs/DESIGN.md §11): ``"bf16"`` ships
+shards as-is; ``"int8"`` carries an ``(int8 payload, fp32 per-row scale)``
+pair over every hop.  On the emulated path each ppermute hop routes through
+``core/quant.ring_hop``; on the TPU path the double-buffered VMEM pair
+becomes a quantized pair — for the AG/contract kernels the circulating shard
+is quantized ONCE outside the kernel (the payload is invariant around the
+ring) and dequantized per tile at the MXU dot, while the matmul-RS kernel
+re-quantizes the circulating *accumulator* at each send (it changes every
+hop): folds land in a full-width ``work`` staging buffer, whose whole-buffer
+quantize happens right before the paired remote DMAs.  The fp32 accumulator
+tiles themselves never quantize — only link traffic does.  Hops whose shard
+cannot carry scales (``quant.quant_ok``) degrade per collective to the
+full-width pair, mirroring the fused→ring→bulk lattice.
+
 Fallback contract: callers gate on :func:`fused_ok` (MXU-tile-aligned dims and
 ring-divisible extents).  Shapes that fail the gate are routed by
 ``core/overlap.py`` to the plain ``ring`` decomposition — same degradation
@@ -67,6 +81,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.core import quant as Q
 from repro.kernels.matmul import _epilogue, _mm_bias_kernel, _mm_kernel
 
 # MXU-aligned tile preferences (same defaults as kernels/matmul.py).
@@ -316,7 +331,7 @@ def _mm3(x3, w, out_dtype=None):
         out_dtype)
 
 
-def _pure_ag(x, axis_name: str, dim: int, n: int):
+def _pure_ag(x, axis_name: str, dim: int, n: int, comm_dtype: str = "bf16"):
     """Plain ppermute ring all-gather (rank order), used by vjp helpers."""
     if n <= 1:
         return x
@@ -329,7 +344,7 @@ def _pure_ag(x, axis_name: str, dim: int, n: int):
     for s in range(n):
         out = _put(out, cur, dim, ((idx - s) % n) * chunk)
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     return out
 
 
@@ -338,7 +353,8 @@ def _pure_ag(x, axis_name: str, dim: int, n: int):
 # ---------------------------------------------------------------------------
 
 
-def _ag_mm_impl(x, w, axis_name: str, dim: int, n: int, bias, act: str):
+def _ag_mm_impl(x, w, axis_name: str, dim: int, n: int, bias, act: str,
+                comm_dtype: str = "bf16"):
     """Ring AG-matmul: circulate x shards, tile-matmul each into its slot."""
     if n <= 1:
         return _unflat(_tile_mm_raw(_flat(x), w, bias, act=act), x.shape[0])
@@ -357,11 +373,12 @@ def _ag_mm_impl(x, w, axis_name: str, dim: int, n: int, bias, act: str):
                         cur.shape[0])
         out = _put(out, y, dim, ((idx - s) % n) * chunk)
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     return out
 
 
-def _mm_rs_impl(x, w, axis_name: str, scatter_dim: int, n: int, bias, act):
+def _mm_rs_impl(x, w, axis_name: str, scatter_dim: int, n: int, bias, act,
+                comm_dtype: str = "bf16"):
     """Ring matmul-RS: per-destination tile folded into a circulating acc."""
     if n <= 1:
         return _unflat(_tile_mm_raw(_flat(x), w, bias, act=act), x.shape[0])
@@ -381,7 +398,7 @@ def _mm_rs_impl(x, w, axis_name: str, scatter_dim: int, n: int, bias, act):
 
     acc = contrib((idx - 1) % n)
     for s in range(1, n):
-        acc = compat.ring_step_permute(acc, axis_name, n, 1)
+        acc = Q.ring_hop(acc, axis_name, n, 1, comm_dtype)
         acc = acc + contrib((idx + n - 1 - s) % n)
     if bias is None and act == "none":
         return acc
@@ -389,7 +406,8 @@ def _mm_rs_impl(x, w, axis_name: str, scatter_dim: int, n: int, bias, act):
                      None if bias is None else bias, act).astype(acc.dtype)
 
 
-def _ag_mm_contract_impl(x, w, axis_name: str, n: int, out_dtype, bias, act):
+def _ag_mm_contract_impl(x, w, axis_name: str, n: int, out_dtype, bias, act,
+                         comm_dtype: str = "bf16"):
     """Ring AG-matmul over the contracted dim: fp32 acc spans ring steps."""
     dt = out_dtype or x.dtype
     if n <= 1:
@@ -403,13 +421,14 @@ def _ag_mm_contract_impl(x, w, axis_name: str, n: int, out_dtype, bias, act):
         src = (idx - s) % n
         acc = acc + _mm3(cur, _take(w, 0, src * h_loc, h_loc), jnp.float32)
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     if bias is not None or act != "none":
         acc = _epilogue(acc, bias, act)
     return acc.astype(dt)
 
 
-def _mm_rs_pair_impl(x, w1, w1b, axis_name: str, scatter_dim: int, n: int):
+def _mm_rs_pair_impl(x, w1, w1b, axis_name: str, scatter_dim: int, n: int,
+                     comm_dtype: str = "bf16"):
     """Two circulating accumulators; per-step contributions share the x tile
     (one Pallas call on the column-concatenated weights reads each x tile once
     for both products — gated_matmul's trick at ring scope)."""
@@ -430,8 +449,8 @@ def _mm_rs_pair_impl(x, w1, w1b, axis_name: str, scatter_dim: int, n: int):
 
     acc, accb = contrib((idx - 1) % n)
     for s in range(1, n):
-        acc = compat.ring_step_permute(acc, axis_name, n, 1)
-        accb = compat.ring_step_permute(accb, axis_name, n, 1)
+        acc = Q.ring_hop(acc, axis_name, n, 1, comm_dtype)
+        accb = Q.ring_hop(accb, axis_name, n, 1, comm_dtype)
         c, cb = contrib((idx + n - 1 - s) % n)
         acc, accb = acc + c, accb + cb
     return acc, accb
@@ -443,7 +462,7 @@ def _mm_rs_pair_impl(x, w1, w1b, axis_name: str, scatter_dim: int, n: int):
 
 
 def _contract_rows_ring(x, dy, axis_name: str, scatter_dim: int, n: int,
-                        w_dtype):
+                        w_dtype, comm_dtype: str = "bf16"):
     """dw = Σ_d take(x, d·chunk)ᵀ @ dy_d — circulate dy, contract per step."""
     idx = lax.axis_index(axis_name)
     chunk = x.shape[scatter_dim] // n
@@ -456,11 +475,12 @@ def _contract_rows_ring(x, dy, axis_name: str, scatter_dim: int, n: int,
                             out_dtype=jnp.float32)
         dw = term if dw is None else dw + term
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     return dw.astype(w_dtype)
 
 
-def _place_cols_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype):
+def _place_cols_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype,
+                     comm_dtype: str = "bf16"):
     """dw[:, d·chunk] = xᵀ @ dy_d — circulate dy, place column chunks."""
     idx = lax.axis_index(axis_name)
     chunk = w_shape[-1] // n
@@ -472,11 +492,12 @@ def _place_cols_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype):
                             out_dtype=jnp.float32)
         dw = _put(dw, term, 1, d * chunk)
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     return dw.astype(w_dtype)
 
 
-def _place_rows_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype):
+def _place_rows_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype,
+                     comm_dtype: str = "bf16"):
     """dw[d·h_loc, :] = x_dᵀ @ dy — circulate x, place row chunks."""
     idx = lax.axis_index(axis_name)
     h_loc = x.shape[-1]
@@ -488,7 +509,7 @@ def _place_rows_ring(x, dy, axis_name: str, n: int, w_shape, w_dtype):
                             out_dtype=jnp.float32)
         dw = _put(dw, term, 0, src * h_loc)
         if s < n - 1:
-            cur = compat.ring_step_permute(cur, axis_name, n, 1)
+            cur = Q.ring_hop(cur, axis_name, n, 1, comm_dtype)
     return dw.astype(w_dtype)
 
 
@@ -504,23 +525,24 @@ def _use_tpu(n: int, mesh_axes) -> bool:
     return n > 1 and mesh_axes is not None and compat.remote_dma_supported()
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _ag_mm(x, w, axis_name: str, dim: int, n: int, mesh_axes):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _ag_mm(x, w, axis_name: str, dim: int, n: int, mesh_axes, comm_dtype):
     if not _use_tpu(n, mesh_axes):
-        return _ag_mm_impl(x, w, axis_name, dim, n, None, "none")
+        return _ag_mm_impl(x, w, axis_name, dim, n, None, "none", comm_dtype)
     return _ag_matmul_tpu(x, w, axis_name=axis_name, dim=dim, n=n,
-                          mesh_axes=mesh_axes)
+                          mesh_axes=mesh_axes, comm_dtype=comm_dtype)
 
 
-def _ag_mm_fwd(x, w, axis_name, dim, n, mesh_axes):
-    return _ag_mm(x, w, axis_name, dim, n, mesh_axes), (x, w)
+def _ag_mm_fwd(x, w, axis_name, dim, n, mesh_axes, comm_dtype):
+    return _ag_mm(x, w, axis_name, dim, n, mesh_axes, comm_dtype), (x, w)
 
 
-def _ag_mm_bwd(axis_name, dim, n, mesh_axes, res, dy):
+def _ag_mm_bwd(axis_name, dim, n, mesh_axes, comm_dtype, res, dy):
     x, w = res
     # transpose(ring AG-matmul) = ring matmul-RS over the reversed ring
-    dx = _mm_rs(dy, w.T, axis_name, dim, n, mesh_axes).astype(x.dtype)
-    xg = _pure_ag(x, axis_name, dim, n)
+    dx = _mm_rs(dy, w.T, axis_name, dim, n, mesh_axes,
+                comm_dtype).astype(x.dtype)
+    xg = _pure_ag(x, axis_name, dim, n, comm_dtype)
     dw = _tile_mm_raw(_flat(xg).T, _flat(dy).astype(x.dtype),
                       out_dtype=jnp.float32).astype(w.dtype)
     return dx, dw
@@ -529,85 +551,99 @@ def _ag_mm_bwd(axis_name, dim, n, mesh_axes, res, dy):
 _ag_mm.defvjp(_ag_mm_fwd, _ag_mm_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _mm_rs(x, w, axis_name: str, scatter_dim: int, n: int, mesh_axes):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _mm_rs(x, w, axis_name: str, scatter_dim: int, n: int, mesh_axes,
+           comm_dtype):
     if not _use_tpu(n, mesh_axes):
-        return _mm_rs_impl(x, w, axis_name, scatter_dim, n, None, "none")
+        return _mm_rs_impl(x, w, axis_name, scatter_dim, n, None, "none",
+                           comm_dtype)
     return _matmul_rs_tpu(x, w, axis_name=axis_name, scatter_dim=scatter_dim,
-                          n=n, mesh_axes=mesh_axes)
+                          n=n, mesh_axes=mesh_axes, comm_dtype=comm_dtype)
 
 
-def _mm_rs_fwd(x, w, axis_name, scatter_dim, n, mesh_axes):
-    return _mm_rs(x, w, axis_name, scatter_dim, n, mesh_axes), (x, w)
+def _mm_rs_fwd(x, w, axis_name, scatter_dim, n, mesh_axes, comm_dtype):
+    return (_mm_rs(x, w, axis_name, scatter_dim, n, mesh_axes, comm_dtype),
+            (x, w))
 
 
-def _mm_rs_bwd(axis_name, scatter_dim, n, mesh_axes, res, dy):
+def _mm_rs_bwd(axis_name, scatter_dim, n, mesh_axes, comm_dtype, res, dy):
     x, w = res
     if scatter_dim == x.ndim - 1:
         # y_chunk = x @ w[:, dᵢ]: dx = AG_cols(dy) ⊗ wᵀ (contracted ring)
         dx = _ag_mm_contract(dy, w.T, axis_name, n, x.dtype,
-                             mesh_axes).astype(x.dtype)
-        dw = _place_cols_ring(x, dy, axis_name, n, w.shape, w.dtype)
+                             mesh_axes, comm_dtype).astype(x.dtype)
+        dw = _place_cols_ring(x, dy, axis_name, n, w.shape, w.dtype,
+                              comm_dtype)
     else:
         # transpose(ring matmul-RS) = ring AG-matmul
         dx = _ag_mm(dy.astype(x.dtype), w.T, axis_name, scatter_dim, n,
-                    mesh_axes)
-        dw = _contract_rows_ring(x, dy, axis_name, scatter_dim, n, w.dtype)
+                    mesh_axes, comm_dtype)
+        dw = _contract_rows_ring(x, dy, axis_name, scatter_dim, n, w.dtype,
+                                 comm_dtype)
     return dx, dw
 
 
 _mm_rs.defvjp(_mm_rs_fwd, _mm_rs_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _ag_mm_contract(x, w, axis_name: str, n: int, out_dtype, mesh_axes):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _ag_mm_contract(x, w, axis_name: str, n: int, out_dtype, mesh_axes,
+                    comm_dtype):
     if not _use_tpu(n, mesh_axes):
         return _ag_mm_contract_impl(x, w, axis_name, n, out_dtype, None,
-                                    "none")
+                                    "none", comm_dtype)
     return _ag_matmul_contract_tpu(x, w, axis_name=axis_name, n=n,
-                                   out_dtype=out_dtype, mesh_axes=mesh_axes)
+                                   out_dtype=out_dtype, mesh_axes=mesh_axes,
+                                   comm_dtype=comm_dtype)
 
 
-def _ag_mm_contract_fwd(x, w, axis_name, n, out_dtype, mesh_axes):
-    return _ag_mm_contract(x, w, axis_name, n, out_dtype, mesh_axes), (x, w)
+def _ag_mm_contract_fwd(x, w, axis_name, n, out_dtype, mesh_axes, comm_dtype):
+    return (_ag_mm_contract(x, w, axis_name, n, out_dtype, mesh_axes,
+                            comm_dtype), (x, w))
 
 
-def _ag_mm_contract_bwd(axis_name, n, out_dtype, mesh_axes, res, dy):
+def _ag_mm_contract_bwd(axis_name, n, out_dtype, mesh_axes, comm_dtype, res,
+                        dy):
     x, w = res
     # y = Σ_src x_src @ w[src rows]: dx arrives as a matmul-RS over wᵀ columns
     dx = _mm_rs(dy.astype(x.dtype), w.T, axis_name, dy.ndim - 1, n,
-                mesh_axes).astype(x.dtype)
-    dw = _place_rows_ring(x, dy, axis_name, n, w.shape, w.dtype)
+                mesh_axes, comm_dtype).astype(x.dtype)
+    dw = _place_rows_ring(x, dy, axis_name, n, w.shape, w.dtype, comm_dtype)
     return dx, dw
 
 
 _ag_mm_contract.defvjp(_ag_mm_contract_fwd, _ag_mm_contract_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
 def _mm_rs_pair(x, w1, w1b, axis_name: str, scatter_dim: int, n: int,
-                mesh_axes):
+                mesh_axes, comm_dtype):
     if not _use_tpu(n, mesh_axes):
-        return _mm_rs_pair_impl(x, w1, w1b, axis_name, scatter_dim, n)
+        return _mm_rs_pair_impl(x, w1, w1b, axis_name, scatter_dim, n,
+                                comm_dtype)
     return _matmul_rs_pair_tpu(x, w1, w1b, axis_name=axis_name,
                                scatter_dim=scatter_dim, n=n,
-                               mesh_axes=mesh_axes)
+                               mesh_axes=mesh_axes, comm_dtype=comm_dtype)
 
 
-def _mm_rs_pair_fwd(x, w1, w1b, axis_name, scatter_dim, n, mesh_axes):
-    return (_mm_rs_pair(x, w1, w1b, axis_name, scatter_dim, n, mesh_axes),
-            (x, w1, w1b))
+def _mm_rs_pair_fwd(x, w1, w1b, axis_name, scatter_dim, n, mesh_axes,
+                    comm_dtype):
+    return (_mm_rs_pair(x, w1, w1b, axis_name, scatter_dim, n, mesh_axes,
+                        comm_dtype), (x, w1, w1b))
 
 
-def _mm_rs_pair_bwd(axis_name, scatter_dim, n, mesh_axes, res, dys):
+def _mm_rs_pair_bwd(axis_name, scatter_dim, n, mesh_axes, comm_dtype, res,
+                    dys):
     x, w1, w1b = res
     dh, dg = dys
     dx = (_ag_mm(dh.astype(x.dtype), w1.T, axis_name, scatter_dim, n,
-                 mesh_axes)
+                 mesh_axes, comm_dtype)
           + _ag_mm(dg.astype(x.dtype), w1b.T, axis_name, scatter_dim, n,
-                   mesh_axes))
-    dw1 = _contract_rows_ring(x, dh, axis_name, scatter_dim, n, w1.dtype)
-    dw1b = _contract_rows_ring(x, dg, axis_name, scatter_dim, n, w1b.dtype)
+                   mesh_axes, comm_dtype))
+    dw1 = _contract_rows_ring(x, dh, axis_name, scatter_dim, n, w1.dtype,
+                              comm_dtype)
+    dw1b = _contract_rows_ring(x, dg, axis_name, scatter_dim, n, w1b.dtype,
+                               comm_dtype)
     return dx, dw1, dw1b
 
 
@@ -618,7 +654,8 @@ _mm_rs_pair.defvjp(_mm_rs_pair_fwd, _mm_rs_pair_bwd)
 
 
 def ag_matmul(x, w, axis_name: str, *, dim: int = 1, n: int,
-              bias=None, act: str = "none", mesh_axes=None):
+              bias=None, act: str = "none", mesh_axes=None,
+              comm_dtype: str = "bf16"):
     """Fused all-gather ⊕ matmul; x [b,t,h] (gather ``dim``), w [h,o].
 
     Differentiable when no epilogue is requested; the bias/activation epilogue
@@ -626,38 +663,44 @@ def ag_matmul(x, w, axis_name: str, *, dim: int = 1, n: int,
     training path never uses it, serving and kernel tests do.  ``mesh_axes``
     is the enclosing mesh's full axis-name tuple, required for the TPU
     remote-DMA path to address ring neighbours by mesh coordinates; without
-    it the ppermute-emulated path runs."""
+    it the ppermute-emulated path runs.  ``comm_dtype="int8"`` ships each hop
+    as an (int8, fp32 per-row scale) pair (docs/DESIGN.md §11)."""
     if bias is None and act == "none":
-        return _ag_mm(x, w, axis_name, dim, n, _axes_key(mesh_axes))
-    return _ag_mm_impl(x, w, axis_name, dim, n, bias, act)
+        return _ag_mm(x, w, axis_name, dim, n, _axes_key(mesh_axes),
+                      comm_dtype)
+    return _ag_mm_impl(x, w, axis_name, dim, n, bias, act, comm_dtype)
 
 
 def matmul_rs(x, w, axis_name: str, *, scatter_dim: int, n: int,
-              bias=None, act: str = "none", mesh_axes=None):
+              bias=None, act: str = "none", mesh_axes=None,
+              comm_dtype: str = "bf16"):
     """Fused matmul ⊕ reduce-scatter; epilogue fires on the final (fully
     reduced) accumulator only, preserving post-reduction semantics."""
     if bias is None and act == "none":
-        return _mm_rs(x, w, axis_name, scatter_dim, n, _axes_key(mesh_axes))
-    return _mm_rs_impl(x, w, axis_name, scatter_dim, n, bias, act)
+        return _mm_rs(x, w, axis_name, scatter_dim, n, _axes_key(mesh_axes),
+                      comm_dtype)
+    return _mm_rs_impl(x, w, axis_name, scatter_dim, n, bias, act, comm_dtype)
 
 
 def ag_matmul_contract(x, w, axis_name: str, *, n: int, out_dtype=None,
-                       bias=None, act: str = "none", mesh_axes=None):
+                       bias=None, act: str = "none", mesh_axes=None,
+                       comm_dtype: str = "bf16"):
     """Fused all-gather ⊕ matmul over the contracted dim (fp32 ring acc)."""
     if bias is None and act == "none":
         return _ag_mm_contract(x, w, axis_name, n, out_dtype,
-                               _axes_key(mesh_axes))
-    return _ag_mm_contract_impl(x, w, axis_name, n, out_dtype, bias, act)
+                               _axes_key(mesh_axes), comm_dtype)
+    return _ag_mm_contract_impl(x, w, axis_name, n, out_dtype, bias, act,
+                                comm_dtype)
 
 
 def matmul_rs_pair(x, w1, w1b, axis_name: str, *, scatter_dim: int, n: int,
-                   mesh_axes=None):
+                   mesh_axes=None, comm_dtype: str = "bf16"):
     """Gated fused matmul ⊕ RS: returns (x·w1, x·w1b) reduce-scattered, both
     per-step contributions reading the same x tile.  The caller applies the
     gate (``act(h) * g``) — keeping the nonlinearity outside lets model code
     pass arbitrary activation callables."""
     return _mm_rs_pair(x, w1, w1b, axis_name, scatter_dim, n,
-                       _axes_key(mesh_axes))
+                       _axes_key(mesh_axes), comm_dtype)
 
 
 def _axes_key(mesh_axes):
@@ -702,10 +745,17 @@ def _nbr(ids_ref, n_axes: int, which: str):
 
 def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
                    act: str = "none", mesh_axes=None,
-                   collective_id: int = 0):
+                   collective_id: int = 0, comm_dtype: str = "bf16"):
     """Single-kernel ring AG-matmul: grid (step, batch, m, n, k); the remote
     DMA for step s+1 launches on step s's first tile and the MXU consumes the
-    current slot through the tile loop meanwhile."""
+    current slot through the tile loop meanwhile.
+
+    ``comm_dtype="int8"``: the shard is quantized ONCE on the host side of
+    the call (it circulates unchanged, so a single quantization serves every
+    hop — strictly less error than the emulated path's per-hop roundtrip)
+    and the double-buffered VMEM pair becomes an (int8 payload, fp32 per-row
+    scale) pair moved by paired remote DMAs sharing one capacity credit;
+    each MXU tile dequantizes its slice right before the dot."""
     assert dim == 1, "token-dim gather only"
     b, t, h = x.shape
     o = w.shape[-1]
@@ -713,15 +763,22 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
         pick_block(h, BLOCK_K)
     mt, nt, kt = t // bm, o // bn, h // bk
     ids, n_axes = _ring_ids(axis_name, n, mesh_axes)
+    quant = comm_dtype == "int8" and Q.quant_ok(x.shape, x.dtype)
 
-    def kernel(ids_ref, x_hbm, w_ref, o_ref, buf, acc, copy_sem,
-               send_sem, recv_sem, cap_sem):
+    def kernel(ids_ref, *refs):
+        if quant:
+            (xq_hbm, xs_hbm, w_ref, o_ref, buf, sbuf, acc, copy_sem,
+             send_sem, recv_sem, send_s, recv_s, cap_sem) = refs
+        else:
+            (x_hbm, w_ref, o_ref, buf, acc, copy_sem,
+             send_sem, recv_sem, cap_sem) = refs
         s, bi = pl.program_id(0), pl.program_id(1)
         i, j, k = pl.program_id(2), pl.program_id(3), pl.program_id(4)
         first = (bi == 0) & (i == 0) & (j == 0) & (k == 0)
         last = ((bi == b - 1) & (i == mt - 1) & (j == nt - 1)
                 & (k == kt - 1))
         slot = lax.rem(s, 2)
+        nxt = lax.rem(s + 1, 2)
 
         @pl.when((s == 0) & first)
         def _prologue():
@@ -731,7 +788,13 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
                     barrier, inc=1, device_id=_nbr(ids_ref, n_axes, which),
                     device_id_type=pltpu.DeviceIdType.MESH)
             pltpu.semaphore_wait(barrier, 2)
-            cp = pltpu.make_async_copy(x_hbm, buf.at[0], copy_sem)
+            if quant:
+                cp = pltpu.make_async_copy(xq_hbm, buf.at[0], copy_sem)
+                cp.start()
+                cp.wait()
+                cp = pltpu.make_async_copy(xs_hbm, sbuf.at[0], copy_sem)
+            else:
+                cp = pltpu.make_async_copy(x_hbm, buf.at[0], copy_sem)
             cp.start()
             cp.wait()
 
@@ -739,6 +802,9 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
         def _recv_wait():     # data for this step landed in buf[slot]
             pltpu.make_async_copy(buf.at[slot], buf.at[slot],
                                   recv_sem.at[slot]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[slot], sbuf.at[slot],
+                                      recv_s.at[slot]).wait()
 
         @pl.when((s < n - 1) & first)
         def _send():          # forward the current shard to the right
@@ -746,19 +812,31 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
             def _credit():    # right neighbour freed the destination slot
                 pltpu.semaphore_wait(cap_sem, 1)
             rdma = pltpu.make_async_remote_copy(
-                src_ref=buf.at[slot], dst_ref=buf.at[lax.rem(s + 1, 2)],
-                send_sem=send_sem.at[slot], recv_sem=recv_sem.at[lax.rem(s + 1, 2)],
+                src_ref=buf.at[slot], dst_ref=buf.at[nxt],
+                send_sem=send_sem.at[slot], recv_sem=recv_sem.at[nxt],
                 device_id=_nbr(ids_ref, n_axes, "right"),
                 device_id_type=pltpu.DeviceIdType.MESH)
             rdma.start()
+            if quant:
+                rdma_s = pltpu.make_async_remote_copy(
+                    src_ref=sbuf.at[slot], dst_ref=sbuf.at[nxt],
+                    send_sem=send_s.at[slot], recv_sem=recv_s.at[nxt],
+                    device_id=_nbr(ids_ref, n_axes, "right"),
+                    device_id_type=pltpu.DeviceIdType.MESH)
+                rdma_s.start()
 
         @pl.when(k == 0)
         def _init():
             acc[...] = jnp.zeros_like(acc)
 
-        acc[...] += jnp.dot(
-            buf[slot, bi, pl.ds(i * bm, bm), pl.ds(k * bk, bk)],
-            w_ref[...], preferred_element_type=jnp.float32)
+        if quant:
+            xt = (buf[slot, bi, pl.ds(i * bm, bm),
+                      pl.ds(k * bk, bk)].astype(jnp.float32)
+                  * sbuf[slot, bi, pl.ds(i * bm, bm), :]).astype(w_ref.dtype)
+        else:
+            xt = buf[slot, bi, pl.ds(i * bm, bm), pl.ds(k * bk, bk)]
+        acc[...] += jnp.dot(xt, w_ref[...],
+                            preferred_element_type=jnp.float32)
 
         @pl.when(k == kt - 1)
         def _done():
@@ -768,6 +846,9 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
         def _step_done():     # our outbound read of buf[slot] must be done
             pltpu.make_async_copy(buf.at[slot], buf.at[slot],
                                   send_sem.at[slot]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[slot], sbuf.at[slot],
+                                      send_s.at[slot]).wait()
 
         # Credit the upstream neighbour: slot s%2 is free for the write its
         # step-(s+1) send performs.  Only sends at steps 1..n-2 consume a
@@ -779,38 +860,62 @@ def _ag_matmul_tpu(x, w, *, axis_name: str, dim: int, n: int,
                 device_id_type=pltpu.DeviceIdType.MESH)
 
     grid = (n, b, mt, nt, kt)
+    if quant:
+        xq, xs = Q.quant_int8(x)
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((bk, bn), lambda s, bi, i, j, k, ids: (k, j)),
+        ]
+        scratch = [
+            pltpu.VMEM((2, b, t, h), jnp.int8),
+            pltpu.VMEM((2, b, t, 1), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
+        operands = (ids, xq, xs, w)
+    else:
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((bk, bn), lambda s, bi, i, j, k, ids: (k, j)),
+        ]
+        scratch = [
+            pltpu.VMEM((2, b, t, h), x.dtype),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
+        operands = (ids, x, w)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                pl.BlockSpec((bk, bn), lambda s, bi, i, j, k, ids: (k, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, bm, bn),
                 lambda s, bi, i, j, k, ids:
                     (bi, ((ids[0] - s) % n) * mt + i, j)),
-            scratch_shapes=[
-                pltpu.VMEM((2, b, t, h), x.dtype),
-                pltpu.VMEM((bm, bn), jnp.float32),
-                pltpu.SemaphoreType.DMA,
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.REGULAR,
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((b, n * t, o), x.dtype),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",) * len(grid),
             collective_id=collective_id, has_side_effects=True),
-    )(ids, x, w)
+    )(*operands)
     return out
 
 
 def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
-                   mesh_axes=None, collective_id: int = 1):
+                   mesh_axes=None, collective_id: int = 1,
+                   comm_dtype: str = "bf16"):
     """Single-kernel ring matmul-RS: the per-destination accumulator chunk
     circulates through the VMEM pair.
 
@@ -821,7 +926,16 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
     without an inline wait, its completion (and the capacity credit to the
     upstream neighbour) checked at the first tile of the NEXT step.  x and w
     stay in HBM and stream through double-buffered BlockSpec tiles whose
-    index maps follow the per-step destination rank (scalar prefetch)."""
+    index maps follow the per-step destination rank (scalar prefetch).
+
+    ``comm_dtype="int8"``: unlike the AG kernels, the circulating object is
+    the *accumulator*, which changes every hop — so the quantized pair must
+    be rebuilt per send.  Folds land in a full-width ``work`` staging buffer
+    (dequantize the received slot + add this step's fp32 tile); at the send
+    point the whole ``work`` buffer is quantized into the (int8, fp32 scale)
+    VMEM pair and both halves fly as paired remote DMAs under one capacity
+    credit.  Only link traffic quantizes — ``work`` and the fp32 acc tiles
+    stay full width."""
     b, t, h = x.shape
     o = w.shape[-1]
     last = scatter_dim == x.ndim - 1
@@ -838,6 +952,7 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
         mt, nt, kt = chunk // bm, o // bn, h // bk
         out_shape = (b, chunk, o)
     ids, n_axes = _ring_ids(axis_name, n, mesh_axes)
+    quant = comm_dtype == "int8" and Q.quant_ok(out_shape, x.dtype)
 
     def _dest(s, ids_ref):                   # (me + n-1-s) % n; s=0 → me-1
         return (ids_ref[0] + n - 1 - s) % n
@@ -857,8 +972,13 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
         w_spec = pl.BlockSpec((bk, bn),
                               lambda s, bi, i, j, k, ids: (k, j))
 
-    def kernel(ids_ref, x_ref, w_ref, o_ref, buf, acc,
-               send_sem, recv_sem, cap_sem):
+    def kernel(ids_ref, *refs):
+        if quant:
+            (x_ref, w_ref, o_ref, buf, sbuf, work, acc,
+             send_sem, recv_sem, send_s, recv_s, cap_sem) = refs
+        else:
+            (x_ref, w_ref, o_ref, buf, acc,
+             send_sem, recv_sem, cap_sem) = refs
         s, bi = pl.program_id(0), pl.program_id(1)
         i, j, k = pl.program_id(2), pl.program_id(3), pl.program_id(4)
         first = (bi == 0) & (i == 0) & (j == 0) & (k == 0)
@@ -882,6 +1002,9 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
             # neighbour may now overwrite our slot (its next send lands here)
             pltpu.make_async_copy(buf.at[prev], buf.at[prev],
                                   send_sem.at[prev]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[prev], sbuf.at[prev],
+                                      send_s.at[prev]).wait()
 
         @pl.when((s > 0) & (s < n - 1) & first)
         def _free_slot():      # credits sends at steps 1..n-2 (drains to 0)
@@ -903,19 +1026,43 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
         def _recv_wait():
             pltpu.make_async_copy(buf.at[slot], buf.at[slot],
                                   recv_sem.at[slot]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[slot], sbuf.at[slot],
+                                      recv_s.at[slot]).wait()
 
         @pl.when(k == kt - 1)
         def _fold():
-            tile = acc[...].astype(buf.dtype)
-            idxs = (slot, bi, pl.ds(i * bm, bm), pl.ds(j * bn, bn))
+            if quant:
+                tile = acc[...].astype(work.dtype)
+                idxs = (bi, pl.ds(i * bm, bm), pl.ds(j * bn, bn))
 
-            @pl.when(s == 0)
-            def _set():
-                buf[idxs] = tile
+                @pl.when(s == 0)
+                def _set():
+                    work[idxs] = tile
 
-            @pl.when(s > 0)
-            def _add():
-                buf[idxs] += tile
+                @pl.when(s > 0)
+                def _add():   # dequantize the received tile, fold this step's
+                    got = (buf[(slot,) + idxs].astype(jnp.float32)
+                           * sbuf[slot, bi, pl.ds(i * bm, bm), :])
+                    work[idxs] = got.astype(work.dtype) + tile
+            else:
+                tile = acc[...].astype(buf.dtype)
+                idxs = (slot, bi, pl.ds(i * bm, bm), pl.ds(j * bn, bn))
+
+                @pl.when(s == 0)
+                def _set():
+                    buf[idxs] = tile
+
+                @pl.when(s > 0)
+                def _add():
+                    buf[idxs] += tile
+
+        if quant:   # the outbound pair is rebuilt from work at every send
+            @pl.when((s < n - 1) & lastt)
+            def _requant():
+                qv, sv = Q.quant_int8(work[...])
+                buf[slot] = qv
+                sbuf[slot] = sv
 
         @pl.when((s < n - 1) & lastt)
         def _send():           # start only — completion checked next step
@@ -929,12 +1076,44 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
                 device_id=_nbr(ids_ref, n_axes, "right"),
                 device_id_type=pltpu.DeviceIdType.MESH)
             rdma.start()
+            if quant:
+                rdma_s = pltpu.make_async_remote_copy(
+                    src_ref=sbuf.at[slot], dst_ref=sbuf.at[lax.rem(s + 1, 2)],
+                    send_sem=send_s.at[slot],
+                    recv_sem=recv_s.at[lax.rem(s + 1, 2)],
+                    device_id=_nbr(ids_ref, n_axes, "right"),
+                    device_id_type=pltpu.DeviceIdType.MESH)
+                rdma_s.start()
 
         @pl.when((s == n - 1) & (k == kt - 1))
         def _emit():
-            o_ref[...] = buf[slot, bi, pl.ds(i * bm, bm),
-                             pl.ds(j * bn, bn)].astype(o_ref.dtype)
+            if quant:
+                o_ref[...] = work[bi, pl.ds(i * bm, bm),
+                                  pl.ds(j * bn, bn)].astype(o_ref.dtype)
+            else:
+                o_ref[...] = buf[slot, bi, pl.ds(i * bm, bm),
+                                 pl.ds(j * bn, bn)].astype(o_ref.dtype)
 
+    if quant:
+        scratch = [
+            pltpu.VMEM((2,) + out_shape, jnp.int8),
+            pltpu.VMEM((2,) + out_shape[:-1] + (1,), jnp.float32),
+            pltpu.VMEM(out_shape, x.dtype),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
+    else:
+        scratch = [
+            pltpu.VMEM((2,) + out_shape, x.dtype),
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
     grid = (n, b, mt, nt, kt)
     return pl.pallas_call(
         kernel,
@@ -944,13 +1123,7 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
             in_specs=[x_spec, w_spec],
             out_specs=pl.BlockSpec(
                 (1, bm, bn), lambda s, bi, i, j, k, ids: (bi, i, j)),
-            scratch_shapes=[
-                pltpu.VMEM((2,) + out_shape, x.dtype),
-                pltpu.VMEM((bm, bn), jnp.float32),
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.REGULAR,
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
         compiler_params=pltpu.TPUCompilerParams(
@@ -960,10 +1133,16 @@ def _matmul_rs_tpu(x, w, *, axis_name: str, scatter_dim: int, n: int,
 
 
 def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
-                            mesh_axes=None, collective_id: int = 2):
+                            mesh_axes=None, collective_id: int = 2,
+                            comm_dtype: str = "bf16"):
     """Single-kernel contracted-dim ring: x shards circulate while an fp32
     accumulator spanning ring steps lives in VMEM; w row-blocks are indexed by
-    the shard's source rank, epilogue/cast on the very last step."""
+    the shard's source rank, epilogue/cast on the very last step.
+
+    ``comm_dtype="int8"``: like the AG kernel, the payload is ring-invariant
+    — quantized once outside the kernel, the (int8, fp32 scale) pair
+    circulates through paired remote DMAs and every tile dequantizes its
+    slice at the dot; the fp32 accumulator never quantizes."""
     b, t, h = x.shape
     o = w.shape[-1]
     m = b * t
@@ -972,14 +1151,21 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
         pick_block(h, BLOCK_K)
     mt, nt, kt = m // bm, o // bn, h // bk
     ids, n_axes = _ring_ids(axis_name, n, mesh_axes)
+    quant = comm_dtype == "int8" and Q.quant_ok(x.shape, x.dtype)
 
-    def kernel(ids_ref, x_hbm, w_ref, o_ref, buf, acc, copy_sem,
-               send_sem, recv_sem, cap_sem):
+    def kernel(ids_ref, *refs):
+        if quant:
+            (xq_hbm, xs_hbm, w_ref, o_ref, buf, sbuf, acc, copy_sem,
+             send_sem, recv_sem, send_s, recv_s, cap_sem) = refs
+        else:
+            (x_hbm, w_ref, o_ref, buf, acc, copy_sem,
+             send_sem, recv_sem, cap_sem) = refs
         s = pl.program_id(0)
         i, j, k = pl.program_id(1), pl.program_id(2), pl.program_id(3)
         first = (i == 0) & (j == 0) & (k == 0)
         lastt = (i == mt - 1) & (j == nt - 1) & (k == kt - 1)
         slot = lax.rem(s, 2)
+        nxt = lax.rem(s + 1, 2)
 
         @pl.when((s == 0) & first)
         def _prologue():
@@ -989,7 +1175,13 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
                     barrier, inc=1, device_id=_nbr(ids_ref, n_axes, which),
                     device_id_type=pltpu.DeviceIdType.MESH)
             pltpu.semaphore_wait(barrier, 2)
-            cp = pltpu.make_async_copy(x_hbm, buf.at[0], copy_sem)
+            if quant:
+                cp = pltpu.make_async_copy(xq_hbm, buf.at[0], copy_sem)
+                cp.start()
+                cp.wait()
+                cp = pltpu.make_async_copy(xs_hbm, sbuf.at[0], copy_sem)
+            else:
+                cp = pltpu.make_async_copy(x_hbm, buf.at[0], copy_sem)
             cp.start()
             cp.wait()
             acc[...] = jnp.zeros_like(acc)
@@ -998,6 +1190,9 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
         def _recv_wait():
             pltpu.make_async_copy(buf.at[slot], buf.at[slot],
                                   recv_sem.at[slot]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[slot], sbuf.at[slot],
+                                      recv_s.at[slot]).wait()
 
         @pl.when((s < n - 1) & first)
         def _send():
@@ -1005,16 +1200,31 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
             def _credit():
                 pltpu.semaphore_wait(cap_sem, 1)
             rdma = pltpu.make_async_remote_copy(
-                src_ref=buf.at[slot], dst_ref=buf.at[lax.rem(s + 1, 2)],
+                src_ref=buf.at[slot], dst_ref=buf.at[nxt],
                 send_sem=send_sem.at[slot],
-                recv_sem=recv_sem.at[lax.rem(s + 1, 2)],
+                recv_sem=recv_sem.at[nxt],
                 device_id=_nbr(ids_ref, n_axes, "right"),
                 device_id_type=pltpu.DeviceIdType.MESH)
             rdma.start()
+            if quant:
+                rdma_s = pltpu.make_async_remote_copy(
+                    src_ref=sbuf.at[slot], dst_ref=sbuf.at[nxt],
+                    send_sem=send_s.at[slot], recv_sem=recv_s.at[nxt],
+                    device_id=_nbr(ids_ref, n_axes, "right"),
+                    device_id_type=pltpu.DeviceIdType.MESH)
+                rdma_s.start()
 
+        if quant:
+            xt = (buf[slot].reshape(m, h)[pl.ds(i * bm, bm),
+                                          pl.ds(k * bk, bk)]
+                  .astype(jnp.float32)
+                  * sbuf[slot].reshape(m, 1)[pl.ds(i * bm, bm), :]
+                  ).astype(w_ref.dtype)
+        else:
+            xt = buf[slot].reshape(m, h)[pl.ds(i * bm, bm),
+                                         pl.ds(k * bk, bk)]
         acc[pl.ds(i * bm, bm), pl.ds(j * bn, bn)] += jnp.dot(
-            buf[slot].reshape(m, h)[pl.ds(i * bm, bm), pl.ds(k * bk, bk)],
-            w_ref[...], preferred_element_type=jnp.float32)
+            xt, w_ref[...], preferred_element_type=jnp.float32)
 
         @pl.when((s == n - 1) & (k == kt - 1))
         def _emit():
@@ -1025,6 +1235,9 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
         def _step_done():     # our outbound read of buf[slot] must be done
             pltpu.make_async_copy(buf.at[slot], buf.at[slot],
                                   send_sem.at[slot]).wait()
+            if quant:
+                pltpu.make_async_copy(sbuf.at[slot], sbuf.at[slot],
+                                      send_s.at[slot]).wait()
 
         # Only sends at steps 1..n-2 consume a credit, so only steps 0..n-3
         # issue one — the capacity semaphore drains to zero at kernel end.
@@ -1034,45 +1247,73 @@ def _ag_matmul_contract_tpu(x, w, *, axis_name: str, n: int, out_dtype=None,
                 cap_sem, inc=1, device_id=_nbr(ids_ref, n_axes, "left"),
                 device_id_type=pltpu.DeviceIdType.MESH)
 
+    if quant:
+        xq, xs = Q.quant_int8(x)
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            # w row-block follows the circulating shard's source rank
+            pl.BlockSpec((h // kt, o // nt),
+                         lambda s, i, j, k, ids:
+                             (((ids[0] - s) % n) * kt + k, j)),
+        ]
+        scratch = [
+            pltpu.VMEM((2, b, t, h), jnp.int8),
+            pltpu.VMEM((2, b, t, 1), jnp.float32),
+            pltpu.VMEM((m, o), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
+        operands = (ids, xq, xs, w)
+    else:
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            # w row-block follows the circulating shard's source rank
+            pl.BlockSpec((h // kt, o // nt),
+                         lambda s, i, j, k, ids:
+                             (((ids[0] - s) % n) * kt + k, j)),
+        ]
+        scratch = [
+            pltpu.VMEM((2, b, t, h), x.dtype),
+            pltpu.VMEM((m, o), jnp.float32),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.REGULAR,
+        ]
+        operands = (ids, x, w)
     grid = (n, mt, nt, kt)
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                # w row-block follows the circulating shard's source rank
-                pl.BlockSpec((h // kt, o // nt),
-                             lambda s, i, j, k, ids:
-                                 (((ids[0] - s) % n) * kt + k, j)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (m // mt, o // nt), lambda s, i, j, k, ids: (i, j)),
-            scratch_shapes=[
-                pltpu.VMEM((2, b, t, h), x.dtype),
-                pltpu.VMEM((m, o), jnp.float32),
-                pltpu.SemaphoreType.DMA,
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.DMA((2,)),
-                pltpu.SemaphoreType.REGULAR,
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=jax.ShapeDtypeStruct((m, o), dt),
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",) * len(grid),
             collective_id=collective_id, has_side_effects=True),
-    )(ids, x, w)
+    )(*operands)
     return out.reshape(b, t, o)
 
 
 def _matmul_rs_pair_tpu(x, w1, w1b, *, axis_name: str, scatter_dim: int,
-                        n: int, mesh_axes=None, collective_id: int = 3):
+                        n: int, mesh_axes=None, collective_id: int = 3,
+                        comm_dtype: str = "bf16"):
     """Gated single-kernel ring matmul-RS: the column-concatenated weights run
     through one `_matmul_rs_tpu`-shaped loop, so every x tile is read once for
     both products (shared-x-tile trick); the halves are split on emit."""
     wc = jnp.concatenate([w1, w1b], axis=1)
     y = _matmul_rs_tpu(x, wc, axis_name=axis_name, scatter_dim=scatter_dim,
-                       n=n, mesh_axes=mesh_axes, collective_id=collective_id)
+                       n=n, mesh_axes=mesh_axes, collective_id=collective_id,
+                       comm_dtype=comm_dtype)
     o1 = w1.shape[-1]
     return y[..., :o1], y[..., o1:]

@@ -53,6 +53,9 @@ def main():
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--top-p", type=float, default=0.9)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant-kv", action="store_true",
+                    help="store paged K/V as int8 + per-row fp32 scales "
+                         "(docs/DESIGN.md §11)")
     args = ap.parse_args()
 
     import jax
@@ -78,7 +81,8 @@ def main():
     eng = DecodeEngine(cfg, pcfg, rc, params, pool, compute_dtype=jnp.float32,
                        eos_id=None if args.eos_id < 0 else args.eos_id,
                        method=args.sample, temperature=args.temperature,
-                       top_p=args.top_p, seed=args.seed)
+                       top_p=args.top_p, seed=args.seed,
+                       quant_kv=args.quant_kv)
     t0 = time.perf_counter()
     eng.warmup(prompt_lens=prompt_lens)  # compile BEFORE the clock starts
     print(f"warmup (jit) {time.perf_counter() - t0:.2f}s")

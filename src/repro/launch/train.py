@@ -132,6 +132,9 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--strategy", default="hecaton")
+    ap.add_argument("--comm-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="ring-collective wire dtype: int8 quantizes each "
+                         "hop's shard (docs/DESIGN.md §11)")
     ap.add_argument("--mesh-devices", type=int, default=1)
     ap.add_argument("--data", type=int, default=2)
     ap.add_argument("--mx", type=int, default=2)
@@ -211,7 +214,8 @@ def main():
     pcfg = ParallelConfig(strategy=args.strategy, data=args.data,
                           model=args.mx * args.my, mx=args.mx, my=args.my,
                           pods=args.pods, pod_axis_role=args.pod_role,
-                          microbatches=args.microbatches, zero1=True)
+                          microbatches=args.microbatches, zero1=True,
+                          comm_dtype=args.comm_dtype)
     if args.mesh_devices > 1 or args.pods > 1:
         mesh = make_small_mesh(args.strategy, args.data, args.mx, args.my,
                                pods=args.pods)

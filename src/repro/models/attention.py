@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.config import ModelConfig
+from repro.core import quant as QU
 from repro.models import layers as L
 
 NEG_INF = -1e30
@@ -95,6 +96,34 @@ class PagedMLACache(NamedTuple):
     lengths: jax.Array      # [B] int32
 
 
+class QuantPagedKVCache(NamedTuple):
+    """Int8 block-paged KV arena (docs/DESIGN.md §11).
+
+    Same block-table protocol as :class:`PagedKVCache`, but the payload
+    arenas hold per-token-per-head symmetric int8 with a trailing-1 fp32
+    scale arena alongside (scale = max|row| / 127 over the head dim, 1.0
+    for all-zero rows so untouched blocks dequantize to exact zeros).
+    Attention dequantizes into the compute dtype at gather time; the
+    fp paged path is untouched when the arena is dense.
+    """
+    k: jax.Array            # int8 [n_blocks, block, nkv, dh]
+    k_scale: jax.Array      # f32  [n_blocks, block, nkv, 1]
+    v: jax.Array
+    v_scale: jax.Array
+    block_table: jax.Array  # [B, max_blocks] int32
+    lengths: jax.Array      # [B] int32
+
+
+class QuantPagedMLACache(NamedTuple):
+    """Int8 paged variant of :class:`PagedMLACache` (docs/DESIGN.md §11)."""
+    c_kv: jax.Array         # int8 [n_blocks, block, kv_lora]
+    c_scale: jax.Array      # f32  [n_blocks, block, 1]
+    k_rope: jax.Array       # int8 [n_blocks, block, dr]
+    r_scale: jax.Array      # f32  [n_blocks, block, 1]
+    block_table: jax.Array  # [B, max_blocks] int32
+    lengths: jax.Array      # [B] int32
+
+
 def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int, dtype):
     dh = cfg.resolved_head_dim
     return KVCache(jnp.zeros((batch, s_max, cfg.num_kv_heads, dh), dtype),
@@ -129,6 +158,43 @@ def init_paged_mla(cfg: ModelConfig, num_blocks: int, block: int, batch: int,
         jnp.zeros((batch,), jnp.int32))
 
 
+def _quant_arena_dtype(row_dim: int, dtype):
+    """Degrade rule for arenas, mirroring the wire-side ``quant_ok`` gate:
+    rows narrower than MIN_QUANT_DIM keep the dense dtype (a per-row scale
+    would eat the byte win and the coarse scale hurts accuracy — DESIGN
+    §11); the scale arena still exists but stays at its init value of 1.0
+    and the write/gather dispatch on the arena dtype skips it."""
+    return jnp.int8 if row_dim >= QU.MIN_QUANT_DIM else dtype
+
+
+def init_paged_kv_quant(cfg: ModelConfig, num_blocks: int, block: int,
+                        batch: int, max_blocks: int, dtype=jnp.float32):
+    dh = cfg.resolved_head_dim
+    nkv = cfg.num_kv_heads
+    dt = _quant_arena_dtype(dh, dtype)
+    return QuantPagedKVCache(
+        jnp.zeros((num_blocks, block, nkv, dh), dt),
+        jnp.ones((num_blocks, block, nkv, 1), jnp.float32),
+        jnp.zeros((num_blocks, block, nkv, dh), dt),
+        jnp.ones((num_blocks, block, nkv, 1), jnp.float32),
+        jnp.zeros((batch, max_blocks), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
+def init_paged_mla_quant(cfg: ModelConfig, num_blocks: int, block: int,
+                         batch: int, max_blocks: int, dtype=jnp.float32):
+    m = cfg.mla
+    return QuantPagedMLACache(
+        jnp.zeros((num_blocks, block, m.kv_lora_rank),
+                  _quant_arena_dtype(m.kv_lora_rank, dtype)),
+        jnp.ones((num_blocks, block, 1), jnp.float32),
+        jnp.zeros((num_blocks, block, m.qk_rope_head_dim),
+                  _quant_arena_dtype(m.qk_rope_head_dim, dtype)),
+        jnp.ones((num_blocks, block, 1), jnp.float32),
+        jnp.zeros((batch, max_blocks), jnp.int32),
+        jnp.zeros((batch,), jnp.int32))
+
+
 def paged_write(arena, vals, block_table, lengths):
     """Scatter ``vals`` [B, S, ...] into the block arena.
 
@@ -155,6 +221,36 @@ def paged_gather(arena, block_table):
     weights — see the bit-exactness argument in docs/DESIGN.md §10)."""
     B, nblk = block_table.shape
     g = arena[block_table]                     # [B, nblk, block, ...]
+    return g.reshape(B, nblk * arena.shape[1], *arena.shape[2:])
+
+
+def quant_paged_write(arena, scales, vals, block_table, lengths):
+    """Quantize ``vals`` [B, S, ...] per trailing-axis row and scatter the
+    int8 payload and its fp32 scales at identical arena indices (same
+    null-block semantics as :func:`paged_write`).  Degraded components
+    (dense-dtype arena, MIN_QUANT_DIM rule) bypass quantization and leave
+    the scale arena untouched."""
+    if arena.dtype != jnp.int8:
+        return paged_write(arena, vals, block_table, lengths), scales
+    q, s = QU.quant_int8(vals)
+    B, S = vals.shape[:2]
+    block = arena.shape[1]
+    pos = lengths[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    blk_slot = jnp.minimum(pos // block, block_table.shape[1] - 1)
+    blk = jnp.take_along_axis(block_table, blk_slot, axis=1)       # [B,S]
+    off = pos % block
+    return arena.at[blk, off].set(q), scales.at[blk, off].set(s)
+
+
+def quant_paged_gather(arena, scales, block_table, dtype):
+    """Gather + dequantize the paged int8 view into ``dtype``.  The same
+    lengths-masking argument as :func:`paged_gather` applies — garbage past
+    a slot's length is finite (scale arenas init to 1.0) and masked out.
+    Degraded (dense-dtype) components gather without dequantization."""
+    if arena.dtype != jnp.int8:
+        return paged_gather(arena, block_table).astype(dtype)
+    B, nblk = block_table.shape
+    g = QU.dequant_int8(arena[block_table], scales[block_table], dtype)
     return g.reshape(B, nblk * arena.shape[1], *arena.shape[2:])
 
 
@@ -257,15 +353,29 @@ def apply_attn(pctx, cfg: ModelConfig, p, x, *, positions, causal: bool = True,
     k = L.apply_rope(k, cos, sin)
 
     new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
-    if isinstance(cache, PagedKVCache):
+    if isinstance(cache, (PagedKVCache, QuantPagedKVCache)):
         # paged serving path: write the new tokens through the block table,
         # then attend over the gathered page view (per-slot lengths mask the
-        # unwritten tail exactly — docs/DESIGN.md §10)
-        kc = paged_write(cache.k, k, cache.block_table, cache.lengths)
-        vc = paged_write(cache.v, v, cache.block_table, cache.lengths)
-        new_cache = PagedKVCache(kc, vc, cache.block_table, cache.lengths + S)
-        k = paged_gather(kc, cache.block_table)
-        v = paged_gather(vc, cache.block_table)
+        # unwritten tail exactly — docs/DESIGN.md §10).  The int8 arena
+        # variant quantizes at write time and dequantizes at gather time
+        # (docs/DESIGN.md §11); attention math downstream is identical.
+        if isinstance(cache, QuantPagedKVCache):
+            kc, ksc = quant_paged_write(cache.k, cache.k_scale, k,
+                                        cache.block_table, cache.lengths)
+            vc, vsc = quant_paged_write(cache.v, cache.v_scale, v,
+                                        cache.block_table, cache.lengths)
+            new_cache = QuantPagedKVCache(kc, ksc, vc, vsc,
+                                          cache.block_table,
+                                          cache.lengths + S)
+            k = quant_paged_gather(kc, ksc, cache.block_table, x.dtype)
+            v = quant_paged_gather(vc, vsc, cache.block_table, x.dtype)
+        else:
+            kc = paged_write(cache.k, k, cache.block_table, cache.lengths)
+            vc = paged_write(cache.v, v, cache.block_table, cache.lengths)
+            new_cache = PagedKVCache(kc, vc, cache.block_table,
+                                     cache.lengths + S)
+            k = paged_gather(kc, cache.block_table)
+            v = paged_gather(vc, cache.block_table)
         if S == 1:
             kv_len = (cache.lengths + S)[:, None]          # [B,1] per-slot
         else:
@@ -363,14 +473,26 @@ def apply_mla(pctx, cfg: ModelConfig, p, x, *, positions,
     k_rope = L.apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
 
     new_cache, kv_len, q_off = None, None, jnp.zeros((), jnp.int32)
-    if isinstance(cache, PagedMLACache):
-        cc = paged_write(cache.c_kv, c_kv, cache.block_table, cache.lengths)
-        kr = paged_write(cache.k_rope, k_rope, cache.block_table,
-                         cache.lengths)
-        new_cache = PagedMLACache(cc, kr, cache.block_table,
-                                  cache.lengths + S)
-        c_kv = paged_gather(cc, cache.block_table).astype(x.dtype)
-        k_rope = paged_gather(kr, cache.block_table).astype(x.dtype)
+    if isinstance(cache, (PagedMLACache, QuantPagedMLACache)):
+        if isinstance(cache, QuantPagedMLACache):
+            cc, csc = quant_paged_write(cache.c_kv, cache.c_scale, c_kv,
+                                        cache.block_table, cache.lengths)
+            kr, rsc = quant_paged_write(cache.k_rope, cache.r_scale, k_rope,
+                                        cache.block_table, cache.lengths)
+            new_cache = QuantPagedMLACache(cc, csc, kr, rsc,
+                                           cache.block_table,
+                                           cache.lengths + S)
+            c_kv = quant_paged_gather(cc, csc, cache.block_table, x.dtype)
+            k_rope = quant_paged_gather(kr, rsc, cache.block_table, x.dtype)
+        else:
+            cc = paged_write(cache.c_kv, c_kv, cache.block_table,
+                             cache.lengths)
+            kr = paged_write(cache.k_rope, k_rope, cache.block_table,
+                             cache.lengths)
+            new_cache = PagedMLACache(cc, kr, cache.block_table,
+                                      cache.lengths + S)
+            c_kv = paged_gather(cc, cache.block_table).astype(x.dtype)
+            k_rope = paged_gather(kr, cache.block_table).astype(x.dtype)
         if S == 1:
             kv_len = (cache.lengths + S)[:, None]          # [B,1] per-slot
         else:

@@ -420,7 +420,7 @@ def head_loss(pctx, cfg: ModelConfig, params, hidden, labels, *, mask=None,
             mesh=pctx.mesh, t_ax=a.t_ax if a else "mx",
             h_ax=a.h_ax if a else "my",
             data_axes=a.data_axes if a else ("data",),
-            overlap=pctx.overlap)
+            overlap=pctx.overlap, comm_dtype=pctx.comm_dtype)
     else:
         logits = pctx.lm_head(hidden, head_w)
         logits = pctx.constraint(logits, pctx.logits_spec())

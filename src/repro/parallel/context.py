@@ -81,6 +81,14 @@ class PCtx:
         return self.pcfg.overlap
 
     @property
+    def comm_dtype(self) -> str:
+        """Ring-collective wire dtype (core/quant.py): "bf16" | "int8".
+        Every ring hop the overlap lattice issues goes through
+        ``quant.ring_hop`` under this dtype; "bf16" is bit-identical to the
+        bare ``lax.ppermute`` the rings always did."""
+        return self.pcfg.comm_dtype
+
+    @property
     def residual(self) -> str:
         """Effective residual-stream layout (sharding.RESIDUAL_LAYOUTS).
 
@@ -164,7 +172,8 @@ class PCtx:
             a = self.ax
             return hec.ffn_block(x, w1, w2, mesh=self.mesh, act_fn=act_fn,
                                  t_ax=a.t_ax, h_ax=a.h_ax, data_axes=a.data_axes,
-                                 w1b=w1b, overlap=self.overlap)
+                                 w1b=w1b, overlap=self.overlap,
+                                 comm_dtype=self.comm_dtype)
         if self.mesh is not None:
             return meg.ffn(self, x, w1, w2, act_fn, w1b)
         h = _einsum(x, w1)
@@ -182,7 +191,8 @@ class PCtx:
         if self.use_hecaton:
             a = self.ax
             return hec.mixer_in(x, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
-                                data_axes=a.data_axes, overlap=self.overlap)
+                                data_axes=a.data_axes, overlap=self.overlap,
+                                comm_dtype=self.comm_dtype)
         if self.mesh is not None:
             return meg.col_parallel(self, x, w, interior=interior)
         return _einsum(x, w)
@@ -208,7 +218,8 @@ class PCtx:
         if self.use_hecaton:
             a = self.ax
             return hec.mixer_out(y, w, mesh=self.mesh, t_ax=a.t_ax, h_ax=a.h_ax,
-                                 data_axes=a.data_axes, overlap=self.overlap)
+                                 data_axes=a.data_axes, overlap=self.overlap,
+                                 comm_dtype=self.comm_dtype)
         if self.mesh is not None:
             return meg.row_parallel(self, y, w)
         return _einsum(y, w)
@@ -232,12 +243,14 @@ class PCtx:
                                 h_ax=a.h_ax, data_axes=a.data_axes,
                                 compute_dtype=compute_dtype,
                                 seq_sharded=seq_ok, batch_sharded=batch_ok,
-                                overlap=self.overlap)
+                                overlap=self.overlap,
+                                comm_dtype=self.comm_dtype)
         seq_ok = self.residual == "seq" and shd.seq_shardable(a, S)
         return hec.embed_2d(ids, table, mesh=self.mesh, t_ax="model",
                             h_ax=None, data_axes=a.data_axes,
                             compute_dtype=compute_dtype, seq_sharded=seq_ok,
-                            batch_sharded=batch_ok, overlap=self.overlap)
+                            batch_sharded=batch_ok, overlap=self.overlap,
+                            comm_dtype=self.comm_dtype)
 
     def small_proj(self, x, w):
         """Tiny projection (mamba dt/B/C, routers) whose output dim is too small
@@ -258,7 +271,8 @@ class PCtx:
             a = self.ax
             return hec.linear_seq_scatter(x, w, mesh=self.mesh, t_ax=a.t_ax,
                                           h_ax=a.h_ax, data_axes=a.data_axes,
-                                          overlap=self.overlap)
+                                          overlap=self.overlap,
+                                          comm_dtype=self.comm_dtype)
         if self.mesh is not None:
             return meg.col_parallel(self, x, w)   # vocab over model axis
         return _einsum(x, w)

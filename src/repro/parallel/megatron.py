@@ -52,6 +52,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import overlap as OV
+from repro.core import quant as Q
 from repro.parallel import sharding as shd
 
 
@@ -137,12 +138,13 @@ def _col_seq(pctx, x, w, ring):
     ax, n = ring
     d = _dax(pctx)
     mesh, ov = pctx.mesh, pctx.overlap
+    cd = pctx.comm_dtype
     x_spec, w_spec, y_spec = P(d, ax, None), P(None, ax), P(d, None, ax)
 
     def f(xl, wl):
         if ov != "none":
             return OV.ag_matmul(xl, wl, ax, dim=1, n=n, overlap=ov,
-                                mesh_axes=mesh.axis_names)
+                                mesh_axes=mesh.axis_names, comm_dtype=cd)
         xg = lax.all_gather(xl, ax, axis=1, tiled=True)
         return _einsum(xg, wl)
 
@@ -160,6 +162,7 @@ def _col_ring(pctx, x, w, ring):
     a = pctx.ax
     mesh = pctx.mesh
     ov = pctx.overlap
+    cd = pctx.comm_dtype
     x_spec, w_spec, y_spec = P(d, None, None), P(None, ax), P(d, None, ax)
 
     @jax.custom_vjp
@@ -180,9 +183,9 @@ def _col_ring(pctx, x, w, ring):
             # tile-aligned).
             part = OV.matmul_rs(dyl.astype(wl.dtype), wl.T, ax,
                                 scatter_dim=2, n=n, overlap=ov,
-                                mesh_axes=mesh.axis_names)
+                                mesh_axes=mesh.axis_names, comm_dtype=cd)
             return OV.ring_all_gather(part, ax, dim=2, n=n,
-                                      bidir=ov == "bidir")
+                                      bidir=ov == "bidir", comm_dtype=cd)
 
         def fw(xl, dyl):
             dw = jnp.einsum("bsh,bso->ho", xl, dyl.astype(xl.dtype),
@@ -215,11 +218,13 @@ def col_parallel_shared(pctx, x, ws):
     ax, n = seq
     d = _dax(pctx)
     mesh, ov = pctx.mesh, pctx.overlap
+    cd = pctx.comm_dtype
     x_spec, w_spec, y_spec = P(d, ax, None), P(None, ax), P(d, None, ax)
 
     def f(xl, *wls):
         if ov != "none":
-            xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=ov == "bidir")
+            xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=ov == "bidir",
+                                    comm_dtype=cd)
         else:
             xg = lax.all_gather(xl, ax, axis=1, tiled=True)
         return tuple(_einsum(xg, wl) for wl in wls)
@@ -265,12 +270,13 @@ def _row_seq(pctx, y, w, ring):
     ax, n = ring
     d = _dax(pctx)
     mesh, ov = pctx.mesh, pctx.overlap
+    cd = pctx.comm_dtype
     y_spec, w_spec, o_spec = P(d, None, ax), P(ax, None), P(d, ax, None)
 
     def f(yl, wl):
         if ov != "none" and OV.rs_ok(yl.shape[1], n):
             return OV.matmul_rs(yl, wl, ax, scatter_dim=1, n=n, overlap=ov,
-                                mesh_axes=mesh.axis_names)
+                                mesh_axes=mesh.axis_names, comm_dtype=cd)
         return lax.psum_scatter(_einsum(yl, wl), ax, scatter_dimension=1,
                                 tiled=True)
 
@@ -285,15 +291,16 @@ def _row_ring(pctx, y, w, ring):
     a = pctx.ax
     mesh = pctx.mesh
     ov = pctx.overlap
+    cd = pctx.comm_dtype
     y_spec, w_spec, o_spec = P(d, None, ax), P(ax, None), P(d, None, None)
 
     @jax.custom_vjp
     def row(yg, wg):
         def f(yl, wl):
             part = OV.matmul_rs(yl, wl, ax, scatter_dim=2, n=n, overlap=ov,
-                                mesh_axes=mesh.axis_names)
+                                mesh_axes=mesh.axis_names, comm_dtype=cd)
             return OV.ring_all_gather(part, ax, dim=2, n=n,
-                                      bidir=ov == "bidir")
+                                      bidir=ov == "bidir", comm_dtype=cd)
         return compat.shard_map(f, mesh, (y_spec, w_spec), o_spec)(yg, wg)
 
     def row_fwd(yg, wg):
@@ -361,6 +368,7 @@ def fused_lm_loss_seq(pctx, x, w, labels, loss_mask):
     ax, n = _seq_ring(pctx, x.shape[1])
     d = _dax(pctx)
     mesh = pctx.mesh
+    cd = pctx.comm_dtype
     if loss_mask is None:
         loss_mask = jnp.ones(labels.shape, jnp.float32)
     data_axes = pctx.ax.data_axes
@@ -382,7 +390,9 @@ def fused_lm_loss_seq(pctx, x, w, labels, loss_mask):
             onehot = ((ll[..., None] - v_off)
                       == jnp.arange(v_loc)[None, None, :])
             gold = gold + jnp.sum(lg * onehot, axis=-1)
-            wk = lax.ppermute(wk, ax, [(j, (j - 1) % n) for j in range(n)])
+            # the circulating head-weight chunk rides the same quantized
+            # wire as the activation rings (trailing dim is V/n >= 16)
+            wk = Q.ring_hop(wk, ax, n, shift=-1, comm_dtype=cd)
             return (new_m, s_run, gold, wk), None
 
         body = jax.checkpoint(body)          # recompute the logits in bwd
@@ -431,24 +441,26 @@ def _ffn_seq(pctx, x, w1, w2, act_fn, w1b, ring):
     ax, n = ring
     d = _dax(pctx)
     mesh, ov = pctx.mesh, pctx.overlap
+    cd = pctx.comm_dtype
 
     def f(xl, w1l, w2l, *rest):
         bidir = ov == "bidir"
         if rest:                                   # gated: share the gathered x
             if ov != "none":
-                xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=bidir)
+                xg = OV.ring_all_gather(xl, ax, dim=1, n=n, bidir=bidir,
+                                        comm_dtype=cd)
             else:
                 xg = lax.all_gather(xl, ax, axis=1, tiled=True)
             h = act_fn(_einsum(xg, w1l)) * _einsum(xg, rest[0])
         elif ov != "none":
             h = act_fn(OV.ag_matmul(xl, w1l, ax, dim=1, n=n, overlap=ov,
-                                    mesh_axes=mesh.axis_names))
+                                    mesh_axes=mesh.axis_names, comm_dtype=cd))
         else:
             xg = lax.all_gather(xl, ax, axis=1, tiled=True)
             h = act_fn(_einsum(xg, w1l))
         if ov != "none" and OV.rs_ok(h.shape[1], n):
             return OV.matmul_rs(h, w2l, ax, scatter_dim=1, n=n, overlap=ov,
-                                mesh_axes=mesh.axis_names)
+                                mesh_axes=mesh.axis_names, comm_dtype=cd)
         return lax.psum_scatter(_einsum(h, w2l), ax, scatter_dimension=1,
                                 tiled=True)
 

@@ -18,7 +18,11 @@ unchanged).  Two layouts exist:
   prompt positions or inactive decode slots land in trash instead of a
   neighbour's lease, and gathered reads past a slot's length are masked
   to exact-zero softmax weight by the per-slot ``lengths``
-  (models/attention.py ``paged_write`` / ``paged_gather``).
+  (models/attention.py ``paged_write`` / ``paged_gather``).  With
+  ``quant_kv=True`` the payload arenas hold per-row symmetric int8 plus a
+  trailing-1 fp32 scale arena (docs/DESIGN.md §11) — written through
+  ``quant_paged_write`` and dequantized at gather time; the dense-dtype
+  arena path is byte-identical to before.
 
 :class:`CachePool` is the host-side manager: it owns the device arenas,
 the free-block list, and the per-slot accounting, and exposes the
@@ -162,12 +166,14 @@ class CachePool:
     absorbed back afterwards — the host copy of table/lengths is always
     authoritative."""
 
-    def __init__(self, cfg: ModelConfig, pool: PoolConfig, dtype=jnp.float32):
+    def __init__(self, cfg: ModelConfig, pool: PoolConfig, dtype=jnp.float32,
+                 quant_kv: bool = False):
         if cfg.is_encdec:
             raise NotImplementedError(
                 "paged pool: enc-dec cross caches are per-prompt dense; "
                 "use the dense serving path for audio archs")
         self.cfg, self.pool, self.dtype = cfg, pool, dtype
+        self.quant_kv = bool(quant_kv)
         fam = cfg.family
         mb = pool.max_blocks_per_slot
         self.arenas: Dict[str, Any] = {}
@@ -180,13 +186,18 @@ class CachePool:
         if fam != "ssm":
             n_app = (cfg.num_layers // max(1, cfg.shared_attn_every)
                      if fam == "hybrid" else cfg.num_layers)
-            mk = ATT.init_paged_mla if cfg.mla else ATT.init_paged_kv
+            if self.quant_kv:
+                # int8 payload + fp32 per-row scale arenas (DESIGN §11);
+                # the dense-dtype path below is untouched
+                mk = (ATT.init_paged_mla_quant if cfg.mla
+                      else ATT.init_paged_kv_quant)
+            else:
+                mk = ATT.init_paged_mla if cfg.mla else ATT.init_paged_kv
             paged = mk(cfg, pool.num_blocks, pool.block, pool.slots, mb, dtype)
             # arenas only — table/lengths leaves are rebuilt per call
             self.arenas["attn"] = jax.tree.map(
                 lambda a: jnp.broadcast_to(a, (n_app, *a.shape)).copy(),
-                (paged.k, paged.v) if not cfg.mla
-                else (paged.c_kv, paged.k_rope))
+                self._arena_leaves(paged))
         # host accounting
         self.table = np.zeros((pool.slots, mb), np.int32)
         self.lengths = np.zeros(pool.slots, np.int32)
@@ -260,6 +271,16 @@ class CachePool:
         self.active[slot] = False
 
     # -- device tree assembly -------------------------------------------
+    def _arena_leaves(self, cache) -> tuple:
+        """The arena leaves of a paged cache NamedTuple, in the positional
+        order its constructor expects (table/lengths excluded)."""
+        if self.quant_kv:
+            return ((cache.c_kv, cache.c_scale, cache.k_rope, cache.r_scale)
+                    if self.cfg.mla
+                    else (cache.k, cache.k_scale, cache.v, cache.v_scale))
+        return ((cache.c_kv, cache.k_rope) if self.cfg.mla
+                else (cache.k, cache.v))
+
     def _paged(self, arenas, table_rows, lengths_rows):
         """Assemble the paged cache NamedTuple with table/lengths broadcast
         over the layer axis (scan xs need a leading layer dim)."""
@@ -268,9 +289,12 @@ class CachePool:
         bt = jnp.broadcast_to(jnp.asarray(table_rows, jnp.int32),
                               (n_app, B, table_rows.shape[1]))
         ln = jnp.broadcast_to(jnp.asarray(lengths_rows, jnp.int32), (n_app, B))
-        if self.cfg.mla:
-            return ATT.PagedMLACache(arenas[0], arenas[1], bt, ln)
-        return ATT.PagedKVCache(arenas[0], arenas[1], bt, ln)
+        if self.quant_kv:
+            klass = (ATT.QuantPagedMLACache if self.cfg.mla
+                     else ATT.QuantPagedKVCache)
+        else:
+            klass = ATT.PagedMLACache if self.cfg.mla else ATT.PagedKVCache
+        return klass(*arenas, bt, ln)
 
     def decode_tree(self):
         """Cache pytree for one decode tick over all ``slots`` rows."""
@@ -298,9 +322,7 @@ class CachePool:
     def absorb_prefill(self, slot: int, new_tree) -> None:
         """Store a prefill's updated arenas; scatter its SSM state row."""
         if "attn" in self.arenas:
-            c = new_tree["attn"]
-            self.arenas["attn"] = ((c.c_kv, c.k_rope) if self.cfg.mla
-                                   else (c.k, c.v))
+            self.arenas["attn"] = self._arena_leaves(new_tree["attn"])
         if "mamba" in self.states:
             self.states["mamba"] = jax.tree.map(
                 lambda full, one: full.at[:, slot].set(one[:, 0]),
@@ -308,9 +330,7 @@ class CachePool:
 
     def absorb_decode(self, new_tree) -> None:
         if "attn" in self.arenas:
-            c = new_tree["attn"]
-            self.arenas["attn"] = ((c.c_kv, c.k_rope) if self.cfg.mla
-                                   else (c.k, c.v))
+            self.arenas["attn"] = self._arena_leaves(new_tree["attn"])
         if "mamba" in self.states:
             self.states["mamba"] = new_tree["mamba"]
 

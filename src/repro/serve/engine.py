@@ -81,10 +81,11 @@ class DecodeEngine:
                  compute_dtype=jnp.float32, eos_id: Optional[int] = None,
                  method: str = "greedy", temperature: float = 1.0,
                  top_p: float = 0.9, seed: int = 0,
-                 prompt_pad: Optional[int] = None):
+                 prompt_pad: Optional[int] = None, quant_kv: bool = False):
         self.cfg, self.pcfg, self.rc = cfg, pcfg, rc
         self.params = params
-        self.pool = CachePool(cfg, pool, dtype=compute_dtype)
+        self.pool = CachePool(cfg, pool, dtype=compute_dtype,
+                              quant_kv=quant_kv)
         self.eos_id = eos_id
         self.method, self.temperature, self.top_p = method, temperature, top_p
         self.base_key = jax.random.PRNGKey(seed)

@@ -288,6 +288,97 @@ def check_embed_overlap(mesh):
     print("embed_2d overlap modes fwd+grad OK")
 
 
+def check_quant_parity(mesh, tag):
+    """Loss-parity gate for ``comm_dtype="int8"`` (docs/DESIGN.md §11).
+
+    Two SGD steps of the full 2-layer LM on a megatron grid, ring/bidir/fused:
+    the int8-comm loss curve must track the bf16-comm curve within QUANT_RTOL,
+    and the step-0 grads within the (documented, looser) relative-L2 bound
+    QUANT_GRAD_REL.  bf16 comm is itself asserted BIT-IDENTICAL to the
+    pre-quantization rings implicitly: ``comm_dtype="bf16"`` lowers to the
+    very same ``lax.ppermute`` calls, and the dense-reference checks above run
+    the default config.  Tolerances are deliberately loose — per-hop error is
+    ≤ scale/2 per element (core/quant.py) and compounds over hops and layers —
+    but tight enough to catch a broken scale or a dropped hop, which shows up
+    as O(1) loss divergence, not O(1e-2)."""
+    from repro.config import ModelConfig, ParallelConfig
+    from repro.models import lm
+    from repro.parallel import specs as SP
+    from repro.parallel.context import PCtx
+
+    QUANT_RTOL = 0.05       # |loss_int8 - loss_bf16| / loss_bf16, each step
+    QUANT_GRAD_REL = 0.25   # ||g_int8 - g_bf16|| / ||g_bf16||, whole tree
+    LR = 0.05
+
+    cfg = ModelConfig(name="quant-test", family="dense", num_layers=2,
+                      d_model=32, num_heads=4, num_kv_heads=2, d_ff=64,
+                      vocab_size=64, mlp_kind="swiglu", qk_norm=True)
+    params0 = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+    n_d, n_m = mesh.shape["data"], mesh.shape["model"]
+
+    def run(ov, comm_dtype):
+        """Two SGD steps; returns ([loss0, loss1], grad0 tree)."""
+        pcfg = ParallelConfig(strategy="megatron", data=n_d, model=n_m,
+                              overlap=ov, residual="seq", zero1=False,
+                              comm_dtype=comm_dtype)
+        pspecs = SP.param_specs(params0, mesh, pcfg)
+        params = jax.device_put(params0, SP.sharding_tree(pspecs, mesh))
+        bsp = SP.batch_specs(mesh, pcfg, microbatched=False, seq_len=16)
+        batch_s = {k: jax.device_put(batch[k], NamedSharding(mesh, bsp[k]))
+                   for k in ("tokens", "labels")}
+        pctx = PCtx(mesh, pcfg, "train")
+
+        def loss(p, b, _pctx=pctx):
+            return lm.train_loss(_pctx, cfg, p,
+                                 {**b, "_dtype": jnp.float32},
+                                 remat="none")[0]
+
+        vg = jax.jit(jax.value_and_grad(loss))
+        losses, grad0 = [], None
+        for step in range(2):
+            l, g = vg(params, batch_s)
+            losses.append(float(l))
+            if step == 0:
+                grad0 = g
+            params = jax.tree_util.tree_map(
+                lambda p, gg: p - LR * gg.astype(p.dtype), params, g)
+        return losses, grad0
+
+    for ov in ("ring", "bidir", "fused"):
+        ref_losses, ref_g = run(ov, "bf16")
+        q_losses, q_g = run(ov, "int8")
+        for step, (lr_, lq) in enumerate(zip(ref_losses, q_losses)):
+            rel = abs(lq - lr_) / max(abs(lr_), 1e-9)
+            assert rel <= QUANT_RTOL, (
+                f"{tag}/{ov} step{step}: int8 loss {lq:.6f} vs bf16 "
+                f"{lr_:.6f} (rel {rel:.4f} > {QUANT_RTOL})")
+        diff = jnp.sqrt(sum(
+            jnp.sum((jnp.asarray(a, jnp.float32)
+                     - jnp.asarray(b, jnp.float32)) ** 2)
+            for a, b in zip(jax.tree_util.tree_leaves(q_g),
+                            jax.tree_util.tree_leaves(ref_g))))
+        norm = jnp.sqrt(sum(jnp.sum(jnp.asarray(b, jnp.float32) ** 2)
+                            for b in jax.tree_util.tree_leaves(ref_g)))
+        rel_g = float(diff / jnp.maximum(norm, 1e-9))
+        assert rel_g <= QUANT_GRAD_REL, (
+            f"{tag}/{ov}: grad rel-L2 {rel_g:.4f} > {QUANT_GRAD_REL}")
+        print(f"{tag}: quant parity {ov} OK "
+              f"(loss rel {abs(q_losses[-1] - ref_losses[-1]) / abs(ref_losses[-1]):.2e}, "
+              f"grad rel {rel_g:.2e})")
+
+
+def quant_parity_main():
+    devs = np.array(jax.devices())
+    check_quant_parity(Mesh(devs.reshape(1, 8), ("data", "model")),
+                       "ring1x8")
+    check_quant_parity(Mesh(devs.reshape(2, 4), ("data", "model")),
+                       "ring2x4")
+    print("ALL QUANT PARITY CHECKS PASSED")
+
+
 def main():
     devs = np.array(jax.devices())
     # asymmetric grid: mx ring of 4, my ring of 2; even shard extents
@@ -325,4 +416,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--quant-parity" in sys.argv:
+        quant_parity_main()
+    else:
+        main()

@@ -490,3 +490,89 @@ def test_fleet_fates_full_verified_coverage_or_nothing(n_writers, data):
             assert not os.path.exists(final)
     finally:
         shutil.rmtree(d, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Int8 wire quantization (core/quant.py): roundtrip bound, zero-safety, and
+# the accumulated per-hop bound of a quantized ring AG-matmul
+# ---------------------------------------------------------------------------
+@settings(**SET)
+@given(st.integers(1, 4), st.sampled_from([16, 24, 64, 129]),
+       st.sampled_from(["float32", "bfloat16"]), st.integers(0, 10_000),
+       st.floats(1e-3, 1e3))
+def test_quant_roundtrip_bounded(rows, h, dtype, seed, amp):
+    """Element-wise |dequant(quant(x)) - x| ≤ scale/2 for arbitrary shapes,
+    dtypes and magnitudes; scales are fp32 keepdims over the trailing axis."""
+    from repro.core import quant as Q
+
+    x = (jax.random.normal(jax.random.PRNGKey(seed), (rows, h), jnp.float32)
+         * amp).astype(dtype)
+    q, s = Q.quant_int8(x)
+    assert q.dtype == jnp.int8
+    assert s.dtype == jnp.float32 and s.shape == (rows, 1)
+    # the ≤ scale/2 bound holds on the fp32 dequant (the value the rings
+    # fold into their fp32 accumulators); casting to a narrower output
+    # dtype afterwards adds only that dtype's own half-ULP rounding
+    rt32 = Q.dequant_int8(q, s, jnp.float32)
+    err = np.abs(np.asarray(rt32) - np.asarray(x, np.float32))
+    # 1e-5 relative slack: an exactly-half quantum (x/scale = k + 0.5)
+    # makes the error land ON the bound, where fp32 slop in scale and the
+    # q*scale product can tip a few ULPs past it
+    bound = np.asarray(s) / 2 * (1 + 1e-5) + 1e-30
+    assert (err <= bound).all(), (err.max(), float(s.max()))
+    rt = Q.dequant_int8(q, s, x.dtype)
+    np.testing.assert_array_equal(np.asarray(rt),
+                                  np.asarray(rt32.astype(x.dtype)))
+    assert np.isfinite(np.asarray(rt, np.float32)).all()
+
+
+@settings(**SET)
+@given(st.integers(1, 4), st.sampled_from([16, 32]), st.integers(0, 10_000))
+def test_quant_zero_rows_exact_no_nan(rows, h, seed):
+    """All-zero rows get scale 1.0: zeros round-trip bit-exactly and no
+    NaN/Inf appears anywhere (the div-by-zero hazard of max|row|=0)."""
+    from repro.core import quant as Q
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows + 1, h),
+                          jnp.float32).at[0].set(0.0)
+    q, s = Q.quant_int8(x)
+    assert float(s[0, 0]) == 1.0
+    rt = np.asarray(Q.dequant_int8(q, s, x.dtype))
+    assert (rt[0] == 0.0).all()                       # bit-exact zeros
+    assert np.isfinite(rt).all() and np.isfinite(np.asarray(s)).all()
+    z = jnp.zeros((2, h), jnp.float32)
+    qz, sz = Q.quant_int8(z)
+    assert (np.asarray(Q.dequant_int8(qz, sz, z.dtype)) == 0.0).all()
+
+
+@settings(**SET)
+@given(st.sampled_from([2, 4, 8]), st.sampled_from([16, 32]),
+       st.sampled_from([8, 24]), st.integers(0, 10_000))
+def test_quant_ring_ag_matmul_accumulated_bound(n, h, o, seed):
+    """Quantized ring AG-matmul error vs the exact product is bounded by the
+    accumulated per-hop bound: shard k of the gathered result crossed k hops,
+    each adding ≤ scale_i/2 per element before the dot — so the error of
+    ``roundtrip^k(x_j) @ w`` is ≤ (Σ_i scale_i/2) · Σ|w| column-wise.
+
+    Simulated hop-wise single-process (one shard per ring rank, k successive
+    quantize/dequantize roundtrips = k quantized hops of core/quant.ring_hop
+    — same arithmetic, no mesh needed), for n ∈ {2, 4, 8}."""
+    from repro.core import quant as Q
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    shards = jax.random.normal(ks[0], (n, 4, h), jnp.float32)
+    w = jax.random.normal(ks[1], (h, o), jnp.float32)
+    for j in range(n):
+        x = shards[j]
+        scale_sum = jnp.zeros((4, 1), jnp.float32)
+        for k in range(n):                    # k hops away from the source
+            got = np.asarray(x @ w)
+            want = np.asarray(shards[j] @ w)
+            # per-row accumulated bound, contracted through |w|
+            bound = (np.asarray(scale_sum) / 2 * (1 + 1e-6)
+                     @ np.abs(np.asarray(w)).max(axis=0, keepdims=True) * h
+                     + 1e-4)
+            assert (np.abs(got - want) <= bound + 1e-5).all(), (j, k)
+            q, s = Q.quant_int8(x)            # one more quantized hop
+            x = Q.dequant_int8(q, s, x.dtype)
+            scale_sum = scale_sum + s
